@@ -1,0 +1,88 @@
+"""Shared benchmark substrate: trained classifiers + calibrated QPART
+servers, built once and cached across benchmark modules."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.classifier import CIFAR_CNN, MNIST_MLP, ClassifierConfig
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile, classifier_layer_specs)
+from repro.data.pipeline import minibatches, synthetic_images, synthetic_mnist
+from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+
+DEVICE = DeviceProfile()
+SERVER = ServerProfile()
+CHANNEL = Channel()
+WEIGHTS = ObjectiveWeights()
+
+
+def train_classifier(cfg: ClassifierConfig, data, steps: int = 400,
+                     lr: float = 0.05, seed: int = 0):
+    x_tr, y_tr, x_te, y_te = data
+    params = init_classifier(jax.random.key(seed), cfg)
+
+    def loss_fn(p, x, y):
+        lg = classifier_forward(p, cfg, x)
+        return -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(len(y)), y])
+
+    @jax.jit
+    def step(p, x, y):
+        _, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    it = minibatches(x_tr, y_tr, 128, seed=seed)
+    for _ in range(steps):
+        bx, by = next(it)
+        params = step(params, bx, by)
+    acc = float(jnp.mean(jnp.argmax(
+        classifier_forward(params, cfg, jnp.asarray(x_te)), -1) == y_te))
+    return params, acc
+
+
+@functools.lru_cache(maxsize=None)
+def mnist_setup():
+    x_tr, y_tr, x_all, y_all = synthetic_mnist(n_train=8192, n_test=4096)
+    # calibration uses HELD-OUT samples of the SAME distribution: on
+    # training data the overfit margins saturate and Delta(a) degenerates
+    data = (x_tr, y_tr, x_all[:2048], y_all[:2048])
+    params, acc = train_classifier(MNIST_MLP, data)
+    srv = QPARTServer()
+    srv.register_model("mnist", MNIST_MLP, params, x_all[2048:3072],
+                       y_all[2048:3072])
+    srv.calibrate("mnist")
+    srv.build_store("mnist", DEVICE, CHANNEL, WEIGHTS)
+    return srv, params, data, acc
+
+
+@functools.lru_cache(maxsize=None)
+def cnn_setup(name: str = "cifar", seed: int = 0):
+    x_tr, y_tr, x_all, y_all = synthetic_images(
+        CIFAR_CNN.input_shape, n_train=4096, n_test=2048, seed=seed,
+        noise=0.65)
+    data = (x_tr, y_tr, x_all[:1024], y_all[:1024])
+    params, acc = train_classifier(CIFAR_CNN, data, steps=300, lr=0.01,
+                                   seed=seed)
+    srv = QPARTServer()
+    srv.register_model(name, CIFAR_CNN, params, x_all[1024:1536],
+                       y_all[1024:1536])
+    srv.calibrate(name)
+    srv.build_store(name, DEVICE, CHANNEL, WEIGHTS)
+    return srv, params, data, acc
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)                       # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") or \
+            isinstance(out, jax.Array) else None
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6                  # us

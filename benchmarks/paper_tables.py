@@ -1,0 +1,157 @@
+"""One benchmark per paper table / figure (deliverable d).
+
+  Fig. 3  payload            — layer-wise parameter size reduction
+  Fig. 5  layerwise_cost     — time / energy / server cost vs partition
+  Fig. 6  size_vs_accuracy   — optimized model size vs accuracy threshold
+  Fig. 7–10 + Table III  baselines — QPART vs AE / pruning / no-opt
+  Table IV multimodel        — payload compression + degradation per model
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import (CHANNEL, DEVICE, SERVER, WEIGHTS, cnn_setup,
+                               mnist_setup)
+from repro.configs.classifier import CIFAR_CNN, MNIST_MLP
+from repro.core.cost_model import classifier_layer_specs, cost_breakdown
+from repro.core.quantizer import round_bits
+from repro.serving.baselines import (AutoencoderBaseline, PruningBaseline,
+                                     no_opt_offload)
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest, simulate_plan
+
+
+# ---------------------------------------------------------------------------
+# Fig. 3: layer-wise parameter size reduction at a = 1%.
+
+def payload():
+    srv, params, data, acc = mnist_setup()
+    m = srv.models["mnist"]
+    specs = classifier_layer_specs(MNIST_MLP)
+    plan = m.store.plans[(0.01, MNIST_MLP.num_layers)]   # fully on-device
+    rows = []
+    bits = np.asarray(round_bits(plan.bits_w))
+    for i, sp in enumerate(specs):
+        before = sp.z_w * 32.0
+        after = sp.z_w * float(bits[i])
+        rows.append({
+            "bench": "fig3_payload", "layer": i + 1,
+            "bits": int(bits[i]),
+            "before_bits": before, "after_bits": after,
+            "reduction_pct": 100.0 * (1 - after / before),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: layer-wise time / energy / server-cost, QPART vs no-opt.
+
+def layerwise_cost():
+    srv, params, data, acc = mnist_setup()
+    m = srv.models["mnist"]
+    specs = classifier_layer_specs(MNIST_MLP)
+    o = np.array([sp.o for sp in specs])
+    rows = []
+    for p in range(0, MNIST_MLP.num_layers + 1):
+        plan = m.store.plans[(0.01, p)]
+        q = cost_breakdown(float(o[:p].sum()), float(o[p:].sum()),
+                           plan.payload_bits, DEVICE, SERVER, CHANNEL)
+        f32_wire = sum(specs[i].z_w for i in range(p)) * 32.0 + \
+            (specs[p - 1].z_x if p else 784.0) * 32.0
+        n = cost_breakdown(float(o[:p].sum()), float(o[p:].sum()),
+                           f32_wire, DEVICE, SERVER, CHANNEL)
+        rows.append({
+            "bench": "fig5_layerwise", "p": p,
+            "qpart_time_s": q.t_total, "noopt_time_s": n.t_total,
+            "qpart_energy_j": q.e_total, "noopt_energy_j": n.e_total,
+            "qpart_server_cost": q.server_cost,
+            "time_saving_pct": 100 * (1 - q.t_total / n.t_total),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: optimized total parameter size vs accuracy threshold.
+
+def size_vs_accuracy():
+    srv, params, data, acc = mnist_setup()
+    m = srv.models["mnist"]
+    specs = classifier_layer_specs(MNIST_MLP)
+    full_bits = sum(sp.z_w for sp in specs) * 32.0
+    rows = []
+    for a in srv.levels:
+        plan = m.store.plans[(a, MNIST_MLP.num_layers)]
+        rows.append({
+            "bench": "fig6_size_vs_acc", "accuracy_budget": a,
+            "payload_bits": plan.payload_bits,
+            "full_f32_bits": full_bits,
+            "compression_ratio_pct": 100.0 * plan.payload_bits / full_bits,
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7–10 + Table III: the four offloading schemes.
+
+def baselines():
+    srv, params, data, acc = mnist_setup()
+    x_tr, y_tr, x_te, y_te = data
+    x_te, y_te = jnp.asarray(x_te), y_te
+    m = srv.models["mnist"]
+    specs = classifier_layer_specs(MNIST_MLP)
+    ae = AutoencoderBaseline(code_ratio=0.25)
+    rows = []
+    for p in range(1, MNIST_MLP.num_layers + 1):
+        q_plan = m.store.plans[(0.01, p)]
+        q = simulate_plan(q_plan, specs, DEVICE, SERVER, CHANNEL, WEIGHTS)
+        q.accuracy = srv.execute_partitioned("mnist", q_plan, x_te, y_te)
+        n = no_opt_offload(params, MNIST_MLP, specs, p, DEVICE, SERVER,
+                           CHANNEL, WEIGHTS, x_te, y_te, acc)
+        a = ae.offload(params, MNIST_MLP, specs, p, jnp.asarray(x_tr[:512]),
+                       DEVICE, SERVER, CHANNEL, WEIGHTS, x_te, y_te, acc)
+        pr = PruningBaseline().calibrated(
+            params, MNIST_MLP, specs, p, jnp.asarray(x_tr[:1024]),
+            y_tr[:1024], budget=float(acc - q.accuracy) + 0.01,
+            base_accuracy=acc)
+        pres = pr.offload(params, MNIST_MLP, specs, p, DEVICE, SERVER,
+                          CHANNEL, WEIGHTS, x_te, y_te, acc)
+        for scheme, r in (("qpart", q), ("no_opt", n), ("autoencoder", a),
+                          ("pruning", pres)):
+            rows.append({
+                "bench": "fig7_10_baselines", "p": p, "scheme": scheme,
+                "objective": r.objective, "time_s": r.costs.t_total,
+                "energy_j": r.costs.e_total,
+                "payload_mbits": r.payload_bits / 1e6,
+                "accuracy": r.accuracy,
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table IV: payload compression + degradation across models/datasets.
+
+def multimodel():
+    rows = []
+    setups = [("mnist-mlp6", "synthetic-MNIST", mnist_setup())]
+    for nm, seed in (("synthetic-SVHN", 1), ("synthetic-CIFAR10", 2)):
+        setups.append(("cifar-cnn", nm, cnn_setup(nm, seed)))
+    for model_name, ds, (srv, params, data, acc) in setups:
+        key = list(srv.models)[0]
+        m = srv.models[key]
+        cfg = m.cfg
+        specs = classifier_layer_specs(cfg)
+        L = cfg.num_layers
+        plan = m.store.plans[(0.005, L)]       # a = 0.5% budget, all layers
+        x_te, y_te = jnp.asarray(data[2]), data[3]
+        acc_opt = srv.execute_partitioned(key, plan, x_te, y_te)
+        full_mb = sum(sp.z_w for sp in specs) * 32.0 / 8e6
+        opt_mb = plan.payload_bits / 8e6
+        rows.append({
+            "bench": "table4_multimodel", "model": model_name, "dataset": ds,
+            "initial_mb": round(full_mb, 3), "optimized_mb": round(opt_mb, 3),
+            "compression_ratio_pct": round(100 * opt_mb / full_mb, 2),
+            "initial_acc": round(acc, 4), "optimized_acc": round(acc_opt, 4),
+            "degradation_pct": round(100 * (acc - acc_opt), 3),
+        })
+    return rows

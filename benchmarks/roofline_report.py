@@ -1,0 +1,28 @@
+"""Roofline report: aggregate the dry-run JSON records (§Roofline) into the
+per-(arch x shape x mesh) three-term table."""
+from __future__ import annotations
+
+import os
+
+from repro.roofline.analysis import load_records
+
+RECORD_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def roofline():
+    rows = []
+    for r in load_records(RECORD_DIR):
+        rows.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "mesh": r["mesh"],
+            "t_compute_ms": round(r["t_compute"] * 1e3, 3),
+            "t_memory_ms": round(r["t_memory"] * 1e3, 3),
+            "t_collective_ms": round(r["t_collective"] * 1e3, 3),
+            "bottleneck": r["bottleneck"],
+            "useful_flop_frac": (round(r["useful_flop_frac"], 4)
+                                 if r["useful_flop_frac"] else None),
+            "hlo_gflops": round(r["hlo_gflops"], 1),
+            "coll_gbytes": round(r["coll_gbytes"], 3),
+        })
+    return rows

@@ -1,0 +1,63 @@
+"""Benchmark harness entrypoint — one benchmark per paper table/figure
+(deliverable d) plus kernel microbench and the roofline table.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig3_payload roofline
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import io
+import sys
+import time
+
+BENCHES = {}
+
+
+def _register():
+    from benchmarks import kernel_bench, paper_tables, roofline_report
+    BENCHES.update({
+        "fig3_payload": paper_tables.payload,
+        "fig5_layerwise": paper_tables.layerwise_cost,
+        "fig6_size_vs_acc": paper_tables.size_vs_accuracy,
+        "fig7_10_baselines": paper_tables.baselines,
+        "table4_multimodel": paper_tables.multimodel,
+        "kernels": kernel_bench.kernels,
+        "roofline": roofline_report.roofline,
+    })
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    ap.add_argument("--csv", default=None, help="also write rows to a file")
+    args = ap.parse_args(argv)
+    _register()
+    names = args.only or list(BENCHES)
+    all_rows = []
+    for name in names:
+        t0 = time.time()
+        print(f"=== {name} ===", flush=True)
+        rows = BENCHES[name]()
+        all_rows += rows
+        keys = list(rows[0].keys()) if rows else []
+        out = io.StringIO()
+        w = csv.DictWriter(out, fieldnames=keys)
+        w.writeheader()
+        w.writerows(rows)
+        print(out.getvalue().rstrip())
+        print(f"--- {name}: {len(rows)} rows in {time.time() - t0:.1f}s\n",
+              flush=True)
+    if args.csv:
+        keys = sorted({k for r in all_rows for k in r})
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            w.writerows(all_rows)
+    print(f"TOTAL {len(all_rows)} rows from {len(names)} benchmarks")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

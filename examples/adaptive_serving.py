@@ -1,0 +1,82 @@
+"""Adaptive serving under changing conditions (the paper's core pitch):
+the SAME model served to heterogeneous devices over fluctuating channels
+picks different partition points and bit-widths per request.
+
+Sweeps (channel capacity x device clock x accuracy budget) and prints the
+plan QPART chooses for each — watch p move toward the device as the
+channel degrades, and bits rise as the budget tightens.
+
+  PYTHONPATH=src python examples/adaptive_serving.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.classifier import MNIST_MLP
+from repro.core.cost_model import Channel, DeviceProfile, ObjectiveWeights
+from repro.core.quantizer import round_bits
+from repro.data.pipeline import minibatches, synthetic_mnist
+from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+
+
+def train():
+    x_tr, y_tr, x_te, y_te = synthetic_mnist(n_train=8192, n_test=4096)
+    params = init_classifier(jax.random.key(0), MNIST_MLP)
+
+    def loss_fn(p, x, y):
+        lg = classifier_forward(p, MNIST_MLP, x)
+        return -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(len(y)), y])
+
+    @jax.jit
+    def step(p, x, y):
+        _, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+
+    it = minibatches(x_tr, y_tr, 128)
+    for _ in range(400):
+        bx, by = next(it)
+        params = step(params, bx, by)
+    return params, (x_te, y_te)
+
+
+def main():
+    params, (x_te, y_te) = train()
+    srv = QPARTServer()
+    srv.register_model("mnist", MNIST_MLP, params,
+                       x_te[2048:3072], y_te[2048:3072])
+    srv.calibrate("mnist")
+    base_dev, base_ch, w = DeviceProfile(), Channel(), ObjectiveWeights()
+    srv.build_store("mnist", base_dev, base_ch, w)
+
+    print(f"{'channel':>10} {'device_clk':>10} {'budget':>7} {'cached':>6} "
+          f"{'p':>2} {'bits':>20} {'uplink':>10} {'objective':>10}")
+    scenarios = []
+    for cap in (200e6, 20e6, 2e6, 0.5e6):             # Mbps: 200 .. 0.5
+        for f_clk in (200e6, 50e6):                   # weak / weaker device
+            for budget in (0.002, 0.02):
+                for cached in (False, True):
+                    scenarios.append((cap, f_clk, budget, cached))
+    seen_plans = set()
+    for cap, f_clk, budget, cached in scenarios:
+        dev = dataclasses.replace(base_dev, f_clock=f_clk)
+        ch = dataclasses.replace(base_ch, capacity_bps=cap)
+        req = InferenceRequest("mnist", budget, dev, ch, w,
+                               segment_cached=cached)
+        res = srv.serve(req)
+        bits = np.asarray(round_bits(res.plan.bits_w)) if res.plan.p else []
+        print(f"{cap/1e6:>8.1f}Mb {f_clk/1e6:>8.0f}MHz {budget:>7.3f} "
+              f"{str(cached):>6} {res.plan.p:>2} {str(list(bits)):>20} "
+              f"{res.payload_bits/1e3:>8.1f}kb {res.objective:>10.4f}")
+        seen_plans.add((res.plan.p, tuple(bits.tolist()) if len(bits) else ()))
+    print(f"\ndistinct plans chosen: {len(seen_plans)} "
+          f"across {len(scenarios)} scenarios — the serving pattern adapts "
+          f"to device, channel and accuracy demand (no model retraining).")
+    assert len(seen_plans) >= 3
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.configs.base import (  # noqa: F401
+    ASSIGNED_ARCHS, INPUT_SHAPES, LONG_CONTEXT_WINDOW, InputShape,
+    ModelConfig, MoEConfig, SSMConfig, for_shape, get_config, list_configs,
+    register,
+)
+from repro.configs.classifier import CIFAR_CNN, MNIST_MLP  # noqa: F401

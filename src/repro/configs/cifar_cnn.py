@@ -1,0 +1,2 @@
+"""Alias module: the paper's CIFAR CNN lives in classifier.py."""
+from repro.configs.classifier import CIFAR_CNN  # noqa: F401

@@ -1,0 +1,2 @@
+"""Alias module: the paper's MNIST 6-FC classifier lives in classifier.py."""
+from repro.configs.classifier import MNIST_MLP  # noqa: F401

@@ -1,0 +1,194 @@
+"""Analytic cost model (paper §III, Eq. 1–8 and 13–16, Table II defaults).
+
+Layer granularity: a ``LayerSpec`` carries the three quantities the QPART
+optimizer needs — parameter payload ``z_w``, cut-activation payload
+``z_x`` and MAC count ``o``. Builders are provided for the paper's
+classifiers (Eq. 1–2 exactly) and for every assigned transformer family
+(per-block MACs; attention uses the causal-useful S^2/2 term).
+
+The same objective can be instantiated with radio constants (paper
+reproduction) or TPU ICI constants (deployment view, DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.configs.classifier import ClassifierConfig, ConvSpec, DenseSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    z_w: float      # weight elements
+    z_x: float      # output-activation elements (per request batch)
+    o: float        # MAC operations (per request batch)
+
+
+# ---------------------------------------------------------------------------
+# Profiles (paper Table II defaults).
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    f_clock: float = 200e6          # Hz
+    gamma: float = 5.0              # cycles / MAC
+    kappa: float = 3e-27            # energy-efficiency (J / cycle / Hz^2)
+    tx_power: float = 1.0           # W
+    memory_bytes: float = 512e6
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerProfile:
+    f_clock: float = 3e9
+    gamma: float = 5.0 / 4.0
+    eta_m: float = 3.75e-27
+    zeta: float = 1e-2              # $ / s of server compute
+
+
+@dataclasses.dataclass(frozen=True)
+class Channel:
+    bandwidth_hz: float = 40e6
+    snr_db: Optional[float] = None
+    capacity_bps: float = 200e6     # direct r (Table II); SNR overrides
+
+    def capacity(self) -> float:
+        if self.snr_db is None:
+            return self.capacity_bps
+        return self.bandwidth_hz * math.log2(1.0 + 10 ** (self.snr_db / 10))
+
+
+@dataclasses.dataclass(frozen=True)
+class ObjectiveWeights:
+    omega: float = 1.0              # time
+    tau: float = 1.0                # energy
+    eta: float = 1e-6               # server cost (scales $ into the objective)
+
+
+# ---------------------------------------------------------------------------
+# Eq. 24–26 reduced coefficients.
+
+def xi_coeff(w: ObjectiveWeights, d: DeviceProfile) -> float:
+    return w.omega * d.gamma / d.f_clock + w.tau * d.gamma * d.kappa * d.f_clock ** 2
+
+
+def delta_coeff(w: ObjectiveWeights, s: ServerProfile) -> float:
+    return (w.omega + w.eta * s.zeta) * s.gamma / s.f_clock
+
+
+def eps_coeff(w: ObjectiveWeights, d: DeviceProfile, ch: Channel) -> float:
+    return (w.omega + d.tx_power * w.tau) / ch.capacity()
+
+
+# ---------------------------------------------------------------------------
+# Raw cost terms (Eq. 5–8, 15–16).
+
+@dataclasses.dataclass
+class CostBreakdown:
+    t_local: float
+    t_server: float
+    t_tran: float
+    e_local: float
+    e_tran: float
+    server_cost: float
+
+    @property
+    def t_total(self):
+        return self.t_local + self.t_server + self.t_tran
+
+    @property
+    def e_total(self):
+        return self.e_local + self.e_tran
+
+    def objective(self, w: ObjectiveWeights) -> float:
+        return (w.omega * self.t_total + w.tau * self.e_total
+                + w.eta * self.server_cost)
+
+
+def cost_breakdown(o1: float, o2: float, payload_bits: float,
+                   d: DeviceProfile, s: ServerProfile, ch: Channel) -> CostBreakdown:
+    r = ch.capacity()
+    t_local = o1 * d.gamma / d.f_clock
+    e_local = d.kappa * d.f_clock ** 2 * o1 * d.gamma
+    t_server = o2 * s.gamma / s.f_clock
+    c = o2 * s.gamma * s.zeta / s.f_clock
+    t_tran = payload_bits / r
+    e_tran = d.tx_power * t_tran
+    return CostBreakdown(t_local, t_server, t_tran, e_local, e_tran, c)
+
+
+# ---------------------------------------------------------------------------
+# Layer specs: classifiers (paper Eq. 1–2).
+
+def classifier_layer_specs(cfg: ClassifierConfig, batch: int = 1) -> List[LayerSpec]:
+    specs = []
+    for i, l in enumerate(cfg.layers):
+        if isinstance(l, DenseSpec):
+            o = l.in_dim * l.out_dim                       # Eq. 1
+            z_w = l.in_dim * l.out_dim + l.out_dim
+            z_x = l.out_dim
+        else:
+            o = l.c_in * l.c_out * l.f1 * l.f2 * l.u * l.v  # Eq. 2
+            z_w = l.f1 * l.f2 * l.c_in * l.c_out + l.c_out
+            u, v = l.u // l.pool, l.v // l.pool
+            z_x = l.c_out * u * v
+        specs.append(LayerSpec(f"layer{i + 1}", z_w, z_x * batch, o * batch))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Layer specs: assigned transformer families.
+
+def transformer_layer_specs(cfg: ModelConfig, seq_len: int,
+                            batch: int = 1, mode: str = "prefill") -> List[LayerSpec]:
+    """Per-block specs. ``mode`` prefill counts the full sequence; decode
+    counts one token against a seq_len context. The embedding table is
+    layer 0 (always on-device: it starts the computation)."""
+    d = cfg.d_model
+    tokens = batch * (seq_len if mode != "decode" else 1)
+    specs = [LayerSpec("embed", cfg.vocab_size * d, tokens * d, 0.0)]
+    hd = cfg.resolved_head_dim()
+    win = cfg.sliding_window
+    for l in range(cfg.num_layers):
+        z_w = float(cfg._block_params(l))
+        o = 0.0
+        if cfg.block_kind(l) == ATTN:
+            proj = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd + cfg.num_heads * hd * d
+            o += tokens * proj
+            if mode == "decode":
+                ctx = min(seq_len, win) if win else seq_len
+                o += tokens * 2 * cfg.num_heads * hd * ctx
+            else:
+                ctx = min(seq_len, win) if win else seq_len
+                avg_ctx = ctx if win else seq_len / 2
+                o += tokens * 2 * cfg.num_heads * hd * avg_ctx
+            z_x_state = 2 * cfg.num_kv_heads * hd * (min(seq_len, win) if win else seq_len)
+        else:
+            s = cfg.ssm
+            di = s.d_inner(d)
+            nh = s.num_heads(d)
+            o += tokens * (d * (2 * di + 2 * s.d_state + nh) + di * d)
+            o += tokens * s.conv_width * (di + 2 * s.d_state)
+            # SSD: state update + readout + intra-chunk quadratic
+            o += tokens * nh * (3 * s.d_state * s.head_dim
+                                + (0 if mode == "decode" else s.chunk * (s.d_state + s.head_dim)))
+            z_x_state = nh * s.d_state * s.head_dim + (s.conv_width - 1) * (di + 2 * s.d_state)
+        if cfg.uses_moe(l):
+            m = cfg.moe
+            mult = 3 if cfg.mlp == "swiglu" else 2
+            o += tokens * (d * m.num_experts + m.top_k * mult * d * m.d_ff)
+        elif cfg.d_ff:
+            mult = 3 if cfg.mlp == "swiglu" else 2
+            o += tokens * mult * d * cfg.d_ff
+        # cut activation: hidden state(s) crossing the partition
+        z_x = tokens * d + (batch * z_x_state if mode == "decode" else 0)
+        specs.append(LayerSpec(f"block{l}", z_w, float(z_x), float(o)))
+    return specs
+
+
+def layer_specs_for(cfg, seq_len: int = 1, batch: int = 1,
+                    mode: str = "prefill") -> List[LayerSpec]:
+    if isinstance(cfg, ClassifierConfig):
+        return classifier_layer_specs(cfg, batch)
+    return transformer_layer_specs(cfg, seq_len, batch, mode)

@@ -1,0 +1,55 @@
+"""Model-segment splitting: materialize the (quantized) device segment and
+the server segment at a partition point.
+
+Two views of the same abstraction (DESIGN.md §3):
+  * edge view  — classifier params split into python lists; the device list
+                 is fake-quantized at the plan's per-layer bit-widths;
+  * pod view   — a mesh-sharding split for transformers where the "device"
+                 maps to a mesh slice (used by the serving engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+from repro.core.quantizer import fake_quant, payload_bits, round_bits
+from repro.core.solver import PartitionPlan
+
+
+@dataclasses.dataclass
+class DeviceSegment:
+    params: list                 # quantized layer params (layers 1..p)
+    bits_w: np.ndarray
+    bits_x: int
+    payload_bits: float          # exact wire size (Eq. 14)
+
+
+def split_classifier(params: List[dict], plan: PartitionPlan,
+                     layer_specs) -> tuple[DeviceSegment, List[dict]]:
+    """Split + quantize a classifier at plan.p. Returns (device, server)."""
+    p = plan.p
+    bits_int = np.asarray(round_bits(plan.bits_w)) if p else np.zeros(0, int)
+    dev_params = []
+    wire = 0.0
+    for i in range(p):
+        b = int(bits_int[i])
+        q = {k: fake_quant(v, b) for k, v in params[i].items()}
+        dev_params.append(q)
+        n = sum(int(np.prod(v.shape)) for v in params[i].values())
+        wire += float(payload_bits(n, b))
+    bits_x = int(round_bits(np.array([plan.bits_x]))[0]) if p else 32
+    # activation payload counted when the device sends the cut activation
+    wire_x = float(payload_bits(int(layer_specs[p - 1].z_x), bits_x)) if p else 0.0
+    seg = DeviceSegment(dev_params, bits_int, bits_x, wire + wire_x)
+    return seg, list(params[p:])
+
+
+def segment_memory_bytes(seg: DeviceSegment) -> float:
+    """Device memory footprint of the quantized segment (packed codes)."""
+    total = 0.0
+    for i, lp in enumerate(seg.params):
+        n = sum(int(np.prod(v.shape)) for v in lp.values())
+        total += n * int(seg.bits_w[i]) / 8.0
+    return total

@@ -1,0 +1,138 @@
+"""Uniform asymmetric quantizer (paper Eq. 9–10).
+
+Given a tensor c and bit-width b the quantization set is the uniform grid
+``Q = [mu : (phi-mu)/(2^b - 1) : phi]`` and ``Q(c) = argmin_{q in Q} |c-q|``
+— i.e. round-to-nearest onto the grid. We expose:
+
+  * ``quantize`` / ``dequantize``  — integer codes + (scale, zero) metadata,
+  * ``fake_quant``                 — quantize-dequantize in one pass (what
+                                      the accuracy/noise calibration uses),
+  * ``payload_bits``               — exact wire size of a quantized tensor.
+
+The optimizer's closed-form bit-widths are continuous; deployment rounds
+them with ``round_bits`` (ceil preserves the accuracy constraint since
+noise is monotonically decreasing in b).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(x):
+    """Tensor range (mu, phi) used by the asymmetric quantizer."""
+    return jnp.min(x), jnp.max(x)
+
+
+def quantize(x, bits: int, mu=None, phi=None):
+    """-> (codes int32, scale, mu). codes in [0, 2^bits - 1]."""
+    if mu is None:
+        mu, phi = qrange(x)
+    levels = (1 << int(bits)) - 1
+    scale = jnp.maximum((phi - mu) / levels, 1e-12)
+    codes = jnp.clip(jnp.round((x - mu) / scale), 0, levels).astype(jnp.int32)
+    return codes, scale, mu
+
+
+def dequantize(codes, scale, mu, dtype=jnp.float32):
+    return (codes.astype(jnp.float32) * scale + mu).astype(dtype)
+
+
+def fake_quant(x, bits: int):
+    """Quantize-dequantize; identity gradient (STE) for completeness."""
+    codes, scale, mu = quantize(x, bits)
+    return dequantize(codes, scale, mu, x.dtype)
+
+
+def quant_noise_energy(x, bits: int) -> jnp.ndarray:
+    """Measured ``||x - Q(x)||_2^2`` — the empirical LHS of Eq. 18/19."""
+    err = x - fake_quant(x, bits)
+    return jnp.sum(jnp.square(err.astype(jnp.float32)))
+
+
+def analytic_noise_scale(x) -> jnp.ndarray:
+    """Analytic s such that ||sigma(b)||^2 ~= s * e^(-ln4 * b).
+
+    Uniform round-off noise has variance step^2/12 with
+    step = range/(2^b - 1) ~= range * 2^-b, so the energy over n elements is
+    ``n * range^2 / 12 * 4^-b`` — i.e. the paper's exponential law with
+    s = n * range^2 / 12. Tests check the empirical fit matches.
+    """
+    mu, phi = qrange(x)
+    n = x.size
+    return n * jnp.square(phi - mu) / 12.0
+
+
+def round_bits(b, lo: int = 2, hi: int = 16):
+    """Continuous solver output -> deployable integer bit-widths."""
+    return jnp.clip(jnp.ceil(b), lo, hi).astype(jnp.int32)
+
+
+def payload_bits(num_elements: int, bits) -> jnp.ndarray:
+    """Wire size in bits: Eq. 14 term ``b * z`` (+ f32 scale/zero header)."""
+    return num_elements * bits + 2 * 32
+
+
+def quantize_stacked(leaf, bits: int = 8):
+    """Real int8/int4-code quantization of a stacked (num_periods, ...)
+    weight: per-period scale/zero (axis-0 granularity). Returns the wire
+    representation ``{"codes", "scale", "mu"}`` the serving path stores in
+    HBM and dequantizes at block entry (transformer._dequant_block).
+
+    bits <= 4 packs two codes per byte on the last dim (the qmatmul4
+    kernel's wire layout: low nibble = even column) — the HBM weight
+    footprint really halves vs int8."""
+    axes = tuple(range(1, leaf.ndim))
+    mu = jnp.min(leaf, axis=axes, keepdims=True)
+    phi = jnp.max(leaf, axis=axes, keepdims=True)
+    levels = (1 << int(bits)) - 1
+    scale = jnp.maximum((phi - mu) / levels, 1e-12)
+    codes = jnp.clip(jnp.round((leaf - mu) / scale), 0, levels)
+    codes = codes.astype(jnp.uint8)
+    meta = {"scale": scale.astype(jnp.float32),
+            "mu": mu.astype(jnp.float32)}
+    if bits <= 4 and leaf.shape[-1] % 2 == 0:
+        # key name encodes the packing (static pytree structure, so the
+        # dequant site can branch without tracing a flag)
+        return {"codes_packed": codes[..., 0::2] | (codes[..., 1::2] << 4),
+                **meta}
+    return {"codes": codes, **meta}
+
+
+QUANTIZABLE = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
+               "w_z", "w_x", "w_out", "w_B", "w_C", "w_dt")
+
+
+def quantize_params_for_serving(params, bits: int = 8):
+    """Quantize every big block weight of a transformer param tree (the
+    QPART device-segment quantization applied to the whole serving stack:
+    weights live int8 in HBM, cutting the decode memory-roofline term)."""
+    def walk(node, under_blocks=False):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if under_blocks and k in QUANTIZABLE and hasattr(v, "ndim") \
+                        and v.ndim >= 3:
+                    out[k] = quantize_stacked(v, bits)
+                else:
+                    out[k] = walk(v, under_blocks)
+            return out
+        if isinstance(node, list):
+            return [walk(v, True) for v in node]
+        return node
+
+    return {k: ([walk(b, True) for b in v] if k == "blocks" else v)
+            for k, v in params.items()}
+
+
+def quantize_tree(params, bits_per_leaf):
+    """Fake-quantize a parameter tree with per-leaf bit-widths (int or map
+    keyed like the tree). Used to materialize the model segment QPART ships
+    to the device."""
+    leaves, treedef = jax.tree.flatten(params)
+    if isinstance(bits_per_leaf, int):
+        bits_list = [bits_per_leaf] * len(leaves)
+    else:
+        bits_list = jax.tree.flatten(bits_per_leaf)[0]
+    out = [fake_quant(x, int(b)) for x, b in zip(leaves, bits_list)]
+    return jax.tree.unflatten(treedef, out)

@@ -1,0 +1,203 @@
+"""Closed-form QPART optimizer (paper §IV, Eq. 23–40).
+
+Problem (per partition point p, Eq. 28 with the segment indices fixed —
+the paper's Eq. 23 sums over l>=p but its own system description, Eq. 14
+and Alg. 1 quantize the FIRST segment l=1..p; we implement the latter and
+note the index typo in DESIGN.md):
+
+    min_b   xi*O1(p) + delta*O2(p) + eps*( b_x * z_x(p) + sum_{l<=p} b_l z_l^w )
+    s.t.    s_x(p) e^{-ln4 b_x}/rho_p + sum_{l<=p} s_l e^{-ln4 b_l}/rho_l <= Delta
+
+KKT stationarity (Eq. 38) gives, for every quantized item i:
+
+    eps * z_i = lambda * ln4 * (s_i/rho_i) * e^{-ln4 b_i}
+    =>  z_i * rho_i / (s_i e^{-ln4 b_i}) = lambda * ln4 / eps = const   (Eq. 39)
+
+i.e. equalized marginal payload-per-noise (water-filling). With the
+constraint active, lambda has the closed form
+
+    sum_i eps*z_i / (lambda ln4) = Delta   =>   lambda = eps * sum_i z_i / (Delta ln4)
+
+and  b_i = log4( s_i ln4 lambda / (eps z_i rho_i) ). Items whose optimal
+bit-width falls outside [b_min, b_max] are clamped and the multiplier is
+re-solved on the active set (standard water-filling iteration; at most
+n_items rounds).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+LN4 = math.log(4.0)
+
+
+@dataclasses.dataclass
+class SegmentItems:
+    """Quantizable items of the device segment at partition p: the p weight
+    tensors followed by the cut activation (the paper's z vector)."""
+    z: np.ndarray        # payload sizes (elements)
+    s: np.ndarray        # noise scales at output
+    rho: np.ndarray      # robustness parameters
+
+
+@dataclasses.dataclass
+class BitSolution:
+    bits: np.ndarray          # continuous optimal bit-widths, item-ordered
+    lam: float                # KKT multiplier
+    psi_total: float          # achieved constraint value
+    payload_bits: float       # sum b_i z_i  (+ activation term)
+
+
+def waterfill_bits(items: SegmentItems, delta: float,
+                   b_min: float = 2.0, b_max: float = 16.0) -> BitSolution:
+    """Equal-marginal closed form with active-set clamping."""
+    z = np.asarray(items.z, dtype=np.float64)
+    s = np.asarray(items.s, dtype=np.float64)
+    rho = np.asarray(items.rho, dtype=np.float64)
+    n = len(z)
+    assert len(s) == n and len(rho) == n and delta > 0
+
+    free = np.ones(n, dtype=bool)
+    bits = np.zeros(n)
+    budget = delta
+    for _ in range(n + 1):
+        if not free.any():
+            break
+        # noise contributed by clamped items
+        clamped_noise = np.sum((s[~free] / rho[~free]) * np.exp(-LN4 * bits[~free]))
+        rem = budget - clamped_noise
+        if rem <= 0:
+            # infeasible at current clamps: push everything to b_max
+            bits[free] = b_max
+            free[:] = False
+            break
+        lam = np.sum(z[free]) / (rem * LN4)          # eps cancels in bits
+        with np.errstate(divide="ignore"):
+            b_free = np.log(s[free] * LN4 * lam / (z[free] * rho[free])) / LN4
+        lo, hi = b_free < b_min, b_free > b_max
+        newly = np.zeros(n, dtype=bool)
+        newly[np.where(free)[0][lo]] = True
+        bits[np.where(free)[0][lo]] = b_min
+        newly2 = np.zeros(n, dtype=bool)
+        newly2[np.where(free)[0][hi]] = True
+        bits[np.where(free)[0][hi]] = b_max
+        if not (lo.any() or hi.any()):
+            bits[free] = b_free
+            free[:] = False
+            break
+        free &= ~(newly | newly2)
+    psi = float(np.sum((s / rho) * np.exp(-LN4 * bits)))
+    payload = float(np.sum(bits * z))
+    return BitSolution(bits=bits, lam=float(lam) if n else 0.0,
+                       psi_total=psi, payload_bits=payload)
+
+
+# ---------------------------------------------------------------------------
+# Joint (b, p) search: the paper's Alg. 1 (offline) + Alg. 2 (online).
+
+@dataclasses.dataclass
+class PartitionPlan:
+    p: int                     # partition point (device runs layers 1..p)
+    bits_w: np.ndarray         # per-layer weight bit-widths (len p)
+    bits_x: float              # activation bit-width at the cut
+    objective: float           # Eq. 17/23 value
+    psi_total: float
+    payload_bits: float
+    breakdown: dict
+    payload_w_bits: float = 0.0   # weight share of the wire (Eq. 14 Z_w)
+    payload_x_bits: float = 0.0   # activation share (Z_x) — all that is
+                                  # left when the device cached the segment
+
+
+def plan_for_partition(p: int, layer_z_w, layer_z_x, layer_s_w, layer_s_x,
+                       layer_rho, o_cum, o_total, xi, delta_cost, eps,
+                       psi_budget, b_min=2.0, b_max=16.0,
+                       input_z: float = 0.0) -> PartitionPlan:
+    """Optimal bits for a fixed partition point p (1-indexed; p=0 means the
+    whole model runs on the server: the device uploads the raw input at
+    full precision and nothing is quantized)."""
+    if p == 0:
+        o1, o2 = 0.0, o_total
+        obj = xi * o1 + delta_cost * o2 + eps * 32.0 * input_z
+        return PartitionPlan(0, np.zeros(0), 32.0, float(obj), 0.0,
+                             32.0 * input_z,
+                             {"compute_local": 0.0,
+                              "compute_server": delta_cost * o2,
+                              "payload": eps * 32.0 * input_z},
+                             payload_w_bits=0.0,
+                             payload_x_bits=32.0 * input_z)
+    items = SegmentItems(
+        z=np.array(list(layer_z_w[:p]) + [layer_z_x[p - 1]], dtype=np.float64),
+        s=np.array(list(layer_s_w[:p]) + [layer_s_x[p - 1]], dtype=np.float64),
+        rho=np.array(list(layer_rho[:p]) + [layer_rho[p - 1]], dtype=np.float64),
+    )
+    sol = waterfill_bits(items, psi_budget, b_min, b_max)
+    o1 = o_cum[p - 1]
+    o2 = o_total - o1
+    payload = sol.payload_bits
+    payload_x = float(sol.bits[-1] * items.z[-1])
+    obj = xi * o1 + delta_cost * o2 + eps * payload
+    return PartitionPlan(
+        p=p, bits_w=sol.bits[:-1], bits_x=float(sol.bits[-1]),
+        objective=float(obj), psi_total=sol.psi_total, payload_bits=payload,
+        breakdown={"compute_local": xi * o1, "compute_server": delta_cost * o2,
+                   "payload": eps * payload},
+        payload_w_bits=payload - payload_x, payload_x_bits=payload_x)
+
+
+def solve_joint(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
+                layer_o, xi, delta_cost, eps, psi_budget,
+                allow_full_offload: bool = True,
+                b_min=2.0, b_max=16.0, input_z: float = 0.0):
+    """Enumerate partition points (Alg. 2 step 2–5), closed-form bits at
+    each, return (best plan, all plans)."""
+    L = len(layer_o)
+    o_cum = np.cumsum(layer_o)
+    o_total = float(o_cum[-1])
+    plans = []
+    start = 0 if allow_full_offload else 1
+    for p in range(start, L + 1):
+        plans.append(plan_for_partition(
+            p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
+            o_cum, o_total, xi, delta_cost, eps, psi_budget, b_min, b_max,
+            input_z=input_z))
+    best = min(plans, key=lambda pl: pl.objective)
+    return best, plans
+
+
+# ---------------------------------------------------------------------------
+# Offline pattern store (Alg. 1) + online lookup (Alg. 2).
+
+@dataclasses.dataclass
+class OfflineStore:
+    """{(accuracy_level, p) -> PartitionPlan} plus the per-level budgets."""
+    levels: Sequence[float]
+    plans: dict                 # (a, p) -> PartitionPlan
+    budgets: dict               # a -> Delta
+
+    def lookup(self, a: float, objective_fn) -> PartitionPlan:
+        """Alg. 2: pick the largest tabulated level <= a, then the partition
+        point minimizing the runtime objective (which may differ from the
+        offline objective because the channel/device changed)."""
+        feas = [lv for lv in self.levels if lv <= a]
+        a_star = max(feas) if feas else min(self.levels)
+        cands = [pl for (lv, _), pl in self.plans.items() if lv == a_star]
+        return min(cands, key=objective_fn)
+
+
+def build_offline_store(levels, budgets, layer_z_w, layer_z_x, layer_s_w,
+                        layer_s_x, layer_rho, layer_o, xi, delta_cost, eps,
+                        b_min=2.0, b_max=16.0, input_z: float = 0.0) -> OfflineStore:
+    o_cum = np.cumsum(layer_o)
+    o_total = float(o_cum[-1])
+    plans = {}
+    for a in levels:
+        for p in range(0, len(layer_o) + 1):
+            plans[(a, p)] = plan_for_partition(
+                p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
+                o_cum, o_total, xi, delta_cost, eps, budgets[a], b_min, b_max,
+                input_z=input_z)
+    return OfflineStore(levels=list(levels), plans=plans, budgets=dict(budgets))

@@ -1,0 +1,62 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On a real TPU backend the kernels compile to Mosaic; on the CPU container
+they run in interpret mode (the kernel body executed in Python), which is
+how the test-suite validates them against ``ref.py``. ``use_pallas=False``
+falls back to the pure-jnp oracle — the mode the dry-run uses so the
+lowered HLO stays portable.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.qmatmul import qmatmul4_pallas, qmatmul_pallas
+from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))
+def quantize_tensor(x, scale, mu, bits: int = 8, use_pallas: bool = True):
+    if use_pallas and x.ndim == 2:
+        return quantize_pallas(x, scale, mu, bits, interpret=not _on_tpu())
+    return ref.quantize_ref(x, scale, mu, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "use_pallas"))
+def dequantize_tensor(codes, scale, mu, out_dtype=jnp.bfloat16,
+                      use_pallas: bool = True):
+    if use_pallas and codes.ndim == 2:
+        return dequantize_pallas(codes, scale, mu, out_dtype,
+                                 interpret=not _on_tpu())
+    return ref.dequantize_ref(codes, scale, mu, out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "use_pallas"))
+def qmatmul(x, w_codes, scale, mu, out_dtype=jnp.bfloat16,
+            use_pallas: bool = True):
+    """Quantized matmul: x @ dequant(w_codes)."""
+    if use_pallas:
+        return qmatmul_pallas(x, w_codes, scale, mu, out_dtype,
+                              interpret=not _on_tpu())
+    return ref.qmatmul_ref(x, w_codes, scale, mu, out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "use_pallas"))
+def qmatmul4(x, packed, scale, mu, out_dtype=jnp.bfloat16,
+             use_pallas: bool = True):
+    """int4-packed quantized matmul."""
+    if use_pallas:
+        return qmatmul4_pallas(x, packed, scale, mu, out_dtype,
+                               interpret=not _on_tpu())
+    return ref.qmatmul4_ref(x, packed, scale, mu, out_dtype)
+
+
+def pack_int4(codes):
+    return ref.pack_int4_ref(codes)

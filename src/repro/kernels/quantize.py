@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: tiled asymmetric quantize / dequantize.
+
+TPU mapping: the tensor streams HBM -> VMEM in (block_m, block_n) tiles
+(lane-dim 128-aligned); each tile is rounded onto the quantization grid on
+the VPU and written back as int8 codes. scale/mu ride in SMEM as (1, 1)
+scalars. This is the execution form of paper Eq. 10 — the server quantizes
+a model segment before "transmitting" it (on TPU: before writing the
+compact weights to HBM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = (256, 512)
+
+
+def _quantize_kernel(x_ref, scale_ref, mu_ref, o_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)
+    scale = scale_ref[0, 0]
+    mu = mu_ref[0, 0]
+    q = jnp.round((x - mu) / scale)
+    q = jnp.clip(q, 0.0, float(levels))
+    o_ref[...] = q.astype(jnp.uint8)
+
+
+def _dequantize_kernel(c_ref, scale_ref, mu_ref, o_ref, *, out_dtype):
+    c = c_ref[...].astype(jnp.float32)
+    o_ref[...] = (c * scale_ref[0, 0] + mu_ref[0, 0]).astype(out_dtype)
+
+
+def quantize_pallas(x, scale, mu, bits: int, block=DEFAULT_BLOCK,
+                    interpret: bool = False):
+    """x (M, N) float -> uint8 codes. bits <= 8."""
+    assert bits <= 8
+    m, n = x.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0, (x.shape, block)
+    grid = (m // bm, n // bn)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_quantize_kernel, levels=(1 << bits) - 1),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
+        interpret=interpret,
+    )(x, scale, mu)
+
+
+def dequantize_pallas(codes, scale, mu, out_dtype=jnp.bfloat16,
+                      block=DEFAULT_BLOCK, interpret: bool = False):
+    m, n = codes.shape
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0
+    grid = (m // bm, n // bn)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_dequantize_kernel, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(codes, scale, mu)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_ref(x, scale, mu, bits: int):
+    """Asymmetric uniform quantization to int codes (int8 storage)."""
+    levels = (1 << bits) - 1
+    codes = jnp.clip(jnp.round((x.astype(jnp.float32) - mu) / scale), 0, levels)
+    # unsigned storage: 8-bit codes span 0..255 and WRAP in int8
+    return codes.astype(jnp.uint8 if bits <= 8 else jnp.int32)
+
+
+def dequantize_ref(codes, scale, mu, dtype=jnp.bfloat16):
+    return (codes.astype(jnp.float32) * scale + mu).astype(dtype)
+
+
+def qmatmul_ref(x, w_codes, scale, mu, out_dtype=jnp.float32):
+    """x (M,K) x dequant(w_codes (K,N)) -> (M,N)."""
+    w = w_codes.astype(jnp.float32) * scale + mu
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def pack_int4_ref(codes):
+    """(K, N) int codes in [0,15] -> (K, N//2) packed bytes (low nibble =
+    even column)."""
+    lo = codes[:, 0::2].astype(jnp.uint8)
+    hi = codes[:, 1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_int4_ref(packed):
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    k, half = packed.shape
+    out = jnp.zeros((k, half * 2), jnp.int32)
+    out = out.at[:, 0::2].set(lo)
+    out = out.at[:, 1::2].set(hi)
+    return out
+
+
+def qmatmul4_ref(x, packed, scale, mu, out_dtype=jnp.float32):
+    codes = unpack_int4_ref(packed)
+    w = codes.astype(jnp.float32) * scale + mu
+    return jnp.dot(x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)

@@ -1,0 +1,175 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh)
+combination lowers AND compiles under the production sharding, and emit
+the roofline terms (deliverables e + g).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod] [--fsdp]
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the
+device count on first init. Smoke tests / benches never import this
+module, so they see the real single CPU device.
+
+(No ``from __future__ import annotations`` here: the XLA_FLAGS assignment
+must stay the first statement of the module.)
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ASSIGNED_ARCHS, INPUT_SHAPES, ModelConfig,
+                                for_shape, get_config)
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import make_production_mesh, mesh_num_chips
+from repro.launch.steps import StepSpec, build_step
+from repro.roofline.analysis import analyze, model_flops_for, save_record
+
+RECORD_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+
+
+def step_in_shardings(spec: StepSpec, mesh, shape, *, fsdp: bool = False):
+    """in_shardings pytree matching spec.args."""
+    cfg = spec.cfg
+    p_specs = shard_lib.param_pspecs(cfg, spec.args[0], fsdp=fsdp, mesh=mesh)
+    daxes = shard_lib.data_axes(mesh)
+    import numpy as np
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    gb = shape.global_batch
+    b_ax = daxes if gb % dsize == 0 and gb >= dsize else None
+    b_ax = b_ax if b_ax is None or len(daxes) > 1 else daxes[0]
+
+    if spec.kind == "train":
+        o_specs = shard_lib.opt_pspecs(p_specs)
+        b_specs = shard_lib.batch_pspecs(
+            mesh, gb, has_embeds="embeds" in spec.args[2],
+            has_positions="positions" in spec.args[2])
+        b_specs = {k: b_specs[k] for k in spec.args[2]}
+        return (p_specs, o_specs, b_specs)
+    if spec.kind == "prefill":
+        b_specs = shard_lib.batch_pspecs(
+            mesh, gb, has_embeds="embeds" in spec.args[1],
+            has_positions="positions" in spec.args[1])
+        b_specs = {k: b_specs[k] for k in spec.args[1]}
+        return (p_specs, b_specs)
+    # decode: (params, token, caches, pos)
+    c_specs = shard_lib.cache_pspecs(cfg, spec.args[2], mesh, gb)
+    return (p_specs, P(b_ax, None), c_specs, P())
+
+
+def lower_and_compile(arch: str, shape_name: str, *, multi_pod: bool = False,
+                      fsdp: bool = False, accum_steps: int = 1,
+                      serve_dtype=None, serve_quant: int = 0,
+                      verbose: bool = True):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if skip_reason(cfg, shape):
+        raise SkipCombo(skip_reason(cfg, shape))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    import jax.numpy as jnp
+    sd = {None: None, "bf16": jnp.bfloat16, "f32": jnp.float32}[serve_dtype]
+    spec = build_step(cfg, shape, accum_steps=accum_steps, serve_dtype=sd,
+                      serve_quant=serve_quant)
+    in_specs = step_in_shardings(spec, mesh, shape, fsdp=fsdp)
+    in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), in_specs,
+                         is_leaf=lambda x: isinstance(x, P))
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(spec.fn, in_shardings=in_sh).lower(*spec.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    roof = analyze(compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+                   chips=mesh_num_chips(mesh),
+                   model_flops=model_flops_for(for_shape(cfg, shape), shape))
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[{arch} x {shape_name} x {mesh_name}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory/device: args {ma.argument_size_in_bytes/2**30:.2f} GiB"
+              f" temp {ma.temp_size_in_bytes/2**30:.2f} GiB"
+              f" out {ma.output_size_in_bytes/2**30:.2f} GiB")
+        print(f"  HLO: {roof.hlo_gflops:.1f} GFLOP {roof.hlo_gbytes:.1f} GB"
+              f" coll {roof.coll_gbytes:.3f} GB -> bottleneck {roof.bottleneck}")
+        print(f"  terms: compute {roof.t_compute*1e3:.3f} ms"
+              f" memory {roof.t_memory*1e3:.3f} ms"
+              f" collective {roof.t_collective*1e3:.3f} ms"
+              f" useful-flop-frac {roof.useful_flop_frac}")
+    return compiled, roof
+
+
+class SkipCombo(Exception):
+    pass
+
+
+def skip_reason(cfg: ModelConfig, shape) -> str | None:
+    """No combination is skipped: dense archs run long_500k through the
+    sliding-window variant (DESIGN.md §4). Kept as an explicit hook so any
+    future inapplicable pair is documented, not silently dropped."""
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="ZeRO-style extra sharding over data (perf variant)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatch steps (perf)")
+    ap.add_argument("--serve-dtype", choices=["bf16", "f32"], default=None,
+                    help="weight dtype for prefill/decode steps (perf)")
+    ap.add_argument("--serve-quant", type=int, default=0,
+                    help="int-quantize serving weights to N bits (perf)")
+    ap.add_argument("--record-dir", default=RECORD_DIR)
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.record_dir, exist_ok=True)
+    combos = []
+    if args.all:
+        combos = [(a, s) for a in ASSIGNED_ARCHS for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape_name in combos:
+        try:
+            compiled, roof = lower_and_compile(
+                arch, shape_name, multi_pod=args.multipod, fsdp=args.fsdp,
+                accum_steps=args.accum, serve_dtype=args.serve_dtype,
+                serve_quant=args.serve_quant)
+            tag = "multipod" if args.multipod else "pod"
+            tag += "_fsdp" if args.fsdp else ""
+            tag += f"_accum{args.accum}" if args.accum > 1 else ""
+            tag += f"_{args.serve_dtype}" if args.serve_dtype else ""
+            tag += f"_w{args.serve_quant}" if args.serve_quant else ""
+            save_record(roof, os.path.join(
+                args.record_dir, f"{arch}_{shape_name}_{tag}.json"))
+        except SkipCombo as e:
+            print(f"[{arch} x {shape_name}] SKIP: {e}")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, shape_name, repr(e)))
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        return 1
+    print(f"\nall {len(combos)} combos lowered + compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

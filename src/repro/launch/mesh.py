@@ -1,0 +1,43 @@
+"""Production mesh definitions (DESIGN.md §5).
+
+Single pod: (data=16, model=16) — 256 chips of TPU v5e.
+Multi-pod:  (pod=2, data=16, model=16) — 512 chips; the ``pod`` axis is
+pure data parallelism whose gradient all-reduce crosses the inter-pod
+links (DCN/ICI depending on deployment; the roofline uses the ICI figure
+as the optimistic bound and reports it separately).
+
+Functions, not module constants: importing this module must never touch
+jax device state (the dry-run sets XLA_FLAGS *before* jax initializes).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (roofline denominators).
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (one direction)
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+POD_AXIS = "pod"
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = (POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod else (DATA_AXIS, MODEL_AXIS)
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a 1x1 (data, model) mesh slice —
+    lets the smoke tests exercise the same sharded step functions."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), (DATA_AXIS, MODEL_AXIS))
+
+
+def mesh_num_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

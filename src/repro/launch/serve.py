@@ -1,0 +1,88 @@
+"""Serving launcher: batched prefill + decode on the local mesh, driving
+the same serve_step the decode dry-runs lower. Doubles as the end-to-end
+"serve a small model with batched requests" example driver.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \\
+      --batch 4 --prompt-len 64 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ASSIGNED_ARCHS, get_config
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+
+
+def generate(params, cfg, prompt, max_len: int, gen: int, *,
+             temperature: float = 0.0, key=None):
+    """Greedy / sampled generation: prefill then decode_step x gen."""
+    b, s = prompt.shape
+    logits, caches, _ = T.prefill(params, cfg, prompt, max_len=max_len)
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    out = [tok]
+
+    jstep = jax.jit(lambda p, t, c, pos: T.decode_step(p, cfg, t, c, pos))
+    for i in range(gen - 1):
+        logits, caches = jstep(params, tok, caches, jnp.array(s + i, jnp.int32))
+        if temperature > 0.0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits[:, 0] / temperature)[:, None].astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits[:, 0:1], -1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS, default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--quant", type=int, default=0,
+                    help="serve with int-N weights (8 or 4, QPART wire "
+                         "format; 0 = full precision)")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    key = jax.random.key(0)
+    params = T.init_params(key, cfg)
+    if args.quant:
+        from repro.core.quantizer import quantize_params_for_serving
+        params = quantize_params_for_serving(params, args.quant)
+        print(f"serving with int{args.quant} block weights")
+    p_specs = shard_lib.param_pspecs(cfg, params, mesh=mesh)
+    with mesh:
+        params = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), p_specs,
+            is_leaf=lambda x: isinstance(x, P)))
+        prompt = jax.random.randint(key, (args.batch, args.prompt_len),
+                                    0, cfg.vocab_size, jnp.int32)
+        t0 = time.time()
+        toks = generate(params, cfg, prompt,
+                        max_len=args.prompt_len + args.gen, gen=args.gen,
+                        temperature=args.temperature, key=key)
+        dt = time.time() - t0
+    toks = jax.device_get(toks)
+    print(f"generated {toks.shape} in {dt:.1f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s)")
+    print("first row:", toks[0][:16], "...")
+    assert toks.shape == (args.batch, args.gen)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

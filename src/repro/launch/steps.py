@@ -1,0 +1,136 @@
+"""Step functions + input specs for every (architecture x input-shape)
+combination — what the dry-run lowers and the launchers execute.
+
+Shape kinds map to steps (DESIGN.md §4, decode semantics):
+  train_4k    -> train_step   (fwd + bwd + AdamW update)
+  prefill_32k -> prefill_step (full-sequence forward + cache build)
+  decode_*    -> serve_step   (ONE token against a seq_len cache)
+
+``input_specs`` returns ShapeDtypeStruct stand-ins — weak-type-correct and
+shardable, no device allocation — for every model input of the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig, for_shape
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_loop import make_train_step as _make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Step builders (cfg baked in via closure; all-jit-able).
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig | None = None,
+                    remat: bool = True, accum_steps: int = 1) -> Callable:
+    return _make_train_step(cfg, opt_cfg or AdamWConfig(), remat=remat,
+                            accum_steps=accum_steps)
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        logits, caches, aux = T.prefill(
+            params, cfg, batch.get("tokens"), embeds=batch.get("embeds"),
+            positions=batch.get("positions"), max_len=max_len)
+        return logits, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, token, caches, pos):
+        return T.decode_step(params, cfg, token, caches, pos)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins.
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_specs(cfg: ModelConfig, dtype=None):
+    """dtype: cast float params (serving runs bf16/int8-quantized weights;
+    training keeps f32 masters)."""
+    sds = jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg))
+    if dtype is not None:
+        sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+                else s.dtype), sds)
+    return sds
+
+
+def opt_specs(params_sds):
+    return jax.eval_shape(init_opt_state, params_sds)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, max_len, dtype))
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Training / prefill batch: tokens for text archs, frontend-stub
+    embeddings (+ M-RoPE position triples) for audio / VLM backbones."""
+    b, s = shape.global_batch, shape.seq_len
+    specs: dict = {}
+    if cfg.frontend != "none":
+        specs["embeds"] = _sds((b, s, cfg.d_model), jnp.bfloat16)
+    else:
+        specs["tokens"] = _sds((b, s), jnp.int32)
+    if cfg.rope == "mrope":
+        specs["positions"] = _sds((3, b, s), jnp.int32)
+    if shape.kind == "train":
+        specs["labels"] = _sds((b, s), jnp.int32)
+    return specs
+
+
+@dataclasses.dataclass
+class StepSpec:
+    """Everything the dry-run needs for one (arch x shape): the step
+    callable, example-arg SDS tree, and the donate/output structure."""
+    kind: str
+    fn: Callable
+    args: tuple
+    cfg: ModelConfig
+
+
+def build_step(cfg: ModelConfig, shape: InputShape,
+               opt_cfg: AdamWConfig | None = None,
+               accum_steps: int = 1, serve_dtype=None,
+               serve_quant: int = 0) -> StepSpec:
+    cfg = for_shape(cfg, shape)
+
+    def serving_params():
+        p = param_specs(cfg, dtype=serve_dtype)
+        if serve_quant:
+            from repro.core.quantizer import quantize_params_for_serving
+            p = jax.eval_shape(
+                lambda pp: quantize_params_for_serving(pp, serve_quant), p)
+        return p
+    if shape.kind == "train":
+        fn = make_train_step(cfg, opt_cfg, accum_steps=accum_steps)
+        p = param_specs(cfg)
+        o = opt_specs(p)
+        batch = batch_specs(cfg, shape)
+        return StepSpec("train", fn, (p, o, batch), cfg)
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, max_len=shape.seq_len)
+        p = serving_params()
+        batch = batch_specs(cfg, shape)
+        return StepSpec("prefill", fn, (p, batch), cfg)
+    # decode: ONE token against a seq_len cache
+    fn = make_serve_step(cfg)
+    p = serving_params()
+    caches = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    token = _sds((shape.global_batch, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return StepSpec("decode", fn, (p, token, caches, pos), cfg)

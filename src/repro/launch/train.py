@@ -1,0 +1,96 @@
+"""Training launcher: run a (reduced or full) architecture on the local
+mesh with the same sharded step functions the dry-run lowers.
+
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m \\
+      --reduced --steps 50 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ASSIGNED_ARCHS, get_config
+from repro.data.pipeline import TokenStream, TokenStreamConfig
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer as T
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.optimizer import AdamWConfig, init_opt_state
+from repro.train.train_loop import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ASSIGNED_ARCHS, default="smollm-135m")
+    ap.add_argument("--reduced", action="store_true",
+                    help="2-layer smoke variant (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    opt_cfg = AdamWConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 10, 1))
+    step_fn = make_train_step(cfg, opt_cfg, remat=args.remat)
+
+    key = jax.random.key(0)
+    params = T.init_params(key, cfg)
+    opt_state = init_opt_state(params)
+    p_specs = shard_lib.param_pspecs(cfg, params, mesh=mesh)
+    o_specs = shard_lib.opt_pspecs(p_specs)
+    b_specs = shard_lib.batch_pspecs(mesh, args.batch, has_embeds=False,
+                                     has_positions=False)
+    to_sh = lambda specs: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+    with mesh:
+        params = jax.device_put(params, to_sh(p_specs))
+        opt_state = jax.device_put(opt_state, to_sh(o_specs))
+        jstep = jax.jit(step_fn, in_shardings=(to_sh(p_specs), to_sh(o_specs),
+                                               to_sh(b_specs)),
+                        out_shardings=(to_sh(p_specs), to_sh(o_specs), None),
+                        donate_argnums=(0, 1))
+        stream = TokenStream(TokenStreamConfig(
+            vocab_size=cfg.vocab_size, seq_len=args.seq + 1,
+            batch_size=args.batch))
+        t0 = time.time()
+        losses = []
+        for step, batch in enumerate(stream.batches()):
+            if step >= args.steps:
+                break
+            params, opt_state, metrics = jstep(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                dt = time.time() - t0
+                print(f"step {step:5d} loss {losses[-1]:.4f} "
+                      f"xent {float(metrics['xent']):.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} "
+                      f"({dt:.1f}s)")
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, opt_state, step=args.steps,
+                        metadata={"arch": args.arch})
+        print("checkpoint saved:", args.checkpoint)
+    return 0 if last < first else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

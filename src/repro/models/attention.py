@@ -1,0 +1,290 @@
+"""GQA attention with flash-style chunked computation, sliding windows,
+qk-norm, RoPE variants and a ring-buffer KV cache for decode.
+
+Memory discipline: prefill/train attention never materializes the (S, S)
+score matrix — an outer ``lax.scan`` over query blocks and an inner scan
+(full attention) or a dynamic-slice window (sliding-window attention) keep
+the live score tile at (B, H, BQ, BK). This is the pure-JAX flash-attention
+analogue the Pallas kernel in ``repro/kernels`` replaces on real TPUs.
+
+TP layout (DESIGN.md §5): query-side weights are stored FLAT over a
+head dim padded to the model-axis size — ``wq (D, H_pad, hd)``,
+``wo (H_pad, hd, D)`` with ``H_pad = KV_pad * G_pad % tp_pad == 0``
+(``ModelConfig.padded_heads``). The flat dim shards evenly under jit's
+divisibility rule, and GSPMD propagates the sharding through the grouped
+``(H_pad) -> (KV_pad, G_pad)`` reshape as a tiled sub-grid (verified in
+the dry-run HLO: zero collectives, 1/mesh flops). Padded heads are
+masked to exact zero before the output projection, so the computed
+function IS the unpadded architecture — under training too (the mask is
+applied every step, not just at init).
+
+Why not a fused (D, H*hd) projection: when H % mesh != 0 GSPMD loses the
+sharding at the (H*hd)->(H, hd) reshape and silently replicates the S^2
+score computation on every model-axis device — a 16x compute blowup we
+measured in the smollm dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rope as rope_lib
+from repro.models.common import dense_init, headnorm
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+
+
+# ---------------------------------------------------------------------------
+# Params
+
+def attn_init(key, cfg):
+    d, hd = cfg.d_model, cfg.resolved_head_dim()
+    kvp, gp = cfg.padded_heads()
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, kvp * gp, hd)),
+        "wk": dense_init(ks[1], (d, kvp, hd)),
+        "wv": dense_init(ks[2], (d, kvp, hd)),
+        "wo": dense_init(ks[3], (kvp * gp, hd, d), in_axis=1),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((kvp * gp, hd), jnp.float32)
+        p["bk"] = jnp.zeros((kvp, hd), jnp.float32)
+        p["bv"] = jnp.zeros((kvp, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _head_mask(cfg, dtype):
+    """(KV_pad, G_pad, 1) 1.0 on real heads, 0.0 on padding (or None)."""
+    kv = cfg.num_kv_heads
+    g = max(cfg.num_heads // max(kv, 1), 1)
+    kvp, gp = cfg.padded_heads()
+    if (kvp, gp) == (kv, g):
+        return None
+    mask = jnp.zeros((kvp, gp, 1), dtype).at[:kv, :g, :].set(1.0)
+    return mask
+
+
+def _project_qkv(params, cfg, x):
+    """x (B,S,D) -> q (B,S,KVp,Gp,hd), k/v (B,S,KVp,hd)."""
+    dt = x.dtype
+    kvp, gp = cfg.padded_heads()
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dkh->bskh", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dkh->bskh", x, params["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if cfg.qk_norm:
+        q = headnorm(params["q_norm"], q)
+        k = headnorm(params["k_norm"], k)
+    q = q.reshape(b, s, kvp, gp, q.shape[-1])
+    return q, k, v
+
+
+def _out_proj(params, cfg, out, dtype):
+    """out (B,S,KVp,Gp,hd) -> (B,S,D) (row-parallel psum). Padded heads
+    are zero-masked first so they never contribute, even after training
+    has touched the padded wo rows."""
+    mask = _head_mask(cfg, out.dtype)
+    if mask is not None:
+        out = out * mask
+    b, s, kvp, gp, hd = out.shape
+    out = out.reshape(b, s, kvp * gp, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Flash-style blocked causal attention (full context).
+
+def _blocked_causal_attention(q, k, v, block_q, block_k,
+                              skip_masked_blocks: bool = None):
+    """q (B,S,KV,G,hd), k/v (B,S,KV,hd) -> (B,S,KV,G,hd). Causal.
+
+    ``skip_masked_blocks`` (§Perf hillclimb #1): the scan-over-scan form
+    computes every (q_block, k_block) pair — including the strictly-upper
+    triangle that the causal mask zeroes entirely, i.e. ~2x the useful
+    score work. Here the outer loop is unrolled (nq is small and static)
+    and each q block scans only its <= i causal k blocks, halving both the
+    score FLOPs and the materialized score bytes. Exact same math: the
+    skipped blocks contributed exp(-inf) = 0 to every softmax sum.
+    """
+    if skip_masked_blocks is None:       # env override for A/B roofline runs
+        import os
+        skip_masked_blocks = os.environ.get("REPRO_CAUSAL_SKIP", "1") != "0"
+    b, s, kvh, g, hd = q.shape
+    scale = hd ** -0.5
+    nq, nk = s // block_q, s // block_k
+    # (nq, B, BQ, KV, G, hd)
+    qb = q.reshape(b, nq, block_q, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    kb = k.reshape(b, nk, block_k, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, block_k, kvh, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = jnp.arange(s).reshape(nq, block_q)
+    k_pos = jnp.arange(s).reshape(nk, block_k)
+
+    def make_q_step(n_kv):
+        def q_step(_, qi):
+            qblk, qp = qi                       # (B,BQ,KV,G,hd), (BQ,)
+
+            def kv_step(carry, ki):
+                acc, m, l = carry
+                kblk, vblk, kp = ki
+                sc = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+                mask = qp[:, None] >= kp[None, :]
+                sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+                m_new = jnp.maximum(m, sc.max(axis=-1))
+                p = jnp.exp(sc - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l = l * corr + p.sum(axis=-1)
+                pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vblk.dtype),
+                                vblk, preferred_element_type=jnp.float32)
+                acc = acc * corr[..., None] + pv
+                return (acc, m_new, l), None
+
+            acc0 = jnp.zeros((b, kvh, g, block_q, hd), jnp.float32)
+            m0 = jnp.full((b, kvh, g, block_q), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((b, kvh, g, block_q), jnp.float32)
+            (acc, _, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0),
+                (kb[:n_kv], vb[:n_kv], k_pos[:n_kv]))
+            out = acc / jnp.maximum(l, 1e-30)[..., None]
+            return None, out.transpose(0, 3, 1, 2, 4)   # (B,BQ,KV,G,hd)
+
+        return q_step
+
+    if skip_masked_blocks:
+        outs = []
+        for i in range(nq):
+            # k blocks whose start position <= last q position of block i
+            n_kv = ((i + 1) * block_q - 1) // block_k + 1
+            _, out_i = make_q_step(n_kv)(None, (qb[i], q_pos[i]))
+            outs.append(out_i)
+        out = jnp.stack(outs)
+    else:
+        _, out = jax.lax.scan(make_q_step(nk), None, (qb, q_pos))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kvh, g, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window blocked attention: per query block, only a dynamic slice of
+# K/V of static size (window + block_q) is touched -> O(S * window) compute.
+
+def _windowed_attention(q, k, v, window, block_q):
+    b, s, kvh, g, hd = q.shape
+    scale = hd ** -0.5
+    nq = s // block_q
+    span = window + block_q                       # static slice size
+    qb = q.reshape(b, nq, block_q, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    # pad K/V on the left so every slice is in-bounds
+    pad = [(0, 0), (span - block_q, 0), (0, 0), (0, 0)]
+    kp = jnp.pad(k, pad)
+    vp = jnp.pad(v, pad)
+
+    def q_step(_, qi):
+        qblk, idx = qi                            # block index
+        start = idx * block_q                     # slice start in padded buf
+        kblk = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+        vblk = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+        qpos = idx * block_q + jnp.arange(block_q)
+        kpos = idx * block_q - (span - block_q) + jnp.arange(span)
+        sc = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                        preferred_element_type=jnp.float32) * scale
+        mask = (qpos[:, None] >= kpos[None, :]) & \
+               (qpos[:, None] - kpos[None, :] < window) & (kpos[None, :] >= 0)
+        sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vblk.dtype), vblk,
+                         preferred_element_type=jnp.float32)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, s, kvh, g, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points.
+
+def _attention_impl() -> str:
+    """'blocked' (pure JAX, default) | 'flash' (Pallas kernel; on CPU it
+    runs in interpret mode — correctness harness, not a perf path)."""
+    import os
+    impl = os.environ.get("REPRO_ATTN_IMPL", "")
+    if impl:
+        return impl
+    return "flash" if jax.default_backend() == "tpu" else "blocked"
+
+
+def attention_forward(params, cfg, x, positions, block_q=DEFAULT_BLOCK_Q,
+                      block_k=DEFAULT_BLOCK_K):
+    """Train/prefill attention. x (B,S,D) -> (B,S,D)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x)
+    q = rope_lib.apply_rope(cfg.rope, q, positions, cfg.rope_theta)
+    k = rope_lib.apply_rope(cfg.rope, k, positions, cfg.rope_theta)
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    if cfg.sliding_window is not None and s > cfg.sliding_window:
+        out = _windowed_attention(q, k, v, cfg.sliding_window, bq)
+    elif _attention_impl() == "flash":
+        from repro.kernels.flash_attention import flash_attention
+        out = flash_attention(q, k, v, block_q=bq, block_k=bk,
+                              interpret=jax.default_backend() != "tpu")
+    else:
+        out = _blocked_causal_attention(q, k, v, bq, bk)
+    return _out_proj(params, cfg, out, x.dtype)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Ring-buffer KV cache for one layer. For sliding-window configs the
+    buffer holds only ``window`` entries. Holds KV_pad heads (padding is
+    dead weight only when KV needed padding — documented in the roofline)."""
+    hd = cfg.resolved_head_dim()
+    kvp, _ = cfg.padded_heads()
+    buf = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "k": jnp.zeros((batch, buf, kvp, hd), dtype),
+        "v": jnp.zeros((batch, buf, kvp, hd), dtype),
+    }
+
+
+def attention_decode(params, cfg, x, cache, pos):
+    """One-token decode. x (B,1,D); pos scalar int32 (same for the batch).
+
+    Returns (out (B,1,D), updated cache). K/V are stored post-RoPE at
+    absolute positions, so the ring buffer needs no re-rotation.
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+    q, k, v = _project_qkv(params, cfg, x)
+    q = rope_lib.apply_rope(cfg.rope, q, positions, cfg.rope_theta)
+    k = rope_lib.apply_rope(cfg.rope, k, positions, cfg.rope_theta)
+
+    buf = cache["k"].shape[1]
+    slot = (pos % buf).astype(jnp.int32)
+    ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    hd = cfg.resolved_head_dim()
+    qh = q[:, 0]                                   # (B,KVp,Gp,hd)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qh, ck.astype(q.dtype),
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    # validity: once the ring has wrapped (pos+1 >= buf) every slot is live;
+    # before that only slots 0..slot have been written. Holds for the
+    # non-windowed case too (buf == max_len, never wraps).
+    idx = jnp.arange(buf)
+    valid = (pos + 1 >= buf) | (idx <= slot)
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(cv.dtype), cv)
+    out = out[:, None].astype(x.dtype)             # (B,1,KVp,Gp,hd)
+    return _out_proj(params, cfg, out, x.dtype), {"k": ck, "v": cv}

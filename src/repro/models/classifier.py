@@ -1,0 +1,89 @@
+"""The paper's own evaluation models: MLP / CNN classifiers (§V, Fig. 4).
+
+These are the models QPART's simulation platform quantizes and partitions;
+``layer_activations`` exposes every layer's input/output so the noise
+calibration (Alg. 1 steps 7–9) can probe intermediate layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.classifier import ClassifierConfig, ConvSpec, DenseSpec
+from repro.models.common import dense_init
+
+
+def init_classifier(key, cfg: ClassifierConfig):
+    params = []
+    keys = jax.random.split(key, cfg.num_layers)
+    for k, spec in zip(keys, cfg.layers):
+        if isinstance(spec, DenseSpec):
+            params.append({"w": dense_init(k, (spec.in_dim, spec.out_dim)),
+                           "b": jnp.zeros((spec.out_dim,), jnp.float32)})
+        else:
+            params.append({"w": dense_init(
+                k, (spec.f1, spec.f2, spec.c_in, spec.c_out), in_axis=2),
+                "b": jnp.zeros((spec.c_out,), jnp.float32)})
+    return params
+
+
+def _apply_layer(spec, p, x, last: bool):
+    if isinstance(spec, DenseSpec):
+        if x.ndim > 2:
+            x = x.reshape(x.shape[0], -1)
+        x = x @ p["w"] + p["b"]
+    else:
+        x = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(spec.stride, spec.stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        x = x + p["b"]
+        if spec.pool > 1:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, spec.pool, spec.pool, 1), (1, spec.pool, spec.pool, 1),
+                "VALID")
+    if not last:
+        x = jax.nn.relu(x)
+    return x
+
+
+import numpy as _np
+
+
+def _ensure_batched(x, cfg: ClassifierConfig):
+    """Accept (B, *input_shape), (B, flattened) or a single unbatched image."""
+    if x.ndim == len(cfg.input_shape) and x.size == int(_np.prod(cfg.input_shape)):
+        x = x[None]
+    return x
+
+
+def classifier_forward(params, cfg: ClassifierConfig, x):
+    """x (B, *input_shape) or (B, flat) -> logits (B, num_classes)."""
+    x = _ensure_batched(x, cfg)
+    if isinstance(cfg.layers[0], DenseSpec):
+        x = x.reshape(x.shape[0], -1)
+    for i, (spec, p) in enumerate(zip(cfg.layers, params)):
+        x = _apply_layer(spec, p, x, last=i == cfg.num_layers - 1)
+    return x
+
+
+def layer_activations(params, cfg: ClassifierConfig, x):
+    """Returns the list of activations entering each layer (x_1..x_L) plus
+    the logits — what the QPART noise calibration probes."""
+    x = _ensure_batched(x, cfg)
+    if isinstance(cfg.layers[0], DenseSpec):
+        x = x.reshape(x.shape[0], -1)
+    acts = []
+    for i, (spec, p) in enumerate(zip(cfg.layers, params)):
+        acts.append(x)
+        x = _apply_layer(spec, p, x, last=i == cfg.num_layers - 1)
+    return acts, x
+
+
+def forward_from_layer(params, cfg: ClassifierConfig, x, start: int):
+    """Run layers start..L-1 on an intermediate activation (server-side
+    segment inference after the partition point)."""
+    for i in range(start, cfg.num_layers):
+        x = _apply_layer(cfg.layers[i], params[i], x,
+                         last=i == cfg.num_layers - 1)
+    return x

@@ -1,0 +1,65 @@
+"""Shared model primitives: norms, initializers, embeddings, activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[in_axis]
+    std = fan_in ** -0.5
+    return std * jax.random.truncated_normal(key, -3.0, 3.0, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * 0.02
+
+
+# ---------------------------------------------------------------------------
+# Norms. Params are dicts so quantization / sharding rules can address them.
+
+def rmsnorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(dt)
+
+
+def layernorm_init(dim: int):
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(dt)
+
+
+def norm_init(kind: str, dim: int):
+    return rmsnorm_init(dim) if kind == "rmsnorm" else layernorm_init(dim)
+
+
+def norm_apply(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# Per-head RMSNorm over head_dim (qk-norm, Qwen3/OLMoE style).
+def headnorm(scale, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * scale).astype(dt)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)

@@ -1,0 +1,39 @@
+"""Modality frontend stubs (per assignment: the ViT / EnCodec encoders are
+NOT implemented — ``input_specs`` feeds precomputed frame/patch embeddings
+of the right shape, and these helpers generate matching synthetic tensors
+for smoke tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def stub_embeddings(key, cfg, batch: int, seq: int, dtype=jnp.bfloat16):
+    """Precomputed frontend output: (B, S, D) embeddings.
+
+    audio  -> EnCodec frame embeddings (MusicGen consumes codebook tokens;
+              the decoder sees summed codebook embeddings, same shape).
+    vision -> ViT patch embeddings after the projector (Qwen2-VL).
+    """
+    scale = cfg.d_model ** -0.5
+    return scale * jax.random.normal(key, (batch, seq, cfg.d_model), dtype)
+
+
+def mrope_positions(batch: int, seq: int, image_grid=(16, 16)):
+    """Qwen2-VL M-RoPE position triples (t, h, w) for a text+image stream.
+
+    First ``h*w`` tokens are image patches laid out on a 2-D grid at t=0,
+    the rest are text tokens with t advancing and h=w=t (Qwen2-VL rule).
+    """
+    gh, gw = image_grid
+    n_img = min(gh * gw, seq)
+    idx = jnp.arange(seq)
+    img_h = (idx % (gh * gw)) // gw
+    img_w = idx % gw
+    text_t = idx - n_img + 1  # starts at 1 after the image
+    is_text = idx >= n_img
+    t = jnp.where(is_text, text_t, 0)
+    h = jnp.where(is_text, text_t, img_h)
+    w = jnp.where(is_text, text_t, img_w)
+    pos = jnp.stack([t, h, w]).astype(jnp.int32)            # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))

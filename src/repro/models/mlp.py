@@ -1,0 +1,31 @@
+"""Dense feed-forward blocks: SwiGLU (llama-style) and GeLU (vanilla)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, silu
+
+
+def mlp_init(key, cfg, d_ff=None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, f)),
+            "w_up": dense_init(ks[1], (d, f)),
+            "w_down": dense_init(ks[2], (f, d)),
+        }
+    return {
+        "w_up": dense_init(ks[0], (d, f)),
+        "w_down": dense_init(ks[1], (f, d)),
+    }
+
+
+def mlp_apply(params, cfg, x):
+    if cfg.mlp == "swiglu":
+        h = silu(x @ params["w_gate"].astype(x.dtype)) * (x @ params["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype)

@@ -1,0 +1,110 @@
+"""Top-k mixture-of-experts with capacity-based einsum dispatch.
+
+Mesh-TF / Switch-Transformer formulation: tokens are split into groups, a
+dispatch one-hot of shape (G, GS, E, C) routes each token to at most k
+expert-capacity slots, and two einsums move activations to expert-major
+layout (E, G, C, D) and back. Under pjit with experts sharded on the
+``model`` axis and groups on ``data``, XLA lowers the dispatch/combine
+einsums to all-to-alls — the canonical expert-parallel schedule.
+
+Group size is kept small (default 128 tokens) so the dispatch tensor stays
+~`T·GS·k` elements: with GS=128 that is <2 bytes/token/capacity-slot of
+bf16, a few MB per device at the assigned shapes.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, silu
+
+DEFAULT_GROUP_SIZE = 128
+
+
+def moe_init(key, cfg):
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff, m.num_experts
+    ks = jax.random.split(key, 4)
+    p = {"w_router": dense_init(ks[0], (d, e))}
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = dense_init(ks[1], (e, d, f), in_axis=1)
+        p["w_up"] = dense_init(ks[2], (e, d, f), in_axis=1)
+        p["w_down"] = dense_init(ks[3], (e, f, d), in_axis=1)
+    else:
+        p["w_up"] = dense_init(ks[1], (e, d, f), in_axis=1)
+        p["w_down"] = dense_init(ks[2], (e, f, d), in_axis=1)
+    return p
+
+
+def capacity_for(group_size: int, num_experts: int, top_k: int,
+                 capacity_factor: float) -> int:
+    c = math.ceil(group_size * top_k / num_experts * capacity_factor)
+    return max(top_k if group_size == 1 else 4, (c + 3) // 4 * 4)
+
+
+def _route(logits, top_k: int, capacity: int):
+    """logits (G, GS, E) -> dispatch (G,GS,E,C) bool-ish, combine (G,GS,E,C),
+    aux metrics. Pure function of router logits: top-k with per-expert
+    position assignment, tokens over capacity are dropped (residual path
+    carries them)."""
+    g, gs, e = logits.shape
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)       # (G,GS,K)
+
+    # Normalize the k gates (Mixtral/DBRX convention).
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((g, gs, e, capacity), jnp.bfloat16)
+    combine = jnp.zeros((g, gs, e, capacity), jnp.float32)
+    # running token count per (group, expert) across the k rounds
+    counts = jnp.zeros((g, e), jnp.int32)
+    for kk in range(top_k):
+        eh = jax.nn.one_hot(expert_ids[..., kk], e, dtype=jnp.int32)  # (G,GS,E)
+        pos = jnp.cumsum(eh, axis=1) - 1 + counts[:, None, :]          # slot idx
+        counts = counts + eh.sum(axis=1)
+        pos_tok = jnp.take_along_axis(
+            pos, expert_ids[..., kk:kk + 1], axis=-1)[..., 0]          # (G,GS)
+        keep = pos_tok < capacity
+        ph = jax.nn.one_hot(pos_tok, capacity, dtype=jnp.float32)      # (G,GS,C)
+        sel = (eh.astype(jnp.float32) * keep[..., None].astype(jnp.float32))
+        contrib = sel[..., None] * ph[..., None, :]                    # (G,GS,E,C)
+        dispatch = dispatch + contrib.astype(jnp.bfloat16)
+        combine = combine + gate_vals[..., kk, None, None] * contrib
+
+    # aux: Switch load-balance loss + router z-loss
+    density = dispatch.sum(axis=(1, 3)) / gs                            # (G,E) frac
+    mean_prob = probs.mean(axis=1)                                      # (G,E)
+    lb_loss = e * jnp.mean(jnp.sum(density.astype(jnp.float32) * mean_prob, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)))
+    dropped = 1.0 - dispatch.astype(jnp.float32).sum() / (g * gs * top_k)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return dispatch, combine, aux
+
+
+def moe_apply(params, cfg, x, group_size: int = DEFAULT_GROUP_SIZE):
+    """x (B, S, D) -> (out, aux)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    gs = min(group_size, s) if s > 1 else 1
+    gcount = t // gs
+    xg = x.reshape(gcount, gs, d)
+
+    logits = xg @ params["w_router"].astype(x.dtype)                    # (G,GS,E)
+    cap = capacity_for(gs, m.num_experts, m.top_k, m.capacity_factor)
+    dispatch, combine, aux = _route(logits, m.top_k, cap)
+
+    expert_in = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xg)
+    if cfg.mlp == "swiglu":
+        h = silu(jnp.einsum("egcd,edf->egcf", expert_in,
+                            params["w_gate"].astype(x.dtype)))
+        h = h * jnp.einsum("egcd,edf->egcf", expert_in,
+                           params["w_up"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", expert_in,
+                                   params["w_up"].astype(x.dtype)))
+    expert_out = jnp.einsum("egcf,efd->egcd", h, params["w_down"].astype(x.dtype))
+    out = jnp.einsum("egcd,gsec->gsd", expert_out, combine.astype(x.dtype))
+    return out.reshape(b, s, d), aux

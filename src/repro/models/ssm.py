@@ -1,0 +1,218 @@
+"""Mamba2 mixer implemented with the SSD (state-space duality) chunked scan
+[arXiv:2405.21060].
+
+Sequence mode runs a ``lax.scan`` over chunks of length ``Q``: within each
+chunk the quadratic (dual, attention-like) form computes the intra-chunk
+contribution on the MXU, while a (state -> state) recurrence carries the
+inter-chunk SSM state. Live memory is O(B·H·Q·Q + B·H·N·P) per step,
+independent of sequence length. Decode mode is the O(1) single-step
+recurrence over the carried state + causal-conv ring buffer.
+
+TP note (DESIGN.md §5): the input projection is SPLIT into separate
+matrices (z, x, B, C, dt) rather than one packed matmul. A packed
+projection cannot be head-sharded — static slices at non-shard-aligned
+offsets force GSPMD to all-gather the whole (B, S, 2·d_inner+2N+H)
+projection every layer. With split projections w_z/w_x/w_dt shard on the
+head axis, w_B/w_C stay replicated (they are tiny and shared across
+heads), and the whole SSD scan runs head-parallel with zero collectives
+until the output row-matmul's psum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, silu
+
+
+def ssm_init(key, cfg):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.num_heads(d)
+    n = s.d_state
+    ks = jax.random.split(key, 8)
+    return {
+        "w_z": dense_init(ks[0], (d, di)),
+        "w_x": dense_init(ks[1], (d, di)),
+        "w_B": dense_init(ks[2], (d, n)),
+        "w_C": dense_init(ks[3], (d, n)),
+        "w_dt": dense_init(ks[4], (d, nh)),
+        # depthwise causal conv over x, B, C (split per group: a depthwise
+        # conv factors exactly across channel groups)
+        "conv_wx": dense_init(ks[5], (s.conv_width, di)) * 0.1,
+        "conv_bx": jnp.zeros((di,), jnp.float32),
+        "conv_wB": dense_init(ks[6], (s.conv_width, n)) * 0.1,
+        "conv_bB": jnp.zeros((n,), jnp.float32),
+        "conv_wC": dense_init(ks[7], (s.conv_width, n)) * 0.1,
+        "conv_bC": jnp.zeros((n,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "gate_norm": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[3], (di, d)),
+    }
+
+
+def _project_in(params, x):
+    """x (..., D) -> (z, xr, Br, Cr, dt_raw) pre-conv projections."""
+    dt = x.dtype
+    z = x @ params["w_z"].astype(dt)
+    xr = x @ params["w_x"].astype(dt)
+    br = x @ params["w_B"].astype(dt)
+    cr = x @ params["w_C"].astype(dt)
+    dt_raw = x @ params["w_dt"].astype(dt)
+    return z, xr, br, cr, dt_raw
+
+
+def _causal_conv(seq, w, b):
+    """seq (B,S,C), w (W,C) depthwise causal conv + silu."""
+    width = w.shape[0]
+    pad = jnp.pad(seq, [(0, 0), (width - 1, 0), (0, 0)])
+    out = sum(pad[:, i:i + seq.shape[1], :] * w[i] for i in range(width))
+    return silu(out + b)
+
+
+def _gated_out(params, y, z, x_dtype):
+    dt = y.dtype
+    g = y * silu(z)
+    var = jnp.mean(jnp.square(g.astype(jnp.float32)), axis=-1, keepdims=True)
+    g = (g.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * params["gate_norm"]).astype(dt)
+    return (g @ params["w_out"].astype(dt)).astype(x_dtype)
+
+
+def ssm_forward(params, cfg, x):
+    """x (B, S, D) -> (B, S, D). S is right-padded to the chunk multiple."""
+    out, _ = _ssm_forward_with_state(params, cfg, x)
+    return out
+
+
+def _ssm_forward_with_state(params, cfg, x):
+    """Chunked SSD scan; returns (out (B,S,D), final carried state)."""
+    s_cfg = cfg.ssm
+    b, orig_len, _ = x.shape
+    q = min(s_cfg.chunk, orig_len)
+    if orig_len % q:                         # causal: right-pad then trim
+        pad = q - orig_len % q
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0)])
+    b, slen, _ = x.shape
+    di = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.num_heads(cfg.d_model)
+    n, p = s_cfg.d_state, s_cfg.head_dim
+    nchunks = slen // q
+
+    z, xr, br, cr, dt_raw = _project_in(params, x)
+    xc = _causal_conv(xr, params["conv_wx"].astype(x.dtype),
+                      params["conv_bx"].astype(x.dtype))
+    bmat = _causal_conv(br, params["conv_wB"].astype(x.dtype),
+                        params["conv_bB"].astype(x.dtype))
+    cmat = _causal_conv(cr, params["conv_wC"].astype(x.dtype),
+                        params["conv_bC"].astype(x.dtype))
+    xs = xc.reshape(b, slen, nh, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["A_log"])                   # (H,)
+    la = dt * a                                     # per-step log decay (B,S,H)
+
+    # chunked tensors, scanned over the chunk axis
+    def chunked(t, shape):
+        return t.reshape((b, nchunks, q) + shape).transpose(1, 0, 2, *range(3, 3 + len(shape)))
+
+    xs_c = chunked(xs, (nh, p))
+    b_c = chunked(bmat, (n,))
+    c_c = chunked(cmat, (n,))
+    dt_c = chunked(dt, (nh,))
+    la_c = chunked(la, (nh,))
+
+    def chunk_step(h, inp):
+        xk, bk, ck, dtk, lak = inp                 # (B,Q,H,P) (B,Q,N) ...
+        cum = jnp.cumsum(lak, axis=1)              # (B,Q,H)
+        # intra-chunk (dual / quadratic) term
+        scores = jnp.einsum("bin,bjn->bij", ck.astype(jnp.float32),
+                            bk.astype(jnp.float32))         # (B,Q,Q)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Qi,Qj,H)
+        iidx = jnp.arange(q)
+        causal = iidx[:, None] >= iidx[None, :]
+        # mask BEFORE exp: non-causal entries have decay > 0, and
+        # where(c, exp(big), 0) leaks NaN through the gradient (inf * 0)
+        decay = jnp.where(causal[None, :, :, None], decay, -1e30)
+        lmat = jnp.exp(decay)
+        dtx = dtk[..., None] * xk.astype(jnp.float32)        # (B,Q,H,P)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", scores, lmat, dtx)
+        # inter-chunk contribution from carried state
+        y = y + jnp.einsum("bin,bih,bhnp->bihp", ck.astype(jnp.float32),
+                           jnp.exp(cum), h)
+        # new carried state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)         # (B,Q,H)
+        state_upd = jnp.einsum("bjn,bjh,bjhp->bhnp", bk.astype(jnp.float32),
+                               decay_to_end * dtk, xk.astype(jnp.float32))
+        h = jnp.exp(cum[:, -1, :])[..., None, None] * h + state_upd
+        return h, y
+
+    h0 = jnp.zeros((b, nh, n, p), jnp.float32)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xs_c, b_c, c_c, dt_c, la_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, slen, nh, p)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, slen, di).astype(x.dtype)
+    out = _gated_out(params, y, z, x.dtype)
+    if orig_len != slen:
+        out = out[:, :orig_len]
+    return out, h_final
+
+
+def ssm_prefill(params, cfg, x, cache):
+    """Forward + populate the decode cache (state + conv ring)."""
+    s_cfg = cfg.ssm
+    b, slen, _ = x.shape
+    out, state = _ssm_forward_with_state(params, cfg, x)
+    # conv ring: last (W-1) PRE-conv channel values of [x, B, C]
+    _, xr, br, cr, _ = _project_in(params, x)
+    tail = slice(slen - (s_cfg.conv_width - 1), slen)
+    conv = jnp.concatenate([xr[:, tail], br[:, tail], cr[:, tail]], axis=-1)
+    return out, {"state": state, "conv": conv.astype(cache["conv"].dtype)}
+
+
+def init_ssm_cache(cfg, batch: int, dtype=jnp.float32):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    conv_ch = di + 2 * s.d_state
+    return {
+        "state": jnp.zeros((batch, nh, s.d_state, s.head_dim), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode(params, cfg, x, cache):
+    """One-token recurrence. x (B,1,D) -> (out (B,1,D), new cache)."""
+    s_cfg = cfg.ssm
+    b = x.shape[0]
+    di = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.num_heads(cfg.d_model)
+    n, p = s_cfg.d_state, s_cfg.head_dim
+
+    z, xr, br, cr, dt_raw = _project_in(params, x[:, 0, :])
+    # causal conv over ring of the last (w-1) inputs + current
+    cur = jnp.concatenate([xr, br, cr], axis=-1)
+    hist = jnp.concatenate([cache["conv"], cur[:, None, :].astype(cache["conv"].dtype)], axis=1)
+    new_conv = hist[:, 1:, :]
+
+    def conv1(seq, w, b_):
+        out = jnp.einsum("bwc,wc->bc", seq.astype(jnp.float32),
+                         w.astype(jnp.float32)) + b_
+        return silu(out)
+
+    xh = conv1(hist[..., :di], params["conv_wx"], params["conv_bx"])
+    bvec = conv1(hist[..., di:di + n], params["conv_wB"], params["conv_bB"])
+    cvec = conv1(hist[..., di + n:], params["conv_wC"], params["conv_bC"])
+    xh = xh.reshape(b, nh, p)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * a)                                   # (B,H)
+
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, bvec, xh)
+    state = decay[..., None, None] * cache["state"] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cvec, state)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    out = _gated_out(params, y, z[:, None, :], x.dtype)
+    return out, {"state": state, "conv": new_conv}

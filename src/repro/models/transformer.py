@@ -1,0 +1,319 @@
+"""Decoder-stack assembly for every assigned architecture.
+
+The stack is organized as ``num_periods`` repetitions of a ``period`` of
+blocks (period = lcm(attn interleave, MoE interleave); 1 for homogeneous
+stacks, 8 for Jamba). Parameters for each period-position are stacked over
+periods and the stack runs under ``jax.lax.scan``, so HLO size — and
+compile time for the 80-layer/72B dry-runs — is independent of depth.
+
+Three entry points mirror the input-shape suite:
+  ``forward``      train/prefill logits over a full sequence,
+  ``prefill``      forward + returns the populated decode cache,
+  ``decode_step``  one token against the cache (attention ring buffer /
+                   SSM state), the body ``serve_step`` lowers.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, ModelConfig
+from repro.models import rope as rope_lib
+from repro.models.attention import (attention_decode, attention_forward,
+                                    attn_init, init_kv_cache)
+from repro.models.common import embed_init, norm_apply, norm_init
+from repro.models.mlp import mlp_apply, mlp_init
+from repro.models.moe import moe_apply, moe_init
+from repro.models.ssm import init_ssm_cache, ssm_decode, ssm_forward, ssm_init
+
+
+def period_len(cfg: ModelConfig) -> int:
+    a = cfg.attn_every if cfg.attn_every > 1 else 1
+    m = cfg.moe.every if cfg.moe is not None else 1
+    return math.lcm(a, m)
+
+
+def num_periods(cfg: ModelConfig) -> int:
+    p = period_len(cfg)
+    assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+    return cfg.num_layers // p
+
+
+# ---------------------------------------------------------------------------
+# Init
+
+def _block_init(key, cfg: ModelConfig, pos: int):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": norm_init(cfg.norm, cfg.d_model)}
+    if cfg.block_kind(pos) == ATTN:
+        p["attn"] = attn_init(ks[0], cfg)
+    else:
+        p["ssm"] = ssm_init(ks[0], cfg)
+    if cfg.uses_moe(pos):
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model)
+        p["moe"] = moe_init(ks[1], cfg)
+    elif cfg.d_ff:
+        p["norm2"] = norm_init(cfg.norm, cfg.d_model)
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    plen, nper = period_len(cfg), num_periods(cfg)
+    k_embed, k_head, k_layers = jax.random.split(key, 3)
+    vp = cfg.padded_vocab()
+    params = {"embed": embed_init(k_embed, (vp, cfg.d_model)),
+              "final_norm": norm_init(cfg.norm, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(k_head, (cfg.d_model, vp))
+    layer_keys = jax.random.split(k_layers, (plen, nper))
+    blocks = []
+    for pos in range(plen):
+        stacked = jax.vmap(lambda k, pos=pos: _block_init(k, cfg, pos))(layer_keys[pos])
+        blocks.append(stacked)
+    params["blocks"] = blocks
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct tree without allocating (for the dry-run)."""
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+# ---------------------------------------------------------------------------
+# Caches
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Per-period-position stacked caches (leading axis = num_periods)."""
+    plen, nper = period_len(cfg), num_periods(cfg)
+
+    def one(pos):
+        if cfg.block_kind(pos) == ATTN:
+            c = init_kv_cache(cfg, batch, max_len, dtype)
+        else:
+            c = init_ssm_cache(cfg, batch, dtype)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (nper,) + x.shape), c)
+
+    return [one(pos) for pos in range(plen)]
+
+
+# ---------------------------------------------------------------------------
+# Block application
+
+def _dequant_block(bp, cfg):
+    """Serving path: block weights may arrive as int8 wire structs
+    {codes, scale, mu} (core.quantizer.quantize_params_for_serving) — the
+    QPART quantization keeping weights compact in HBM. Dequantized here,
+    once per block application; on TPU the Pallas qmatmul kernels fuse
+    this dequant into the matmul tiles instead (repro/kernels)."""
+    def walk(node):
+        if isinstance(node, dict):
+            if "codes" in node and "scale" in node:
+                w = node["codes"].astype(jnp.float32) * node["scale"] \
+                    + node["mu"]
+                return w.astype(getattr(jnp, cfg.dtype))
+            if "codes_packed" in node:        # int4: two codes per byte
+                p = node["codes_packed"]
+                lo = (p & 0xF).astype(jnp.float32)
+                hi = ((p >> 4) & 0xF).astype(jnp.float32)
+                w = jnp.stack([lo, hi], axis=-1).reshape(
+                    p.shape[:-1] + (p.shape[-1] * 2,))
+                w = w * node["scale"] + node["mu"]
+                return w.astype(getattr(jnp, cfg.dtype))
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(bp)
+
+
+def _block_apply(bp, cfg, pos, x, positions, *, cache=None, decode_pos=None):
+    """One block. Returns (x, aux, new_cache)."""
+    bp = _dequant_block(bp, cfg)
+    aux = None
+    h = norm_apply(cfg.norm, bp["norm1"], x)
+    if cfg.block_kind(pos) == ATTN:
+        if cache is not None:
+            mixed, cache = attention_decode(bp["attn"], cfg, h, cache, decode_pos)
+        else:
+            mixed = attention_forward(bp["attn"], cfg, h, positions)
+    else:
+        if cache is not None:
+            mixed, cache = ssm_decode(bp["ssm"], cfg, h, cache)
+        else:
+            mixed = ssm_forward(bp["ssm"], cfg, h)
+    x = x + mixed
+    if "moe" in bp:
+        h2 = norm_apply(cfg.norm, bp["norm2"], x)
+        out, aux = moe_apply(bp["moe"], cfg, h2)
+        x = x + out
+    elif "mlp" in bp:
+        h2 = norm_apply(cfg.norm, bp["norm2"], x)
+        x = x + mlp_apply(bp["mlp"], cfg, h2)
+    return x, aux, cache
+
+
+def _zero_aux():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32),
+            "dropped_frac": jnp.zeros((), jnp.float32)}
+
+
+def _acc_aux(acc, aux):
+    if aux is None:
+        return acc
+    return jax.tree.map(jnp.add, acc, aux)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+
+def _embed(params, cfg, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(getattr(jnp, cfg.dtype))
+    return params["embed"][tokens].astype(getattr(jnp, cfg.dtype))
+
+
+def _unembed(params, cfg, x):
+    x = norm_apply(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    vp = cfg.padded_vocab()
+    if vp != cfg.vocab_size:                  # mask padded vocab columns
+        col = jnp.arange(vp)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def forward(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            positions=None, remat: bool = False):
+    """-> (logits (B,S,V), aux dict of summed router losses)."""
+    x = _embed(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = rope_lib.text_positions(b, s)
+    plen = period_len(cfg)
+
+    def period_fn(x, period_params):
+        aux_acc = _zero_aux()
+        for pos in range(plen):
+            x, aux, _ = _block_apply(period_params[pos], cfg, pos, x, positions)
+            aux_acc = _acc_aux(aux_acc, aux)
+        return x, aux_acc
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+
+    def scan_fn(x, period_params):
+        return period_fn(x, period_params)
+
+    x, auxs = jax.lax.scan(scan_fn, x, tuple(params["blocks"]))
+    aux = jax.tree.map(lambda a: a.sum(0), auxs)
+    return _unembed(params, cfg, x), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, *, embeds=None,
+            positions=None, max_len: int, cache_dtype=jnp.bfloat16):
+    """Forward + build the decode cache by replaying K/V (attention) and
+    final states (SSM). Implemented as forward with per-block cache fill."""
+    x = _embed(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = rope_lib.text_positions(b, s)
+    plen = period_len(cfg)
+    cache0 = init_cache(cfg, b, max_len, cache_dtype)
+
+    def scan_fn(x, inp):
+        period_params, caches = inp
+        new_caches = []
+        aux_acc = _zero_aux()
+        for pos in range(plen):
+            bp = _dequant_block(period_params[pos], cfg)
+            h = norm_apply(cfg.norm, bp["norm1"], x)
+            if cfg.block_kind(pos) == ATTN:
+                mixed, c = _attn_prefill_with_cache(bp["attn"], cfg, h,
+                                                    positions, caches[pos])
+            else:
+                mixed, c = _ssm_prefill_with_cache(bp["ssm"], cfg, h, caches[pos])
+            x = x + mixed
+            if "moe" in bp:
+                h2 = norm_apply(cfg.norm, bp["norm2"], x)
+                out, aux = moe_apply(bp["moe"], cfg, h2)
+                x = x + out
+                aux_acc = _acc_aux(aux_acc, aux)
+            elif "mlp" in bp:
+                h2 = norm_apply(cfg.norm, bp["norm2"], x)
+                x = x + mlp_apply(bp["mlp"], cfg, h2)
+            new_caches.append(c)
+        return x, (tuple(new_caches), aux_acc)
+
+    x, (caches, auxs) = jax.lax.scan(scan_fn, x, (tuple(params["blocks"]),
+                                                  tuple(cache0)))
+    aux = jax.tree.map(lambda a: a.sum(0), auxs)
+    return _unembed(params, cfg, x), list(caches), aux
+
+
+def _attn_prefill_with_cache(ap, cfg, h, positions, cache):
+    from repro.models.attention import (_blocked_causal_attention,
+                                        _out_proj, _project_qkv,
+                                        _windowed_attention, DEFAULT_BLOCK_Q,
+                                        DEFAULT_BLOCK_K)
+    b, s, _ = h.shape
+    q, k, v = _project_qkv(ap, cfg, h)
+    qr = rope_lib.apply_rope(cfg.rope, q, positions, cfg.rope_theta)
+    kr = rope_lib.apply_rope(cfg.rope, k, positions, cfg.rope_theta)
+    bq, bk = min(DEFAULT_BLOCK_Q, s), min(DEFAULT_BLOCK_K, s)
+    if cfg.sliding_window is not None and s > cfg.sliding_window:
+        out = _windowed_attention(qr, kr, v, cfg.sliding_window, bq)
+    else:
+        out = _blocked_causal_attention(qr, kr, v, bq, bk)
+    out = _out_proj(ap, cfg, out, h.dtype)
+    buf = cache["k"].shape[1]
+    # write the last min(s, buf) keys/values into the ring
+    take = min(s, buf)
+    kw = kr[:, s - take:, :, :].astype(cache["k"].dtype)
+    vw = v[:, s - take:, :, :].astype(cache["v"].dtype)
+    if take == buf:
+        # ring layout: slot = pos % buf
+        pos0 = s - take
+        # jnp.roll: out[j] = in[(j - shift) % buf]; we need out[(pos0+i)%buf]
+        # = in[i], i.e. shift = pos0.
+        ck = jnp.roll(kw, pos0 % buf, axis=1)
+        cv = jnp.roll(vw, pos0 % buf, axis=1)
+    else:
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kw, s - take, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vw, s - take, axis=1)
+    return out, {"k": ck, "v": cv}
+
+
+def _ssm_prefill_with_cache(sp, cfg, h, cache):
+    from repro.models.ssm import ssm_prefill
+    return ssm_prefill(sp, cfg, h, cache)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos):
+    """token (B,1) int32 or embeds (B,1,D); pos scalar int32 absolute
+    position. Returns (logits (B,1,V), new caches)."""
+    if token.ndim == 2:
+        x = _embed(params, cfg, token)
+    else:
+        x = token.astype(getattr(jnp, cfg.dtype))
+    plen = period_len(cfg)
+
+    def scan_fn(x, inp):
+        period_params, caches_in = inp
+        new_caches = []
+        for p in range(plen):
+            x, _, c = _block_apply(period_params[p], cfg, p, x, None,
+                                   cache=caches_in[p], decode_pos=pos)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, caches = jax.lax.scan(scan_fn, x, (tuple(params["blocks"]),
+                                          tuple(caches)))
+    return _unembed(params, cfg, x), list(caches)

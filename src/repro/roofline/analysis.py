@@ -1,0 +1,120 @@
+"""Three-term roofline from compiled dry-run artifacts (no real hardware).
+
+  compute term    = HLO_FLOPs        / (chips x peak_FLOP/s)
+  memory term     = HLO_bytes        / (chips x HBM_bw)
+  collective term = collective_bytes / (chips x link_bw)
+
+FLOPs / bytes / collective-bytes come from ``repro.roofline.hlo_cost`` —
+a loop-aware walk of the compiled HLO. (The stock
+``compiled.cost_analysis()`` counts every while-loop body once, which
+under-reports any scanned layer stack by the trip count; see
+EXPERIMENTS.md §Roofline "methodology".) The compiled module is the SPMD
+per-device partition, so parsed numbers are per-device; we report global
+(= per-device x chips) and divide back inside the terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.hlo_cost import analyze_text
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float             # global (per-device x chips)
+    hlo_gbytes: float
+    coll_gbytes: float            # per-device moved bytes (summed kinds)
+    coll_breakdown: Dict[str, float]
+    model_gflops: Optional[float] = None   # analytic 6ND / 2ND
+    temp_bytes_per_device: Optional[float] = None
+    arg_bytes_per_device: Optional[float] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_gflops * 1e9 / (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_gbytes * 1e9 / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        # coll bytes are already per-device; each device pushes its share
+        # through its own links
+        return self.coll_gbytes * 1e9 / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flop_frac(self) -> Optional[float]:
+        if self.model_gflops is None or self.hlo_gflops == 0:
+            return None
+        return self.model_gflops / self.hlo_gflops
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_flop_frac=self.useful_flop_frac)
+        return d
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: Optional[float] = None) -> Roofline:
+    cost = analyze_text(compiled.as_text())
+    temp = arg = None
+    try:
+        ma = compiled.memory_analysis()
+        temp = float(ma.temp_size_in_bytes)
+        arg = float(ma.argument_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_gflops=cost.flops * chips / 1e9,
+        hlo_gbytes=cost.bytes * chips / 1e9,
+        coll_gbytes=cost.collective_bytes / 1e9,
+        coll_breakdown={k: v / 1e9 for k, v in cost.collectives.items()},
+        model_gflops=(model_flops / 1e9) if model_flops else None,
+        temp_bytes_per_device=temp, arg_bytes_per_device=arg,
+    )
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training (fwd 2ND + bwd 4ND), 2*N*D
+    forward-only, with N = active params (MoE top-k)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch * 1          # decode: one token
+    return 2.0 * n_active * tokens
+
+
+def save_record(roofline: Roofline, path: str) -> None:
+    with open(path, "w") as f:
+        json.dump(roofline.to_dict(), f, indent=2)
+
+
+def load_records(record_dir: str):
+    import glob
+    import os
+    out = []
+    for p in sorted(glob.glob(os.path.join(record_dir, "*.json"))):
+        with open(p) as f:
+            out.append(json.load(f))
+    return out

@@ -1,0 +1,196 @@
+"""Baseline offloading schemes the paper compares against (§V, Fig. 7–10,
+Table III):
+
+  * no-optimization — the model segment ships at full f32 precision and
+    the cut activation uploads at f32 (the paper's "No Optimization").
+  * autoencoder     — DeepCOD-style [35]: a linear encoder/decoder pair is
+    inserted at the cut; the device uploads the compressed code. Extra
+    encode/decode compute is charged to the device/server respectively,
+    and the reconstruction perturbs accuracy (really executed).
+  * pruning         — two-step-pruning-style [44][45]: neurons of the
+    device segment are magnitude-pruned to a retention ratio chosen to
+    keep measured accuracy degradation comparable to QPART's budget, which
+    shrinks both the shipped weights and the cut activation.
+
+Every baseline returns the same ``ServingResult`` as QPART (priced by the
+same simulator), so the comparison is apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.classifier import ClassifierConfig, DenseSpec
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile, cost_breakdown)
+from repro.core.solver import PartitionPlan
+from repro.models.classifier import (classifier_forward, forward_from_layer,
+                                     layer_activations)
+from repro.serving.simulator import ServingResult
+
+
+def _plan_stub(p: int, payload_bits: float) -> PartitionPlan:
+    return PartitionPlan(p=p, bits_w=np.full(max(p, 0), 32.0),
+                         bits_x=32.0, objective=0.0, psi_total=0.0,
+                         payload_bits=payload_bits, breakdown={})
+
+
+def _result(plan, specs, device, server, channel, weights,
+            extra_dev_macs: float = 0.0,
+            extra_srv_macs: float = 0.0) -> ServingResult:
+    o = np.array([sp.o for sp in specs], dtype=np.float64)
+    o1 = float(o[:plan.p].sum()) + extra_dev_macs
+    o2 = float(o[plan.p:].sum()) + extra_srv_macs
+    costs = cost_breakdown(o1, o2, plan.payload_bits, device, server, channel)
+    return ServingResult(plan=plan, costs=costs,
+                         objective=costs.objective(weights),
+                         payload_bits=plan.payload_bits)
+
+
+# ---------------------------------------------------------------------------
+# 1. No optimization.
+
+def no_opt_offload(params, cfg: ClassifierConfig, specs, p: int,
+                   device: DeviceProfile, server: ServerProfile,
+                   channel: Channel, weights: ObjectiveWeights,
+                   test_x=None, test_y=None,
+                   base_accuracy: Optional[float] = None) -> ServingResult:
+    """Ship segment + activation at f32; accuracy == base model."""
+    wire = sum(specs[i].z_w for i in range(p)) * 32.0
+    wire += (specs[p - 1].z_x if p else float(np.prod(cfg.input_shape))) * 32.0
+    res = _result(_plan_stub(p, wire), specs, device, server, channel, weights)
+    if test_x is not None:
+        logits = classifier_forward(params, cfg, test_x)
+        res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
+        if base_accuracy is not None:
+            res.accuracy_degradation = base_accuracy - res.accuracy
+    return res
+
+
+# ---------------------------------------------------------------------------
+# 2. Autoencoder compression at the cut (DeepCOD-style [35]).
+
+@dataclasses.dataclass
+class AutoencoderBaseline:
+    """Linear AE at the partition point, trained by ridge-regression on the
+    calibration activations (closed form — no SGD needed for a linear AE)."""
+    code_ratio: float = 0.25      # code dim = ratio * activation dim
+
+    def offload(self, params, cfg, specs, p: int, calib_x,
+                device, server, channel, weights,
+                test_x=None, test_y=None,
+                base_accuracy: Optional[float] = None) -> ServingResult:
+        assert p >= 1, "autoencoder needs an on-device segment"
+        acts, logits_c = layer_activations(params, cfg, calib_x)
+        # the cut activation = OUTPUT of layer p (input of p+1); at p == L
+        # that's the logits themselves
+        a = acts[p] if p < cfg.num_layers else logits_c
+        a = a.reshape(a.shape[0], -1)
+        d = a.shape[-1]
+        code = max(int(d * self.code_ratio), 1)
+        # PCA-style closed-form linear AE: top-`code` principal directions
+        mu = a.mean(0)
+        ac = a - mu
+        cov = (ac.T @ ac) / a.shape[0]
+        _, vecs = jnp.linalg.eigh(cov.astype(jnp.float64))
+        enc = vecs[:, -code:].astype(jnp.float32)      # (d, code)
+        # wire: segment at f32 + encoder weights + compressed activation
+        # (decoder lives server-side, off the radio link)
+        wire = sum(specs[i].z_w for i in range(p)) * 32.0
+        wire += d * code * 32.0                          # encoder shipped
+        wire += specs[p - 1].z_x * (code / d) * 32.0     # compressed cut
+        extra_dev = float(d * code)                    # encode MACs
+        extra_srv = float(code * d)                    # decode MACs
+        res = _result(_plan_stub(p, wire), specs, device, server, channel,
+                      weights, extra_dev, extra_srv)
+        if test_x is not None:
+            acts_t, logits_t = layer_activations(params, cfg, test_x)
+            at = acts_t[p] if p < cfg.num_layers else logits_t
+            shape_t = at.shape
+            at = at.reshape(at.shape[0], -1)
+            recon = ((at - mu) @ enc @ enc.T + mu).reshape(shape_t)
+            logits = forward_from_layer(params, cfg, recon, p) \
+                if p < cfg.num_layers else recon
+            res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
+            if base_accuracy is not None:
+                res.accuracy_degradation = base_accuracy - res.accuracy
+        res.extra["code_dim"] = code
+        return res
+
+
+# ---------------------------------------------------------------------------
+# 3. Magnitude pruning of the device segment ([44][45]).
+
+@dataclasses.dataclass
+class PruningBaseline:
+    retain: float = 0.5           # fraction of weights kept per layer
+
+    def offload(self, params, cfg, specs, p: int,
+                device, server, channel, weights,
+                test_x=None, test_y=None,
+                base_accuracy: Optional[float] = None) -> ServingResult:
+        pruned = [dict(lp) for lp in params]
+        kept_elems = []
+        for i in range(p):
+            w = pruned[i]["w"]
+            thresh = jnp.quantile(jnp.abs(w), 1.0 - self.retain)
+            mask = jnp.abs(w) >= thresh
+            pruned[i]["w"] = w * mask
+            kept_elems.append(float(mask.sum()))
+        # wire: sparse encoding ~ (32-bit value + 32-bit index) per kept
+        # weight — the honest cost of unstructured sparsity
+        wire = sum(k * 64.0 for k in kept_elems)
+        wire += (specs[p - 1].z_x if p else float(np.prod(cfg.input_shape))) * 32.0
+        # device MACs shrink with the retained fraction
+        o_dev = sum(specs[i].o * self.retain for i in range(p))
+        o_full_dev = sum(specs[i].o for i in range(p))
+        res = _result(_plan_stub(p, wire), specs, device, server, channel,
+                      weights, extra_dev_macs=o_dev - o_full_dev)
+        if test_x is not None and p >= 1:
+            from repro.configs.classifier import DenseSpec as _DS
+            from repro.models.classifier import _apply_layer, _ensure_batched
+            h = _ensure_batched(test_x, cfg)
+            if isinstance(cfg.layers[0], _DS):
+                h = h.reshape(h.shape[0], -1)
+            for l in range(p):
+                h = _apply_layer(cfg.layers[l], pruned[l], h,
+                                 last=l == cfg.num_layers - 1)
+            logits = forward_from_layer(params, cfg, h, p)
+            res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
+            if base_accuracy is not None:
+                res.accuracy_degradation = base_accuracy - res.accuracy
+        elif test_x is not None:
+            logits = classifier_forward(params, cfg, test_x)
+            res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
+            if base_accuracy is not None:
+                res.accuracy_degradation = base_accuracy - res.accuracy
+        res.extra["retain"] = self.retain
+        return res
+
+    def calibrated(self, params, cfg, specs, p, calib_x, calib_y,
+                   budget: float, base_accuracy: float):
+        """Pick the lowest retention whose measured degradation stays within
+        ``budget`` (the paper matches pruning degradation to QPART's)."""
+        from repro.models.classifier import _apply_layer
+        for retain in (0.1, 0.2, 0.3, 0.5, 0.7, 0.9, 1.0):
+            pruned = [dict(lp) for lp in params]
+            for i in range(p):
+                w = pruned[i]["w"]
+                thresh = jnp.quantile(jnp.abs(w), 1.0 - retain)
+                pruned[i]["w"] = w * (jnp.abs(w) >= thresh)
+            from repro.configs.classifier import DenseSpec as _DS
+            h = calib_x
+            if isinstance(cfg.layers[0], _DS):
+                h = h.reshape(h.shape[0], -1)
+            for l in range(p):
+                h = _apply_layer(cfg.layers[l], pruned[l], h,
+                                 last=l == cfg.num_layers - 1)
+            logits = forward_from_layer(params, cfg, h, p)
+            acc = float(jnp.mean(jnp.argmax(logits, -1) == calib_y))
+            if base_accuracy - acc <= budget:
+                return dataclasses.replace(self, retain=retain)
+        return dataclasses.replace(self, retain=1.0)

@@ -1,0 +1,180 @@
+"""The QPART inference-serving server.
+
+Lifecycle (paper Fig. 1–2):
+  1. ``register_model`` stores a pre-trained model + calibration data.
+  2. ``calibrate``   — offline noise calibration: per-layer (s_w, s_x, rho)
+     probes + Delta(a) table (Alg. 1 steps 7–10).
+  3. ``build_offline_store`` — Alg. 1: closed-form bit patterns for 5
+     accuracy levels x all partition points.
+  4. ``serve``       — Alg. 2: pick the stored pattern minimizing the
+     runtime objective for the request's device/channel, quantize the
+     segment, price the plan, and (optionally) measure real accuracy of
+     the partitioned, quantized execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.classifier import ClassifierConfig
+from repro.core import noise as noise_lib
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile, classifier_layer_specs,
+                                   delta_coeff, eps_coeff, xi_coeff)
+from repro.core.partition import split_classifier
+from repro.core.quantizer import fake_quant, round_bits
+from repro.core.solver import (OfflineStore, build_offline_store,
+                               plan_for_partition)
+from repro.models.classifier import (classifier_forward, forward_from_layer,
+                                     layer_activations)
+from repro.serving.simulator import InferenceRequest, ServingResult, simulate_plan
+
+DEFAULT_ACCURACY_LEVELS = (0.001, 0.0025, 0.005, 0.01, 0.02)
+
+
+@dataclasses.dataclass
+class RegisteredModel:
+    cfg: ClassifierConfig
+    params: list
+    calib_x: jnp.ndarray
+    calib_y: jnp.ndarray
+    s_w: np.ndarray = None
+    s_x: np.ndarray = None
+    rho: np.ndarray = None
+    delta_table: dict = None
+    base_accuracy: float = None
+    store: OfflineStore = None
+
+
+class QPARTServer:
+    def __init__(self, server_profile: Optional[ServerProfile] = None,
+                 levels: Sequence[float] = DEFAULT_ACCURACY_LEVELS):
+        self.server = server_profile or ServerProfile()
+        self.levels = tuple(levels)
+        self.models: Dict[str, RegisteredModel] = {}
+
+    # ------------------------------------------------------------------
+    def register_model(self, name: str, cfg: ClassifierConfig, params,
+                       calib_x, calib_y) -> None:
+        self.models[name] = RegisteredModel(cfg, params,
+                                            jnp.asarray(calib_x),
+                                            jnp.asarray(calib_y))
+
+    # ------------------------------------------------------------------
+    # Offline phase (Alg. 1)
+    def calibrate(self, name: str, probe_bits: int = noise_lib.PROBE_BITS) -> None:
+        m = self.models[name]
+        cfg, params = m.cfg, m.params
+        x = m.calib_x
+
+        def apply_fn(p, a, start: int = 0):
+            if start == 0:
+                return classifier_forward(p, cfg, a)
+            return forward_from_layer(p, cfg, a, start)
+
+        acts, logits = layer_activations(params, cfg, x)
+        adv = noise_lib.adversarial_noise_energy(logits)
+        adv_mean = float(jnp.mean(adv))
+
+        L = cfg.num_layers
+        s_w = np.zeros(L)
+        s_x = np.zeros(L)
+        rho = np.zeros(L)
+        n_calib = x.shape[0]
+        for l in range(L):
+            wq = {k: fake_quant(v, probe_bits) for k, v in params[l].items()}
+            noisy = list(params)
+            noisy[l] = wq
+            e_w = float(noise_lib.output_noise_energy(
+                lambda p, a: apply_fn(p, a), params, noisy, x))
+            aq = fake_quant(acts[l], probe_bits)
+            d = apply_fn(params, aq, start=l) - apply_fn(params, acts[l], start=l)
+            e_x = float(jnp.sum(jnp.square(d.astype(jnp.float32))))
+            s_w[l] = e_w / n_calib * 4.0 ** probe_bits
+            s_x[l] = e_x / n_calib * 4.0 ** probe_bits
+            # Eq. 22: mean quantization noise / mean adversarial noise
+            rho[l] = max((0.5 * (e_w + e_x) / n_calib) / adv_mean, 1e-12)
+        m.s_w, m.s_x, m.rho = s_w, s_x, rho
+
+        m.delta_table, m.base_accuracy = noise_lib.calibrate_delta(
+            lambda p, a: apply_fn(p, a), params, x, m.calib_y, rho,
+            targets=self.levels)
+
+    def build_store(self, name: str, device: DeviceProfile, channel: Channel,
+                    weights: ObjectiveWeights) -> None:
+        """Alg. 1 proper: precompute {(b_a^p, p)} for the reference context."""
+        m = self.models[name]
+        specs = classifier_layer_specs(m.cfg)
+        m.store = build_offline_store(
+            levels=self.levels, budgets=m.delta_table,
+            layer_z_w=[sp.z_w for sp in specs],
+            layer_z_x=[sp.z_x for sp in specs],
+            layer_s_w=m.s_w, layer_s_x=m.s_x, layer_rho=m.rho,
+            layer_o=[sp.o for sp in specs],
+            xi=xi_coeff(weights, device), delta_cost=delta_coeff(weights, self.server),
+            eps=eps_coeff(weights, device, channel),
+            input_z=float(np.prod(m.cfg.input_shape)))
+
+    # ------------------------------------------------------------------
+    # Online phase (Alg. 2)
+    def serve(self, req: InferenceRequest, test_x=None, test_y=None) -> ServingResult:
+        m = self.models[req.model]
+        assert m.store is not None, "run calibrate() + build_store() first"
+        specs = classifier_layer_specs(m.cfg, batch=req.batch)
+        xi = xi_coeff(req.weights, req.device)
+        dl = delta_coeff(req.weights, self.server)
+        ep = eps_coeff(req.weights, req.device, req.channel)
+        o = np.array([sp.o for sp in specs])
+        o_cum = np.cumsum(o)
+
+        def runtime_objective(plan):
+            o1 = o_cum[plan.p - 1] if plan.p else 0.0
+            wire = plan.payload_x_bits if req.segment_cached \
+                else plan.payload_bits
+            return xi * o1 + dl * (o_cum[-1] - o1) + ep * wire
+
+        plan = m.store.lookup(req.accuracy_budget, runtime_objective)
+        wire = plan.payload_x_bits if req.segment_cached else plan.payload_bits
+        result = simulate_plan(plan, specs, req.device, self.server,
+                               req.channel, req.weights, payload_bits=wire)
+
+        if test_x is not None:
+            acc = self.execute_partitioned(req.model, plan, test_x, test_y)
+            result.accuracy = acc
+            # degrade vs the SAME test set (base_accuracy is measured on the
+            # calibration split, which may differ in difficulty)
+            base_logits = classifier_forward(m.params, m.cfg, test_x)
+            base_acc = float(jnp.mean(jnp.argmax(base_logits, -1) == test_y))
+            result.accuracy_degradation = base_acc - acc
+        result.extra["bits_w"] = np.asarray(round_bits(plan.bits_w)) if plan.p else []
+        result.extra["bits_x"] = plan.bits_x
+        return result
+
+    # ------------------------------------------------------------------
+    def execute_partitioned(self, name: str, plan, x, y) -> float:
+        """Really run the two segments: device side with quantized weights
+        + quantized cut activation, server side full precision."""
+        m = self.models[name]
+        specs = classifier_layer_specs(m.cfg)
+        seg, server_params = split_classifier(m.params, plan, specs)
+        p = plan.p
+        if p == 0:
+            logits = classifier_forward(m.params, m.cfg, x)
+        else:
+            from repro.configs.classifier import DenseSpec
+            from repro.models.classifier import _apply_layer, _ensure_batched
+            # device: layers 1..p on quantized weights, then quantize the
+            # cut activation for the uplink; server: full-precision tail.
+            h = _ensure_batched(x, m.cfg)
+            if isinstance(m.cfg.layers[0], DenseSpec):
+                h = h.reshape(h.shape[0], -1)
+            for l in range(p):
+                h = _apply_layer(m.cfg.layers[l], seg.params[l], h,
+                                 last=l == m.cfg.num_layers - 1)
+            h = fake_quant(h, int(round_bits(np.array([plan.bits_x]))[0]))
+            logits = forward_from_layer(m.params, m.cfg, h, p)
+        return float(jnp.mean(jnp.argmax(logits, -1) == y))

@@ -1,0 +1,112 @@
+"""Dynamic workload balancing across concurrent requests (the paper's
+title's second half; §VI names global scheduling as the planned extension
+— this is the natural instantiation consistent with the paper's own cost
+model).
+
+Mechanism: the server is a finite resource (MAC/s). Each admitted plan's
+server segment occupies it for ``T_server`` seconds, so later requests in
+the scheduling window see a QUEUE DELAY on their server term. The balancer
+re-prices every candidate (b, p) pattern per request with the CURRENT
+congestion — as the queue grows, Alg. 2's objective naturally shifts work
+toward capable devices (larger p), which is exactly the workload balancing
+the title promises: no new math, the paper's Eq. 17 objective re-evaluated
+under load.
+
+Two policies:
+  * fcfs      — requests priced in arrival order, each seeing the queue
+                left by its predecessors.
+  * balanced  — same, but requests are admitted shortest-server-demand
+                first (SJF-flavoured), which provably reduces the mean
+                queueing term for the same total work.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import (ObjectiveWeights, ServerProfile,
+                                   cost_breakdown, delta_coeff, eps_coeff,
+                                   xi_coeff)
+from repro.serving.simulator import InferenceRequest, ServingResult
+
+
+@dataclasses.dataclass
+class ScheduledResult:
+    request: InferenceRequest
+    result: ServingResult
+    queue_delay: float              # server wait this request experienced
+    start_order: int
+
+
+@dataclasses.dataclass
+class WorkloadBalancer:
+    """Prices a window of requests against one shared server."""
+    server: ServerProfile
+    policy: str = "balanced"        # fcfs | balanced
+
+    def schedule(self, qpart_server, requests: Sequence[InferenceRequest],
+                 ) -> List[ScheduledResult]:
+        order = list(range(len(requests)))
+        if self.policy == "balanced":
+            # shortest-server-demand first, estimated at zero load
+            demands = [self._server_seconds(qpart_server, r, 0.0)
+                       for r in requests]
+            order = list(np.argsort(demands))
+        busy_until = 0.0
+        out = []
+        for rank, idx in enumerate(order):
+            req = requests[idx]
+            res = self._serve_under_load(qpart_server, req, busy_until)
+            t_srv = res.costs.t_server
+            out.append(ScheduledResult(req, res, busy_until, rank))
+            busy_until += t_srv
+        out.sort(key=lambda sr: requests.index(sr.request))
+        return out
+
+    # ------------------------------------------------------------------
+    def _server_seconds(self, srv, req, queue: float) -> float:
+        res = self._serve_under_load(srv, req, queue)
+        return res.costs.t_server
+
+    def _serve_under_load(self, srv, req: InferenceRequest,
+                          queue: float) -> ServingResult:
+        """Alg. 2 with the queue delay added to the server time term."""
+        m = srv.models[req.model]
+        from repro.core.cost_model import classifier_layer_specs
+        specs = classifier_layer_specs(m.cfg, batch=req.batch)
+        o = np.array([sp.o for sp in specs])
+        o_cum = np.cumsum(o)
+        xi = xi_coeff(req.weights, req.device)
+        dl = delta_coeff(req.weights, self.server)
+        ep = eps_coeff(req.weights, req.device, req.channel)
+
+        def objective(plan):
+            o1 = o_cum[plan.p - 1] if plan.p else 0.0
+            o2 = float(o_cum[-1] - o1)
+            wire = plan.payload_x_bits if req.segment_cached \
+                else plan.payload_bits
+            base = xi * o1 + dl * o2 + ep * wire
+            # queueing: the server term waits for the backlog — but only
+            # if this plan uses the server at all
+            wait = req.weights.omega * queue if o2 > 0 else 0.0
+            return base + wait
+
+        plan = m.store.lookup(req.accuracy_budget, objective)
+        wire = plan.payload_x_bits if req.segment_cached else plan.payload_bits
+        o1 = float(o_cum[plan.p - 1]) if plan.p else 0.0
+        o2 = float(o_cum[-1] - o1)
+        costs = cost_breakdown(o1, o2, wire, req.device, self.server,
+                               req.channel)
+        res = ServingResult(plan=plan, costs=costs,
+                            objective=costs.objective(req.weights)
+                            + req.weights.omega * (queue if o2 > 0 else 0.0),
+                            payload_bits=wire)
+        res.extra["queue_delay"] = queue if o2 > 0 else 0.0
+        return res
+
+
+def total_latency(results: List[ScheduledResult]) -> float:
+    return sum(sr.result.costs.t_total + sr.result.extra["queue_delay"]
+               for sr in results)

@@ -1,0 +1,66 @@
+"""Simulation platform (paper §V): executing module + communication module
++ performance module.
+
+The executing module evaluates the two model segments with the device /
+server processing profiles (Table II); the communication module prices the
+wireless transfer of the quantized segment and the cut activation with the
+Shannon-capacity channel (Eq. 13–16); the performance module aggregates
+CostBreakdowns. All timing is analytic (the paper's simulator is too) —
+the *accuracy* numbers, by contrast, come from really executing the
+quantized models in JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.cost_model import (Channel, CostBreakdown, DeviceProfile,
+                                   ObjectiveWeights, ServerProfile,
+                                   cost_breakdown)
+from repro.core.solver import PartitionPlan
+
+
+@dataclasses.dataclass
+class InferenceRequest:
+    """r = (theta, a) + device/channel context (paper §III-A)."""
+    model: str
+    accuracy_budget: float              # max acceptable degradation `a`
+    device: DeviceProfile
+    channel: Channel
+    weights: ObjectiveWeights = dataclasses.field(default_factory=ObjectiveWeights)
+    batch: int = 1
+    # Repeat requester whose device already holds the quantized segment:
+    # the weight share of the wire (Eq. 14 Z_w) amortizes to zero and only
+    # the cut activation Z_x is priced. This is where partitioning beats
+    # p=0 full-offload (the Neurosurgeon regime) — a fresh request always
+    # pays for the model shipment and usually prefers p=0.
+    segment_cached: bool = False
+
+
+@dataclasses.dataclass
+class ServingResult:
+    plan: PartitionPlan
+    costs: CostBreakdown
+    objective: float
+    payload_bits: float
+    accuracy: Optional[float] = None    # measured, when a test set is given
+    accuracy_degradation: Optional[float] = None
+    extra: dict = dataclasses.field(default_factory=dict)
+
+
+def simulate_plan(plan: PartitionPlan, layer_specs, device: DeviceProfile,
+                  server: ServerProfile, channel: Channel,
+                  weights: ObjectiveWeights,
+                  payload_bits: Optional[float] = None) -> ServingResult:
+    """Price an arbitrary (p, payload) pattern — shared by QPART and every
+    baseline so the comparison is apples-to-apples."""
+    o = np.array([sp.o for sp in layer_specs], dtype=np.float64)
+    o1 = float(o[:plan.p].sum())
+    o2 = float(o[plan.p:].sum())
+    pb = plan.payload_bits if payload_bits is None else payload_bits
+    costs = cost_breakdown(o1, o2, pb, device, server, channel)
+    return ServingResult(plan=plan, costs=costs,
+                         objective=costs.objective(weights),
+                         payload_bits=pb)

@@ -1,0 +1,55 @@
+"""Checkpointing: pytree -> flat .npz + msgpack metadata. No orbax in the
+container; this covers save/restore/resume for the training examples."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+SEP = "%%"
+
+
+def _flatten(tree) -> dict:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0,
+                    metadata: dict | None = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_state.npz"), **_flatten(opt_state))
+    meta = {"step": step, **(metadata or {})}
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+
+def _restore_into(template, flat: dict):
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path, leaf in paths:
+        key = SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(path: str, params_template,
+                    opt_state_template=None) -> Tuple[Any, Any, dict]:
+    flat = dict(np.load(os.path.join(path, "params.npz")))
+    params = _restore_into(params_template, flat)
+    opt_state = None
+    opt_file = os.path.join(path, "opt_state.npz")
+    if opt_state_template is not None and os.path.exists(opt_file):
+        opt_state = _restore_into(opt_state_template, dict(np.load(opt_file)))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt_state, meta

@@ -1,0 +1,105 @@
+"""Training step: LM cross-entropy + router aux losses, remat-able,
+pjit-compatible (the launch layer supplies shardings)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def lm_loss(params, cfg, batch, remat: bool = True):
+    """batch: {tokens | embeds, labels[, positions]} — embeds is the
+    frontend-stub path (audio/VLM backbones), positions carries M-RoPE
+    triples when present."""
+    logits, aux = T.forward(params, cfg, batch.get("tokens"),
+                            embeds=batch.get("embeds"),
+                            positions=batch.get("positions"), remat=remat)
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    xent = jnp.mean(logz - gold)
+    zloss = 1e-4 * jnp.mean(jnp.square(logz))
+    total = xent + zloss
+    if cfg.moe is not None:
+        total = total + cfg.moe.aux_loss_weight * aux["lb_loss"] \
+            + 1e-3 * aux["z_loss"]
+    metrics = {"xent": xent, "zloss": zloss,
+               "dropped_frac": aux["dropped_frac"]}
+    return total, metrics
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, remat: bool = True,
+                    accum_steps: int = 1):
+    """accum_steps > 1 scans over microbatches (global_batch must divide):
+    live activation memory scales with the microbatch while the gradient
+    buffer is accumulated in f32 — the §Perf lever that brings the 72B
+    train_4k temp footprint under HBM (EXPERIMENTS.md §Perf pair B)."""
+    def grads_of(params, batch):
+        return jax.value_and_grad(lm_loss, has_aux=True)(
+            params, cfg, batch, remat)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            # split the batch as (B/A, A) then move A to front: this split
+            # keeps each microbatch's batch rows aligned with the data-axis
+            # sharding (an (A, B/A) reshape interleaves shards and forces
+            # GSPMD to reshard every microbatch — measured 16x collective
+            # blowup on the 72B train_4k dry-run, EXPERIMENTS.md §Perf B)
+            def split(t):
+                a = accum_steps
+                t = t.reshape((t.shape[0] // a, a) + t.shape[1:])
+                return jnp.swapaxes(t, 0, 1)
+
+            micro = {k: split(v) for k, v in batch.items()
+                     if k != "positions"}
+            # positions (3, B, S) carry the batch on axis 1
+            if "positions" in batch:
+                pos = batch["positions"]
+                pos = pos.reshape(3, pos.shape[1] // accum_steps, accum_steps,
+                                  pos.shape[-1])
+                micro["positions"] = pos.transpose(2, 0, 1, 3)
+
+            def accum(carry, mb):
+                g_acc, l_acc, m_acc = carry
+                (loss, metrics), grads = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss,
+                        jax.tree.map(jnp.add, m_acc, metrics)), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"xent": jnp.zeros((), jnp.float32),
+                  "zloss": jnp.zeros((), jnp.float32),
+                  "dropped_frac": jnp.zeros((), jnp.float32)}
+            (grads, loss, metrics), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros((), jnp.float32), m0), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss / accum_steps
+            metrics = jax.tree.map(lambda m: m / accum_steps, metrics)
+        params, opt_state, opt_metrics = adamw_update(
+            opt_cfg, params, grads, opt_state)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        _, metrics = lm_loss(params, cfg, batch, remat=False)
+        return metrics
+
+    return eval_step
+
+
+def init_train_state(key, cfg):
+    params = T.init_params(key, cfg)
+    return params, init_opt_state(params)

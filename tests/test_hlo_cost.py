@@ -1,0 +1,145 @@
+"""Loop-aware HLO cost parser tests: the roofline numbers are only as good
+as this parser, so it gets its own ground-truth suite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import (HloCostModel, _type_bytes, analyze_text,
+                                     parse_computations)
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+class TestTypeParsing:
+    def test_type_bytes(self):
+        assert _type_bytes("f32[256,256]{1,0}") == 256 * 256 * 4
+        assert _type_bytes("bf16[8,16]{1,0}") == 8 * 16 * 2
+        assert _type_bytes("(s32[], f32[4,4]{1,0})") == 4 + 64
+        assert _type_bytes("pred[]") == 1
+
+
+class TestFlops:
+    def test_plain_matmul(self):
+        a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+        b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+        c = _compile(lambda x, y: x @ y, a, b)
+        s = analyze_text(c.as_text())
+        expect = 2 * 128 * 256 * 64
+        assert abs(s.flops - expect) / expect < 0.05
+
+    def test_scan_scales_by_trip_count(self):
+        a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+        def f(x, w):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+
+        c = _compile(f, a, a)
+        s = analyze_text(c.as_text())
+        expect = 7 * 2 * 128 ** 3
+        assert abs(s.flops - expect) / expect < 0.05
+
+    def test_nested_scans_multiply(self):
+        a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+        def f(x, w):
+            def outer(h, _):
+                def inner(g, _):
+                    return g @ w, None
+                g, _ = jax.lax.scan(inner, h, None, length=3)
+                return g, None
+            out, _ = jax.lax.scan(outer, x, None, length=5)
+            return out
+
+        c = _compile(f, a, a)
+        s = analyze_text(c.as_text())
+        expect = 15 * 2 * 64 ** 3
+        assert abs(s.flops - expect) / expect < 0.05
+
+    def test_grad_of_scan_counts_fwd_plus_bwd(self):
+        a = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+        x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+
+        def loss(params, xx):
+            def body(h, w):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, xx, params)
+            return jnp.sum(h * h)
+
+        c = _compile(lambda p, xx: jax.grad(loss)(p, xx), a, x)
+        s = analyze_text(c.as_text())
+        expect = 3 * 4 * 2 * 32 * 64 * 64      # fwd + dgrad + wgrad
+        assert 0.8 < s.flops / expect < 1.3
+
+
+class TestCollectives:
+    def test_tp_matmul_psum(self):
+        import os
+        if len(jax.devices()) < 2:
+            pytest.skip("needs >1 device (run via dryrun env for full check)")
+
+    def test_collective_parsing_from_text(self):
+        text = """
+HloModule m
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  ROOT %ar = f32[64,64]{1,0} all-reduce(%a), to_apply=%add
+}
+"""
+        s = analyze_text(text)
+        assert s.collectives.get("all-reduce") == 64 * 64 * 4
+
+    def test_while_scales_collectives(self):
+        text = """
+HloModule m
+
+%body (t: (s32[], f32[32])) -> (s32[], f32[32]) {
+  %t = (s32[], f32[32]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %x = f32[32]{0} get-tuple-element(%t), index=1
+  %ag = f32[32]{0} all-gather(%x), dimensions={0}
+  ROOT %r = (s32[], f32[32]{0}) tuple(%i, %ag)
+}
+
+%cond (t: (s32[], f32[32])) -> pred[] {
+  %t = (s32[], f32[32]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%t), index=0
+  %c = s32[] constant(9)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+ENTRY %main (a: f32[32]) -> f32[32] {
+  %a = f32[32]{0} parameter(0)
+  %z = s32[] constant(0)
+  %tup = (s32[], f32[32]{0}) tuple(%z, %a)
+  %w = (s32[], f32[32]{0}) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"9"}}
+  ROOT %o = f32[32]{0} get-tuple-element(%w), index=1
+}
+"""
+        s = analyze_text(text)
+        assert s.collectives.get("all-gather") == 9 * 32 * 4
+
+
+class TestStructure:
+    def test_parse_computations_finds_entry(self):
+        def f(x):
+            return jnp.sum(x * x)
+        c = _compile(f, jax.ShapeDtypeStruct((64,), jnp.float32))
+        comps, entry = parse_computations(c.as_text())
+        assert entry in comps
+        assert len(comps) >= 1
+
+    def test_fusion_bytes_at_boundary_only(self):
+        """A fused elementwise chain charges boundary bytes, not per-op."""
+        def f(x):
+            return jnp.tanh(jnp.exp(x) * 2.0 + 1.0)
+        c = _compile(f, jax.ShapeDtypeStruct((1024,), jnp.float32))
+        s = analyze_text(c.as_text())
+        # boundary = in + out = 2 * 4KB (+ small constants); allow 3x slack
+        assert s.bytes < 3 * 2 * 1024 * 4

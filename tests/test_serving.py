@@ -1,0 +1,158 @@
+"""End-to-end QPART serving tests (paper §V claims, scaled down):
+calibrate -> offline store -> online serve -> measured accuracy degradation
+within budget, payload reduced vs f32, QPART beats the no-opt baseline on
+the objective at matched accuracy."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.classifier import MNIST_MLP
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile, classifier_layer_specs)
+from repro.data.pipeline import minibatches, synthetic_mnist
+from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.baselines import (AutoencoderBaseline, PruningBaseline,
+                                     no_opt_offload)
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+
+
+@pytest.fixture(scope="module")
+def trained_mnist():
+    x_tr, y_tr, x_te, y_te = synthetic_mnist(n_train=4096, n_test=1024)
+    params = init_classifier(jax.random.key(0), MNIST_MLP)
+
+    def loss_fn(p, x, y):
+        lg = classifier_forward(p, MNIST_MLP, x)
+        return -jnp.mean(jax.nn.log_softmax(lg)[jnp.arange(len(y)), y])
+
+    @jax.jit
+    def step(p, x, y):
+        _, g = jax.value_and_grad(loss_fn)(p, x, y)
+        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+
+    it = minibatches(x_tr, y_tr, 128)
+    for _ in range(400):
+        bx, by = next(it)
+        params = step(params, bx, by)
+    return params, (x_tr, y_tr, x_te, y_te)
+
+
+@pytest.fixture(scope="module")
+def served(trained_mnist):
+    params, (x_tr, y_tr, x_te, y_te) = trained_mnist
+    srv = QPARTServer()
+    srv.register_model("mnist", MNIST_MLP, params, x_tr[:512], y_tr[:512])
+    srv.calibrate("mnist")
+    dev, ch, w = DeviceProfile(), Channel(), ObjectiveWeights()
+    srv.build_store("mnist", dev, ch, w)
+    return srv, (dev, ch, w), (x_te, y_te)
+
+
+class TestQPARTEndToEnd:
+    def test_base_accuracy_reasonable(self, served):
+        srv, _, _ = served
+        assert srv.models["mnist"].base_accuracy > 0.9
+
+    def test_degradation_within_budget(self, served):
+        srv, (dev, ch, w), (x_te, y_te) = served
+        for budget in (0.005, 0.01, 0.02):
+            res = srv.serve(InferenceRequest("mnist", budget, dev, ch, w),
+                            jnp.asarray(x_te), y_te)
+            # Delta calibration is statistical; allow 2x slack + noise floor
+            assert res.accuracy_degradation <= 2 * budget + 0.01, \
+                (budget, res.accuracy_degradation)
+
+    def test_noise_profile_calibrated(self, served):
+        srv, _, _ = served
+        m = srv.models["mnist"]
+        assert np.all(m.s_w > 0) and np.all(m.rho > 0)
+        assert len(m.s_w) == MNIST_MLP.num_layers
+
+    def test_payload_reduced_vs_f32_when_on_device(self, served):
+        """Fig. 3: when the plan keeps layers on-device the quantized wire
+        size must be way below the f32 wire size of the same segment."""
+        srv, (dev, ch, w), (x_te, y_te) = served
+        m = srv.models["mnist"]
+        specs = classifier_layer_specs(MNIST_MLP)
+        # force evaluation of every stored partition pattern
+        for (a, p), plan in m.store.plans.items():
+            if p == 0:
+                continue
+            f32_wire = sum(specs[i].z_w for i in range(p)) * 32.0 \
+                + specs[p - 1].z_x * 32.0
+            assert plan.payload_bits < f32_wire
+            # paper claims >80% payload reduction at the lax budgets
+            if a >= 0.01:
+                assert plan.payload_bits < 0.5 * f32_wire, (a, p)
+
+    def test_bits_monotone_in_budget(self, served):
+        """Tighter accuracy budgets must never use fewer bits."""
+        srv, _, _ = served
+        m = srv.models["mnist"]
+        p = 3
+        tight = m.store.plans[(0.001, p)].bits_w
+        loose = m.store.plans[(0.02, p)].bits_w
+        assert np.all(tight >= loose - 1e-9)
+
+    def test_quantized_execution_runs(self, served):
+        srv, (dev, ch, w), (x_te, y_te) = served
+        res = srv.serve(InferenceRequest("mnist", 0.01, dev, ch, w),
+                        jnp.asarray(x_te), y_te)
+        assert res.accuracy is not None and res.accuracy > 0.8
+        assert res.objective > 0
+
+
+class TestBaselines:
+    def test_no_opt_keeps_base_accuracy(self, trained_mnist):
+        params, (x_tr, y_tr, x_te, y_te) = trained_mnist
+        specs = classifier_layer_specs(MNIST_MLP)
+        dev, srv_p, ch, w = (DeviceProfile(), ServerProfile(), Channel(),
+                             ObjectiveWeights())
+        res = no_opt_offload(params, MNIST_MLP, specs, 3, dev, srv_p, ch, w,
+                             jnp.asarray(x_te), y_te)
+        base = float(jnp.mean(jnp.argmax(
+            classifier_forward(params, MNIST_MLP, jnp.asarray(x_te)), -1)
+            == y_te))
+        assert res.accuracy == pytest.approx(base)
+
+    def test_autoencoder_compresses_but_perturbs(self, trained_mnist):
+        params, (x_tr, y_tr, x_te, y_te) = trained_mnist
+        specs = classifier_layer_specs(MNIST_MLP)
+        dev, srv_p, ch, w = (DeviceProfile(), ServerProfile(), Channel(),
+                             ObjectiveWeights())
+        ae = AutoencoderBaseline(code_ratio=0.25)
+        res = ae.offload(params, MNIST_MLP, specs, 2, jnp.asarray(x_tr[:512]),
+                         dev, srv_p, ch, w, jnp.asarray(x_te), y_te)
+        assert res.accuracy is not None and res.accuracy > 0.5
+        assert res.extra["code_dim"] == int(0.25 * 256)
+
+    def test_pruning_calibration_meets_budget(self, trained_mnist):
+        params, (x_tr, y_tr, x_te, y_te) = trained_mnist
+        specs = classifier_layer_specs(MNIST_MLP)
+        base = float(jnp.mean(jnp.argmax(
+            classifier_forward(params, MNIST_MLP, jnp.asarray(x_tr[:1024])),
+            -1) == y_tr[:1024]))
+        pb = PruningBaseline().calibrated(
+            params, MNIST_MLP, specs, 3, jnp.asarray(x_tr[:1024]),
+            y_tr[:1024], budget=0.02, base_accuracy=base)
+        assert 0.0 < pb.retain <= 1.0
+
+    def test_qpart_beats_no_opt_objective(self, served, trained_mnist):
+        """Fig. 7: at every partition point the QPART pattern's objective
+        is below the f32 no-opt objective (quantization only reduces the
+        payload term; compute terms are identical)."""
+        srv, (dev, ch, w), _ = served
+        params, _ = trained_mnist
+        specs = classifier_layer_specs(MNIST_MLP)
+        m = srv.models["mnist"]
+        from repro.serving.simulator import simulate_plan
+        for p in range(1, MNIST_MLP.num_layers + 1):
+            qp = m.store.plans[(0.01, p)]
+            q_res = simulate_plan(qp, specs, dev, ServerProfile(), ch, w)
+            n_res = no_opt_offload(params, MNIST_MLP, specs, p, dev,
+                                   ServerProfile(), ch, w)
+            assert q_res.objective < n_res.objective, p

@@ -1,0 +1,130 @@
+"""Sharding-rule metadata tests: every parameter / cache / batch spec must
+(1) cover the exact tree structure and (2) request only divisible shards —
+the invariant that made the 40x2-mesh dry-run pass. Pure metadata: no
+multi-device mesh is created here (smoke env has one CPU device)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ASSIGNED_ARCHS, INPUT_SHAPES, for_shape, get_config
+from repro.launch import sharding as shard_lib
+from repro.launch.mesh import MODEL_AXIS
+from repro.launch.steps import batch_specs, cache_specs, param_specs
+
+MODEL_SIZE = 16            # production model-axis extent
+
+
+class FakeMesh:
+    """Just enough mesh interface for the pspec builders."""
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": MODEL_SIZE}
+
+
+def _check_divisible(specs, pspecs, msize=MODEL_SIZE, dsize=16):
+    leaves_s = jax.tree.leaves(specs)
+    leaves_p = jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves_s) == len(leaves_p)
+    for sds, spec in zip(leaves_s, leaves_p):
+        for dim, axis in enumerate(spec):
+            if axis is None:
+                continue
+            size = msize if axis == MODEL_AXIS else dsize
+            if isinstance(axis, tuple):
+                size = int(np.prod([
+                    msize if a == MODEL_AXIS else dsize for a in axis]))
+            assert sds.shape[dim] % size == 0, \
+                (sds.shape, spec, dim, axis)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_pspecs_cover_and_divide(arch):
+    cfg = get_config(arch)
+    p = param_specs(cfg)
+    specs = shard_lib.param_pspecs(cfg, p, mesh=FakeMesh())
+    _check_divisible(p, specs)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_pspecs_cover_and_divide(arch, shape_name):
+    cfg = for_shape(get_config(arch), INPUT_SHAPES[shape_name])
+    shape = INPUT_SHAPES[shape_name]
+    c = cache_specs(cfg, shape.global_batch, shape.seq_len)
+    specs = shard_lib.cache_pspecs(cfg, c, FakeMesh(), shape.global_batch)
+    _check_divisible(c, specs)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_batch_pspecs(arch):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES["train_4k"]
+    b = batch_specs(cfg, shape)
+    specs = shard_lib.batch_pspecs(
+        FakeMesh(), shape.global_batch,
+        has_embeds="embeds" in b, has_positions="positions" in b)
+    assert set(specs) == set(b)
+    _check_divisible(b, {k: specs[k] for k in b})
+
+
+def test_fsdp_only_adds_data_axis():
+    cfg = get_config("qwen2-vl-72b")
+    p = param_specs(cfg)
+    base = shard_lib.param_pspecs(cfg, p, mesh=FakeMesh())
+    fsdp = shard_lib.param_pspecs(cfg, p, fsdp=True, mesh=FakeMesh())
+    for b, f, leaf in zip(jax.tree.leaves(base, is_leaf=lambda x: isinstance(x, P)),
+                          jax.tree.leaves(fsdp, is_leaf=lambda x: isinstance(x, P)),
+                          jax.tree.leaves(p)):
+        # fsdp spec must keep every model-axis assignment of the base spec
+        bl = list(b) + [None] * (leaf.ndim - len(b))
+        fl = list(f) + [None] * (leaf.ndim - len(f))
+        for d in range(leaf.ndim):
+            if bl[d] is not None:
+                assert fl[d] == bl[d]
+            if fl[d] is not None and bl[d] is None:
+                assert leaf.shape[d] % 16 == 0
+
+
+def test_padded_heads_always_divisible():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        if not cfg.num_heads:
+            continue
+        kvp, gp = cfg.padded_heads()
+        assert (kvp * gp) % cfg.tp_pad == 0
+        assert kvp >= cfg.num_kv_heads
+        assert gp >= cfg.num_heads // cfg.num_kv_heads
+
+
+def test_padded_vocab_divisible():
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        assert cfg.padded_vocab() % cfg.tp_pad == 0
+        assert cfg.padded_vocab() >= cfg.vocab_size
+        assert cfg.padded_vocab() - cfg.vocab_size < cfg.tp_pad
+
+
+def test_long_500k_subquadratic_for_all():
+    """Dense/MoE archs must pick up a sliding window for long_500k; SSM
+    and hybrid run natively (DESIGN.md §4)."""
+    shape = INPUT_SHAPES["long_500k"]
+    for arch in ASSIGNED_ARCHS:
+        cfg = for_shape(get_config(arch), shape)
+        if cfg.attn_every >= 1:
+            assert cfg.sliding_window is not None
+            assert cfg.sliding_window < shape.seq_len
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quantized_param_pspecs_cover_and_divide(bits):
+    """int8/int4 serving trees: codes shard like their weight, scale/mu
+    replicate, and every sharded dim still divides the mesh."""
+    import jax.numpy as jnp
+    from repro.core.quantizer import quantize_params_for_serving
+    cfg = get_config("qwen3-14b")
+    p = param_specs(cfg)
+    qp = jax.eval_shape(lambda pp: quantize_params_for_serving(pp, bits), p)
+    specs = shard_lib.param_pspecs(cfg, qp, mesh=FakeMesh())
+    _check_divisible(qp, specs)

@@ -1,0 +1,158 @@
+"""Closed-form solver tests (paper Eq. 23–40): KKT water-filling
+properties, constraint satisfaction, joint (b, p) search, offline store."""
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core.solver import (OfflineStore, SegmentItems, build_offline_store,
+                               plan_for_partition, solve_joint, waterfill_bits)
+
+LN4 = np.log(4.0)
+
+
+def _items(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return SegmentItems(
+        z=rng.uniform(1e3, 1e6, n),
+        s=rng.uniform(1e-2, 1e2, n),
+        rho=rng.uniform(1e-3, 1e1, n),
+    )
+
+
+class TestWaterfill:
+    def test_constraint_satisfied(self):
+        it = _items(6)
+        for delta in (1e-3, 1e-1, 10.0):
+            sol = waterfill_bits(it, delta)
+            assert sol.psi_total <= delta * (1 + 1e-9) or \
+                np.all(sol.bits == 16.0)   # infeasible -> clamped at b_max
+
+    def test_equal_marginal_condition(self):
+        """Eq. 39: z_i rho_i / (s_i e^{-ln4 b_i}) equal across free items."""
+        it = _items(8, seed=2)
+        sol = waterfill_bits(it, delta=0.05)
+        free = (sol.bits > 2.0 + 1e-9) & (sol.bits < 16.0 - 1e-9)
+        if free.sum() >= 2:
+            marg = it.z[free] * it.rho[free] / (
+                it.s[free] * np.exp(-LN4 * sol.bits[free]))
+            assert np.allclose(marg, marg[0], rtol=1e-6)
+
+    def test_tighter_budget_means_more_bits(self):
+        it = _items(5, seed=3)
+        loose = waterfill_bits(it, delta=1.0)
+        tight = waterfill_bits(it, delta=1e-3)
+        assert np.all(tight.bits >= loose.bits - 1e-9)
+        assert tight.payload_bits >= loose.payload_bits
+
+    def test_noisier_layer_gets_more_bits(self):
+        """Two identical items except s: the higher-noise-scale item must
+        receive at least as many bits (it hurts accuracy more per bit)."""
+        it = SegmentItems(z=np.array([1e4, 1e4]),
+                          s=np.array([1.0, 100.0]),
+                          rho=np.array([1.0, 1.0]))
+        sol = waterfill_bits(it, delta=0.01)
+        assert sol.bits[1] > sol.bits[0]
+
+    def test_bigger_payload_item_gets_fewer_bits(self):
+        it = SegmentItems(z=np.array([1e3, 1e6]),
+                          s=np.array([1.0, 1.0]),
+                          rho=np.array([1.0, 1.0]))
+        sol = waterfill_bits(it, delta=0.01)
+        assert sol.bits[1] < sol.bits[0]
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(1, 12), seed=st.integers(0, 9999),
+       delta=st.floats(1e-4, 10.0))
+def test_property_waterfill_feasible_and_clamped(n, seed, delta):
+    it = _items(n, seed=seed)
+    sol = waterfill_bits(it, delta)
+    assert np.all(sol.bits >= 2.0 - 1e-9)
+    assert np.all(sol.bits <= 16.0 + 1e-9)
+    # achieved noise never exceeds the budget unless fully clamped at b_max
+    if not np.allclose(sol.bits, 16.0):
+        assert sol.psi_total <= delta * (1 + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 9999))
+def test_property_joint_solution_beats_endpoints(seed):
+    """The joint optimum is no worse than always-local or always-server."""
+    rng = np.random.default_rng(seed)
+    L = 6
+    z_w = rng.uniform(1e3, 1e5, L)
+    z_x = rng.uniform(1e2, 1e4, L)
+    s = rng.uniform(1e-2, 1e1, L)
+    rho = rng.uniform(1e-2, 1e1, L)
+    o = rng.uniform(1e5, 1e7, L)
+    best, plans = solve_joint(z_w, z_x, s, s, rho, o,
+                              xi=1e-8, delta_cost=1e-9, eps=1e-8,
+                              psi_budget=0.01, input_z=784.0)
+    objs = [p.objective for p in plans]
+    assert best.objective == min(objs)
+    assert len(plans) == L + 1           # p = 0..L
+
+
+class TestOfflineStore:
+    def _store(self):
+        L = 4
+        rng = np.random.default_rng(0)
+        z_w = rng.uniform(1e3, 1e5, L)
+        z_x = rng.uniform(1e2, 1e4, L)
+        s = rng.uniform(1e-2, 1e1, L)
+        rho = rng.uniform(1e-2, 1e1, L)
+        o = rng.uniform(1e5, 1e7, L)
+        levels = (0.001, 0.005, 0.01, 0.02, 0.05)
+        budgets = {a: a * 10 for a in levels}
+        return build_offline_store(levels, budgets, z_w, z_x, s, s, rho, o,
+                                   xi=1e-8, delta_cost=1e-9, eps=1e-8,
+                                   input_z=784.0), levels
+
+    def test_store_covers_all_levels_and_partitions(self):
+        store, levels = self._store()
+        assert len(store.plans) == len(levels) * 5      # p = 0..4
+
+    def test_lookup_respects_accuracy_budget(self):
+        """Alg. 2 step 1: chosen level never exceeds the request's a."""
+        store, levels = self._store()
+        obj = lambda plan: plan.objective
+        for a in (0.0012, 0.006, 0.03, 0.2):
+            plan = store.lookup(a, obj)
+            lv = [k[0] for k, v in store.plans.items() if v is plan][0]
+            assert lv <= a or lv == min(levels)
+
+    def test_lookup_minimizes_runtime_objective(self):
+        store, levels = self._store()
+        # a runtime objective preferring maximal offload (p small)
+        obj = lambda plan: plan.p
+        plan = store.lookup(0.01, obj)
+        assert plan.p == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), delta=st.floats(1e-3, 1.0))
+def test_property_waterfill_beats_brute_force_grid(seed, delta):
+    """The closed-form KKT solution must (weakly) beat a dense grid search
+    over feasible bit vectors — the optimality claim of Eq. 27/39/40."""
+    rng = np.random.default_rng(seed)
+    n = 2
+    it = SegmentItems(z=rng.uniform(1e3, 1e5, n),
+                      s=rng.uniform(1e-1, 1e1, n),
+                      rho=rng.uniform(1e-2, 1e0, n))
+    sol = waterfill_bits(it, delta)
+    if np.allclose(sol.bits, 16.0):      # infeasible budget: nothing to check
+        return
+    grid = np.arange(2.0, 16.01, 0.05)
+    best_payload = np.inf
+    for b0 in grid:
+        # for fixed b0, the cheapest feasible b1 is determined analytically
+        rem = delta - it.s[0] / it.rho[0] * np.exp(-np.log(4.0) * b0)
+        if rem <= 0:
+            continue
+        b1 = max(-np.log(rem * it.rho[1] / it.s[1]) / np.log(4.0), 2.0)
+        if b1 > 16.0:
+            continue
+        best_payload = min(best_payload, b0 * it.z[0] + b1 * it.z[1])
+    if np.isfinite(best_payload):
+        assert sol.payload_bits <= best_payload * (1 + 1e-3)
