@@ -16,7 +16,8 @@ BENCHES = {}
 
 
 def _register():
-    from benchmarks import kernel_bench, paper_tables, roofline_report
+    from benchmarks import (kernel_bench, paper_tables, planner_bench,
+                            roofline_report)
     BENCHES.update({
         "fig3_payload": paper_tables.payload,
         "fig5_layerwise": paper_tables.layerwise_cost,
@@ -24,6 +25,7 @@ def _register():
         "fig7_10_baselines": paper_tables.baselines,
         "table4_multimodel": paper_tables.multimodel,
         "kernels": kernel_bench.kernels,
+        "planner": planner_bench.planner,
         "roofline": roofline_report.roofline,
     })
 

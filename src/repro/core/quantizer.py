@@ -25,9 +25,13 @@ def qrange(x):
 
 
 def quantize(x, bits: int, mu=None, phi=None):
-    """-> (codes int32, scale, mu). codes in [0, 2^bits - 1]."""
+    """-> (codes int32, scale, mu). codes in [0, 2^bits - 1]. Either end
+    of the grid may be pinned by the caller; the other defaults to the
+    tensor's own range."""
     if mu is None:
-        mu, phi = qrange(x)
+        mu = jnp.min(x)
+    if phi is None:
+        phi = jnp.max(x)
     levels = (1 << int(bits)) - 1
     scale = jnp.maximum((phi - mu) / levels, 1e-12)
     codes = jnp.clip(jnp.round((x - mu) / scale), 0, levels).astype(jnp.int32)
@@ -73,47 +77,106 @@ def payload_bits(num_elements: int, bits) -> jnp.ndarray:
     return num_elements * bits + 2 * 32
 
 
-def quantize_stacked(leaf, bits: int = 8):
+def quantize_stacked(leaf, bits: int = 8, per_channel: bool = True,
+                     use_pallas=None):
     """Real int8/int4-code quantization of a stacked (num_periods, ...)
-    weight: per-period scale/zero (axis-0 granularity). Returns the wire
-    representation ``{"codes", "scale", "mu"}`` the serving path stores in
-    HBM and dequantizes at block entry (transformer._dequant_block).
+    weight. Granularity: per-period AND (by default) per-output-column —
+    scale/mu keep the leading period axis and the trailing channel axis,
+    e.g. (P, 1, N) for a (P, K, N) leaf. Returns the wire representation
+    ``{"codes", "scale", "mu"}`` the serving path stores in HBM and
+    dequantizes at block entry (transformer._dequant_block); a period
+    slice (``codes[i]``, ``scale[i]``, ``mu[i]``) feeds the per-channel
+    Pallas qmatmul kernels directly (DESIGN.md §4).
+
+    Metadata footprint: per-channel carries 2·32·N header bits per
+    period vs the per-tensor 64 — a 64/(K·b) relative overhead (~3% for
+    a 512-row int4 layer, ~0.4% int8). ``payload_bits`` and the
+    planner's Eq. 14 accounting model the per-tensor header; pass
+    ``per_channel=False`` where exact wire-size accounting outweighs
+    the accuracy gain.
 
     bits <= 4 packs two codes per byte on the last dim (the qmatmul4
     kernel's wire layout: low nibble = even column) — the HBM weight
-    footprint really halves vs int8."""
-    axes = tuple(range(1, leaf.ndim))
+    footprint really halves vs int8. On TPU the quantize and the pack run
+    as ONE fused Pallas pass per period (kernels.quantize_pack4_pallas)
+    instead of materializing int8 codes and strided-slicing them;
+    ``use_pallas`` requests the path (None = auto: TPU backend only) but
+    leaves whose K/N don't tile the kernel blocks fall back to the jnp
+    pack — same bytes, just not fused."""
+    if per_channel and leaf.ndim >= 3:
+        axes = tuple(range(1, leaf.ndim - 1))     # keep periods + channels
+    else:
+        axes = tuple(range(1, leaf.ndim))
     mu = jnp.min(leaf, axis=axes, keepdims=True)
     phi = jnp.max(leaf, axis=axes, keepdims=True)
     levels = (1 << int(bits)) - 1
     scale = jnp.maximum((phi - mu) / levels, 1e-12)
-    codes = jnp.clip(jnp.round((leaf - mu) / scale), 0, levels)
-    codes = codes.astype(jnp.uint8)
     meta = {"scale": scale.astype(jnp.float32),
             "mu": mu.astype(jnp.float32)}
     if bits <= 4 and leaf.shape[-1] % 2 == 0:
         # key name encodes the packing (static pytree structure, so the
         # dequant site can branch without tracing a flag)
-        return {"codes_packed": codes[..., 0::2] | (codes[..., 1::2] << 4),
-                **meta}
-    return {"codes": codes, **meta}
+        return {"codes_packed": _pack4(leaf, meta["scale"], meta["mu"],
+                                       use_pallas), **meta}
+    codes = jnp.clip(jnp.round((leaf - mu) / scale), 0, levels)
+    return {"codes": codes.astype(jnp.uint8), **meta}
+
+
+def _pack4(leaf, scale, mu, use_pallas):
+    """Quantize to 4-bit codes and pack nibble pairs. Routes 2-D period
+    slices through the fused Pallas kernel when possible; otherwise the
+    jnp strided-slice fallback (also the interpret-mode oracle)."""
+    from repro.kernels import ops  # late import: kernels pull in pallas
+    from repro.kernels.quantize import DEFAULT_BLOCK
+
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    k, n = (leaf.shape[-2], leaf.shape[-1]) if leaf.ndim >= 3 else (0, 0)
+    bm, bn = DEFAULT_BLOCK       # mirror quantize_pack4_pallas's asserts
+    tileable = leaf.ndim >= 3 and k > 0 and \
+        k % min(bm, k) == 0 and n % min(bn, n) == 0 and \
+        min(bn, n) % 2 == 0
+    if use_pallas and tileable:
+        lead = leaf.shape[:-2]
+        flat = leaf.reshape((-1,) + leaf.shape[-2:])
+        n_sc = scale.shape[-1]
+        s2 = jnp.broadcast_to(scale, lead + (1, n_sc)).reshape(-1, 1, n_sc)
+        m2 = jnp.broadcast_to(mu, lead + (1, n_sc)).reshape(-1, 1, n_sc)
+        # one batched dispatch over the period axis, not P kernel launches
+        packed = jax.vmap(ops.quantize_pack4)(flat, s2, m2)
+        return packed.reshape(lead + packed.shape[-2:])
+    codes = jnp.clip(jnp.round((leaf - mu) / scale), 0, 15).astype(jnp.uint8)
+    return codes[..., 0::2] | (codes[..., 1::2] << 4)
+
+
+def stacked_wire_bits(q) -> int:
+    """EXACT wire/HBM size in bits of a ``quantize_stacked`` struct —
+    codes plus the real scale/zero metadata (which, per-channel, is
+    2·32·N per period rather than the 64-bit header ``payload_bits``
+    models). Use this when accounting for what serving actually ships."""
+    codes = q["codes_packed"] if "codes_packed" in q else q["codes"]
+    return int(codes.size) * 8 + 32 * (int(q["scale"].size)
+                                       + int(q["mu"].size))
 
 
 QUANTIZABLE = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
                "w_z", "w_x", "w_out", "w_B", "w_C", "w_dt")
 
 
-def quantize_params_for_serving(params, bits: int = 8):
+def quantize_params_for_serving(params, bits: int = 8,
+                                per_channel: bool = True):
     """Quantize every big block weight of a transformer param tree (the
     QPART device-segment quantization applied to the whole serving stack:
-    weights live int8 in HBM, cutting the decode memory-roofline term)."""
+    weights live int8 in HBM, cutting the decode memory-roofline term).
+    ``per_channel`` follows quantize_stacked: better accuracy for a
+    2·32·N-bit-per-period metadata footprint (see its docstring)."""
     def walk(node, under_blocks=False):
         if isinstance(node, dict):
             out = {}
             for k, v in node.items():
                 if under_blocks and k in QUANTIZABLE and hasattr(v, "ndim") \
                         and v.ndim >= 3:
-                    out[k] = quantize_stacked(v, bits)
+                    out[k] = quantize_stacked(v, bits, per_channel=per_channel)
                 else:
                     out[k] = walk(v, under_blocks)
             return out

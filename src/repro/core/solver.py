@@ -22,12 +22,23 @@ and  b_i = log4( s_i ln4 lambda / (eps z_i rho_i) ). Items whose optimal
 bit-width falls outside [b_min, b_max] are clamped and the multiplier is
 re-solved on the active set (standard water-filling iteration; at most
 n_items rounds).
+
+Two execution forms of the same math (DESIGN.md §2):
+
+  * ``waterfill_bits``       — scalar reference, one partition point.
+  * ``waterfill_bits_batch`` — all partition points of an accuracy level
+    as one (L, L+1) masked-matrix program: row r holds the ragged item
+    set of partition p=r+1 (weights 1..p + the cut activation) and the
+    active-set clamping iterates batched across the p axis. This is what
+    ``build_offline_store`` / ``solve_joint`` run by default, turning
+    Alg. 1 from O(levels × L) separate Python solves into O(levels)
+    array programs.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -53,7 +64,8 @@ class BitSolution:
 
 def waterfill_bits(items: SegmentItems, delta: float,
                    b_min: float = 2.0, b_max: float = 16.0) -> BitSolution:
-    """Equal-marginal closed form with active-set clamping."""
+    """Equal-marginal closed form with active-set clamping (scalar
+    reference; the batched twin is ``waterfill_bits_batch``)."""
     z = np.asarray(items.z, dtype=np.float64)
     s = np.asarray(items.s, dtype=np.float64)
     rho = np.asarray(items.rho, dtype=np.float64)
@@ -63,6 +75,9 @@ def waterfill_bits(items: SegmentItems, delta: float,
     free = np.ones(n, dtype=bool)
     bits = np.zeros(n)
     budget = delta
+    # lam stays +inf when the budget is infeasible before the first
+    # multiplier solve (everything clamps to b_max immediately)
+    lam = math.inf
     for _ in range(n + 1):
         if not free.any():
             break
@@ -95,10 +110,118 @@ def waterfill_bits(items: SegmentItems, delta: float,
                        psi_total=psi, payload_bits=payload)
 
 
+def _waterfill_invariants(z, s, rho, valid):
+    """Per-item loop invariants of the batched solve: masked payloads,
+    noise-over-robustness, and the additive log term of Eq. 39
+    (b_i = log4(lambda) + C_i on the free set)."""
+    z = np.where(valid, np.asarray(z, np.float64), 1.0)
+    s = np.where(valid, np.asarray(s, np.float64), 1.0)
+    rho = np.where(valid, np.asarray(rho, np.float64), 1.0)
+    sr = s / rho
+    with np.errstate(divide="ignore", invalid="ignore"):
+        c_item = np.log(s * LN4 / (z * rho)) / LN4
+    return z, sr, c_item
+
+
+def waterfill_bits_batch(z, s, rho, valid, delta,
+                         b_min: float = 2.0, b_max: float = 16.0,
+                         _tile: int = 1):
+    """R independent water-filling problems in one vectorized pass.
+
+    ``z``, ``s``, ``rho`` are (R, I) matrices; ``valid`` (R, I) masks the
+    ragged item sets; ``delta`` is a scalar or (R,) budget vector. Entries
+    outside ``valid`` are ignored (they may hold arbitrary placeholders).
+    ``_tile=G`` solves the SAME item matrices under G stacked budget
+    groups (delta of length G*R, group-major) while computing the
+    transcendental invariants only once on the base — the Alg. 1 case
+    where every accuracy level shares the layer profile.
+
+    Returns ``(bits (G*R, I), lam, psi, payload)`` matching
+    ``waterfill_bits`` row-by-row to float precision: the active-set
+    trajectory (multiplier solve, lo/hi clamping, infeasibility bail-out)
+    is replicated per row, just batched across rows (DESIGN.md §2).
+    """
+    valid = np.asarray(valid, bool)
+    z, sr, c_item = _waterfill_invariants(z, s, rho, valid)
+    if _tile > 1:
+        z, sr, c_item, valid = (np.tile(m, (_tile, 1))
+                                for m in (z, sr, c_item, valid))
+    R, I = z.shape
+    deltas = np.broadcast_to(np.asarray(delta, np.float64), (R,)).copy()
+    assert np.all(deltas > 0)
+    # a clamped item's noise is its s/rho times a CONSTANT factor
+    # (e^{-ln4 b_min} or e^{-ln4 b_max}), so the backlog accumulates
+    # incrementally — no per-iteration exp/log over the full matrix
+    e_min, e_max = math.exp(-LN4 * b_min), math.exp(-LN4 * b_max)
+
+    out_bits = np.zeros((R, I))
+    out_lam = np.full(R, np.inf)
+    # compact working set: rows leave it (and are emitted to out_*) as
+    # soon as they converge, so late clamp rounds — where only a handful
+    # of tight-budget rows remain — run on tiny arrays
+    idx = np.flatnonzero(valid.any(axis=1))
+    if len(idx) == R:       # common case: no empty rows, skip the gather
+        zc, src, cc = z, sr, c_item
+        free = valid.copy()
+    else:
+        zc, src, cc, deltas = z[idx], sr[idx], c_item[idx], deltas[idx]
+        free = valid[idx].copy()
+    bits = np.zeros((len(idx), I))
+    lam = np.full(len(idx), np.inf)
+    clamped_noise = np.zeros(len(idx))
+    for _ in range(I + 1):
+        alive = free.any(axis=1)
+        if not alive.all():
+            done_rows = ~alive
+            out_bits[idx[done_rows]] = bits[done_rows]
+            out_lam[idx[done_rows]] = lam[done_rows]
+            idx = idx[alive]
+            zc, src, cc = zc[alive], src[alive], cc[alive]
+            deltas, free, bits = deltas[alive], free[alive], bits[alive]
+            lam, clamped_noise = lam[alive], clamped_noise[alive]
+        if not len(idx):
+            break
+        rem = deltas - clamped_noise
+        infeas = rem <= 0.0
+        if infeas.any():
+            bits = np.where(free & infeas[:, None], b_max, bits)
+            free &= ~infeas[:, None]
+        act = ~infeas
+        zsum = np.where(free, zc, 0.0).sum(axis=1)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lam_r = zsum / (rem * LN4)
+            b_cand = (np.log(lam_r) / LN4)[:, None] + cc
+        lam = np.where(act, lam_r, lam)
+        lo = free & act[:, None] & (b_cand < b_min)
+        hi = free & act[:, None] & (b_cand > b_max)
+        if lo.any() or hi.any():
+            bits = np.where(lo, b_min, np.where(hi, b_max, bits))
+            clamped_noise = clamped_noise \
+                + np.where(lo, src, 0.0).sum(axis=1) * e_min \
+                + np.where(hi, src, 0.0).sum(axis=1) * e_max
+            done = act & ~(lo | hi).any(axis=1)
+        else:
+            done = act
+        bits = np.where(free & done[:, None], b_cand, bits)
+        free &= ~(lo | hi | done[:, None])
+    if len(idx):                                    # safety net: emit rest
+        out_bits[idx] = bits
+        out_lam[idx] = lam
+    # psi over the valid entries only (exp is the dominant cost here)
+    row_idx, col_idx = np.nonzero(valid)
+    noise = sr[row_idx, col_idx] * np.exp(-LN4 * out_bits[row_idx, col_idx])
+    psi = np.bincount(row_idx, weights=noise, minlength=R)
+    payload = np.bincount(
+        row_idx,
+        weights=out_bits[row_idx, col_idx] * z[row_idx, col_idx],
+        minlength=R)
+    return out_bits, out_lam, psi, payload
+
+
 # ---------------------------------------------------------------------------
 # Joint (b, p) search: the paper's Alg. 1 (offline) + Alg. 2 (online).
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class PartitionPlan:
     p: int                     # partition point (device runs layers 1..p)
     bits_w: np.ndarray         # per-layer weight bit-widths (len p)
@@ -148,22 +271,108 @@ def plan_for_partition(p: int, layer_z_w, layer_z_x, layer_s_w, layer_s_x,
         payload_w_bits=payload - payload_x, payload_x_bits=payload_x)
 
 
+def _segment_matrices(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho):
+    """(L, L+1) item matrices for all partitions p=1..L at once: row r is
+    partition p=r+1, columns 0..L-1 the weight items (valid for j <= r),
+    column L the cut activation at layer p."""
+    z_w = np.asarray(layer_z_w, np.float64)
+    z_x = np.asarray(layer_z_x, np.float64)
+    s_w = np.asarray(layer_s_w, np.float64)
+    s_x = np.asarray(layer_s_x, np.float64)
+    rho_l = np.asarray(layer_rho, np.float64)
+    L = len(z_w)
+    valid = np.zeros((L, L + 1), bool)
+    valid[:, :L] = np.tril(np.ones((L, L), bool))
+    valid[:, L] = True
+    z = np.ones((L, L + 1))
+    s = np.ones((L, L + 1))
+    rho = np.ones((L, L + 1))
+    z[:, :L], z[:, L] = z_w[None, :], z_x
+    s[:, :L], s[:, L] = s_w[None, :], s_x
+    rho[:, :L], rho[:, L] = rho_l[None, :], rho_l
+    return z, s, rho, valid
+
+
+def _plans_from_rows(bits, psi, payload, layer_z_x, o_cum, o_total, xi,
+                     delta_cost, eps) -> List[PartitionPlan]:
+    """Materialize PartitionPlans for p=1..L from one batched solution
+    block (row r = partition p=r+1)."""
+    L = bits.shape[0]
+    z_x = np.asarray(layer_z_x, np.float64)
+    o_cum = np.asarray(o_cum, np.float64)
+    payload_x = bits[:, L] * z_x
+    o1 = o_cum
+    o2 = o_total - o1
+    obj = xi * o1 + delta_cost * o2 + eps * payload
+    # bulk scalar extraction (tolist) beats per-element numpy-scalar float()
+    bits_x_l = bits[:, L].tolist()
+    obj_l, psi_l, pay_l = obj.tolist(), psi.tolist(), payload.tolist()
+    pay_x_l = payload_x.tolist()
+    loc_l, srv_l = (xi * o1).tolist(), (delta_cost * o2).tolist()
+    eps_pay_l = (eps * payload).tolist()
+    plans = []
+    for r in range(L):
+        p = r + 1
+        plans.append(PartitionPlan(
+            p=p, bits_w=bits[r, :p].copy(), bits_x=bits_x_l[r],
+            objective=obj_l[r], psi_total=psi_l[r],
+            payload_bits=pay_l[r],
+            breakdown={"compute_local": loc_l[r],
+                       "compute_server": srv_l[r],
+                       "payload": eps_pay_l[r]},
+            payload_w_bits=pay_l[r] - pay_x_l[r],
+            payload_x_bits=pay_x_l[r]))
+    return plans
+
+
+def plan_all_partitions(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
+                        o_cum, o_total, xi, delta_cost, eps, psi_budget,
+                        b_min=2.0, b_max=16.0,
+                        input_z: float = 0.0) -> List[PartitionPlan]:
+    """All partition points p=0..L of one accuracy level as a single
+    vectorized solve — the hot path of Alg. 1 (DESIGN.md §2). Plan-for-plan
+    equal to ``[plan_for_partition(p, ...) for p in 0..L]``."""
+    L = len(layer_z_w)
+    plans = [plan_for_partition(0, layer_z_w, layer_z_x, layer_s_w,
+                                layer_s_x, layer_rho, o_cum, o_total, xi,
+                                delta_cost, eps, psi_budget, b_min, b_max,
+                                input_z=input_z)]
+    if L == 0:
+        return plans
+    z, s, rho, valid = _segment_matrices(layer_z_w, layer_z_x, layer_s_w,
+                                         layer_s_x, layer_rho)
+    bits, _lam, psi, payload = waterfill_bits_batch(
+        z, s, rho, valid, psi_budget, b_min, b_max)
+    plans += _plans_from_rows(bits, psi, payload, layer_z_x, o_cum, o_total,
+                              xi, delta_cost, eps)
+    return plans
+
+
 def solve_joint(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
                 layer_o, xi, delta_cost, eps, psi_budget,
                 allow_full_offload: bool = True,
-                b_min=2.0, b_max=16.0, input_z: float = 0.0):
+                b_min=2.0, b_max=16.0, input_z: float = 0.0,
+                vectorized: bool = True):
     """Enumerate partition points (Alg. 2 step 2–5), closed-form bits at
     each, return (best plan, all plans)."""
     L = len(layer_o)
     o_cum = np.cumsum(layer_o)
     o_total = float(o_cum[-1])
-    plans = []
-    start = 0 if allow_full_offload else 1
-    for p in range(start, L + 1):
-        plans.append(plan_for_partition(
-            p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
-            o_cum, o_total, xi, delta_cost, eps, psi_budget, b_min, b_max,
-            input_z=input_z))
+    if vectorized:
+        plans = plan_all_partitions(
+            layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho, o_cum,
+            o_total, xi, delta_cost, eps, psi_budget, b_min, b_max,
+            input_z=input_z)
+        if not allow_full_offload:
+            plans = plans[1:]
+    else:
+        plans = []
+        start = 0 if allow_full_offload else 1
+        for p in range(start, L + 1):
+            plans.append(plan_for_partition(
+                p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
+                o_cum, o_total, xi, delta_cost, eps, psi_budget, b_min, b_max,
+                input_z=input_z))
     best = min(plans, key=lambda pl: pl.objective)
     return best, plans
 
@@ -178,26 +387,80 @@ class OfflineStore:
     plans: dict                 # (a, p) -> PartitionPlan
     budgets: dict               # a -> Delta
 
+    def __post_init__(self):
+        self._level_plans_cache: dict = {}
+        self._payload_rows_cache: dict = {}
+
+    # -- fast accessors for the batched online path (DESIGN.md §5) ------
+    def level_for(self, a: float) -> float:
+        """Alg. 2 step 1: largest tabulated level <= a (min level when
+        nothing qualifies)."""
+        feas = [lv for lv in self.levels if lv <= a]
+        return max(feas) if feas else min(self.levels)
+
+    def level_plans(self, a_star: float) -> List[PartitionPlan]:
+        """Candidate plans of one level, ordered by partition point."""
+        if a_star not in self._level_plans_cache:
+            cands = sorted(((p, pl) for (lv, p), pl in self.plans.items()
+                            if lv == a_star), key=lambda t: t[0])
+            self._level_plans_cache[a_star] = [pl for _, pl in cands]
+        return self._level_plans_cache[a_star]
+
+    def level_payload_rows(self, a_star: float):
+        """(payload_bits (P+1,), payload_x_bits (P+1,)) of one level's
+        candidates, column c = partition point c. Cached: the batched
+        online paths (serve_batch / WorkloadBalancer) gather these rows
+        instead of walking plan attributes per request."""
+        if a_star not in self._payload_rows_cache:
+            cands = self.level_plans(a_star)
+            self._payload_rows_cache[a_star] = (
+                np.array([pl.payload_bits for pl in cands]),
+                np.array([pl.payload_x_bits for pl in cands]))
+        return self._payload_rows_cache[a_star]
+
     def lookup(self, a: float, objective_fn) -> PartitionPlan:
         """Alg. 2: pick the largest tabulated level <= a, then the partition
         point minimizing the runtime objective (which may differ from the
         offline objective because the channel/device changed)."""
-        feas = [lv for lv in self.levels if lv <= a]
-        a_star = max(feas) if feas else min(self.levels)
-        cands = [pl for (lv, _), pl in self.plans.items() if lv == a_star]
+        cands = self.level_plans(self.level_for(a))
         return min(cands, key=objective_fn)
 
 
 def build_offline_store(levels, budgets, layer_z_w, layer_z_x, layer_s_w,
                         layer_s_x, layer_rho, layer_o, xi, delta_cost, eps,
-                        b_min=2.0, b_max=16.0, input_z: float = 0.0) -> OfflineStore:
+                        b_min=2.0, b_max=16.0, input_z: float = 0.0,
+                        vectorized: bool = True) -> OfflineStore:
+    """Alg. 1 as ONE stacked array program: the (level, partition) grid
+    becomes a (levels*L, L+1) batched water-filling solve — every level's
+    item matrices are identical, only the budget row-vector differs
+    (``vectorized=False`` keeps the O(levels × L) scalar reference the
+    equivalence tests and benchmarks compare against)."""
     o_cum = np.cumsum(layer_o)
     o_total = float(o_cum[-1])
+    L = len(layer_o)
     plans = {}
-    for a in levels:
-        for p in range(0, len(layer_o) + 1):
-            plans[(a, p)] = plan_for_partition(
-                p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
-                o_cum, o_total, xi, delta_cost, eps, budgets[a], b_min, b_max,
-                input_z=input_z)
+    if vectorized and L > 0:
+        z, s, rho, valid = _segment_matrices(layer_z_w, layer_z_x, layer_s_w,
+                                             layer_s_x, layer_rho)
+        A = len(levels)
+        deltas = np.repeat([budgets[a] for a in levels], L)
+        bits, _lam, psi, payload = waterfill_bits_batch(
+            z, s, rho, valid, deltas, b_min, b_max, _tile=A)
+        for i, a in enumerate(levels):
+            plans[(a, 0)] = plan_for_partition(
+                0, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
+                o_cum, o_total, xi, delta_cost, eps, budgets[a],
+                b_min, b_max, input_z=input_z)
+            rows = slice(i * L, (i + 1) * L)
+            for p, plan in enumerate(_plans_from_rows(
+                    bits[rows], psi[rows], payload[rows], layer_z_x, o_cum,
+                    o_total, xi, delta_cost, eps), start=1):
+                plans[(a, p)] = plan
+    else:
+        for a in levels:
+            for p in range(0, L + 1):
+                plans[(a, p)] = plan_for_partition(
+                    p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
+                    o_cum, o_total, xi, delta_cost, eps, budgets[a],
+                    b_min, b_max, input_z=input_z)
     return OfflineStore(levels=list(levels), plans=plans, budgets=dict(budgets))

@@ -15,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.qmatmul import qmatmul4_pallas, qmatmul_pallas
-from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+from repro.kernels.quantize import (dequantize_pallas, quantize_pack4_pallas,
+                                    quantize_pallas)
 
 
 def _on_tpu() -> bool:
@@ -60,3 +61,12 @@ def qmatmul4(x, packed, scale, mu, out_dtype=jnp.bfloat16,
 
 def pack_int4(codes):
     return ref.pack_int4_ref(codes)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def quantize_pack4(x, scale, mu, use_pallas: bool = True):
+    """Fused quantize + int4 wire packing: (M, N) float -> (M, N//2)
+    uint8, two codes per byte. scale/mu per-tensor or per-column."""
+    if use_pallas and x.ndim == 2:
+        return quantize_pack4_pallas(x, scale, mu, interpret=not _on_tpu())
+    return ref.quantize_pack4_ref(x, scale, mu)

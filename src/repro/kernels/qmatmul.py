@@ -8,6 +8,17 @@ dimension. HBM traffic for weights is b/16 of the bf16 baseline — the
 paper's payload saving (Eq. 14) re-expressed for the TPU memory hierarchy
 (DESIGN.md §3).
 
+Scale/zero granularity (DESIGN.md §4): ``scale``/``mu`` may be
+
+  * scalars (any size-1 shape)  — per-tensor, rides as a (1, 1) block, or
+  * per-output-column vectors   — any shape broadcastable to (1, N);
+    streamed through VMEM as (1, block_n) tiles indexed by the n grid
+    axis, so ``quantize_stacked``'s per-channel metadata (a period slice
+    ``scale[i]`` of shape (1, N)) feeds the kernel without reformatting.
+
+The kernel body is granularity-agnostic: the dequant is a broadcast
+multiply-add of the scale/zero block over the (block_k, block_n) tile.
+
 Blocks are MXU-aligned: (bm, bk, bn) multiples of (8, 128, 128); defaults
 (256, 512, 256) keep the working set (x 256x512 bf16 + w 512x256 int8 +
 acc 256x256 f32) ~ 0.6 MB, far under the ~16 MB v5e VMEM so the pipeline
@@ -22,6 +33,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.quantize import _prep_scale_mu
+
 BM, BK, BN = 256, 512, 256
 
 
@@ -31,7 +44,8 @@ def _qmm_kernel(x_ref, w_ref, scale_ref, mu_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    w = w_ref[...].astype(jnp.float32) * scale_ref[0, 0] + mu_ref[0, 0]
+    # scale/mu block is (1, 1) or (1, bn): broadcasts over the weight tile
+    w = w_ref[...].astype(jnp.float32) * scale_ref[...] + mu_ref[...]
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
 
@@ -42,23 +56,23 @@ def _qmm_kernel(x_ref, w_ref, scale_ref, mu_ref, o_ref, acc_ref, *,
 
 def qmatmul_pallas(x, w_codes, scale, mu, out_dtype=jnp.bfloat16,
                    bm=BM, bk=BK, bn=BN, interpret: bool = False):
-    """x (M, K) bf16/f32 @ dequant(w_codes (K, N) int8) -> (M, N)."""
+    """x (M, K) bf16/f32 @ dequant(w_codes (K, N) int8) -> (M, N).
+    scale/mu: per-tensor scalars or per-output-column (1, N) / (N,)."""
     m, k = x.shape
     k2, n = w_codes.shape
     assert k == k2
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (x.shape, w_codes.shape)
     grid = (m // bm, n // bn, k // bk)
-    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
-    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    scale, mu, smspec = _prep_scale_mu(scale, mu, n, bn, grid_rank=3)
     return pl.pallas_call(
         functools.partial(_qmm_kernel, n_k=k // bk, out_dtype=out_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            smspec,
+            smspec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
@@ -79,7 +93,7 @@ def _qmm4_kernel(x_ref, wp_ref, scale_ref, mu_ref, o_ref, acc_ref, *,
     # packed (bk, bn//2): interleave nibbles back to (bk, bn)
     bk, half = packed.shape
     w = jnp.stack([lo, hi], axis=-1).reshape(bk, half * 2)
-    w = w * scale_ref[0, 0] + mu_ref[0, 0]
+    w = w * scale_ref[...] + mu_ref[...]
     acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32), w,
                             preferred_element_type=jnp.float32)
 
@@ -90,7 +104,9 @@ def _qmm4_kernel(x_ref, wp_ref, scale_ref, mu_ref, o_ref, acc_ref, *,
 
 def qmatmul4_pallas(x, packed, scale, mu, out_dtype=jnp.bfloat16,
                     bm=BM, bk=BK, bn=BN, interpret: bool = False):
-    """x (M, K) @ dequant(packed (K, N//2) uint8, 2 nibbles/byte) -> (M, N)."""
+    """x (M, K) @ dequant(packed (K, N//2) uint8, 2 nibbles/byte) -> (M, N).
+    scale/mu: per-tensor scalars or per-output-column (1, N) / (N,),
+    indexed in UNPACKED column space."""
     m, k = x.shape
     k2, half = packed.shape
     n = half * 2
@@ -98,16 +114,15 @@ def qmatmul4_pallas(x, packed, scale, mu, out_dtype=jnp.bfloat16,
     bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0
     grid = (m // bm, n // bn, k // bk)
-    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
-    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    scale, mu, smspec = _prep_scale_mu(scale, mu, n, bn, grid_rank=3)
     return pl.pallas_call(
         functools.partial(_qmm4_kernel, n_k=k // bk, out_dtype=out_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn // 2), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)),
+            smspec,
+            smspec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),

@@ -1,11 +1,15 @@
-"""Pallas TPU kernel: tiled asymmetric quantize / dequantize.
+"""Pallas TPU kernels: tiled asymmetric quantize / dequantize, plus a
+fused quantize-and-pack-int4 kernel.
 
 TPU mapping: the tensor streams HBM -> VMEM in (block_m, block_n) tiles
 (lane-dim 128-aligned); each tile is rounded onto the quantization grid on
-the VPU and written back as int8 codes. scale/mu ride in SMEM as (1, 1)
-scalars. This is the execution form of paper Eq. 10 — the server quantizes
-a model segment before "transmitting" it (on TPU: before writing the
-compact weights to HBM).
+the VPU and written back as int8 codes — or, for the fused int4 kernel,
+two adjacent columns are packed into one byte before the writeback, so the
+codes never round-trip through HBM at int8 width. scale/mu ride either as
+(1, 1) scalar blocks (per-tensor) or as (1, block_n) VMEM tiles indexed by
+the n grid axis (per-output-column; DESIGN.md §4). This is the execution
+form of paper Eq. 10 — the server quantizes a model segment before
+"transmitting" it (on TPU: before writing the compact weights to HBM).
 """
 from __future__ import annotations
 
@@ -18,37 +22,68 @@ from jax.experimental import pallas as pl
 DEFAULT_BLOCK = (256, 512)
 
 
+def _prep_scale_mu(scale, mu, n: int, bn: int, grid_rank: int = 2):
+    """Normalize scale/mu to the (1, 1) per-tensor or (1, N) per-channel
+    form and build the matching BlockSpec. Shared by every kernel in
+    this package; grid axis 1 always walks the n tiles (``grid_rank`` is
+    the kernel's grid arity — 2 for elementwise, 3 for matmul)."""
+    scale = jnp.asarray(scale, jnp.float32)
+    mu = jnp.asarray(mu, jnp.float32)
+    per_channel = scale.size > 1 or mu.size > 1
+    if per_channel:
+        scale = jnp.broadcast_to(scale.reshape(-1), (n,)).reshape(1, n)
+        mu = jnp.broadcast_to(mu.reshape(-1), (n,)).reshape(1, n)
+        block = (1, bn)
+        idx = (lambda i, j, kk: (0, j)) if grid_rank == 3 \
+            else (lambda i, j: (0, j))
+    else:
+        scale = scale.reshape(1, 1)
+        mu = mu.reshape(1, 1)
+        block = (1, 1)
+        idx = (lambda i, j, kk: (0, 0)) if grid_rank == 3 \
+            else (lambda i, j: (0, 0))
+    return scale, mu, pl.BlockSpec(block, idx)
+
+
 def _quantize_kernel(x_ref, scale_ref, mu_ref, o_ref, *, levels: int):
     x = x_ref[...].astype(jnp.float32)
-    scale = scale_ref[0, 0]
-    mu = mu_ref[0, 0]
-    q = jnp.round((x - mu) / scale)
+    q = jnp.round((x - mu_ref[...]) / scale_ref[...])
     q = jnp.clip(q, 0.0, float(levels))
     o_ref[...] = q.astype(jnp.uint8)
 
 
 def _dequantize_kernel(c_ref, scale_ref, mu_ref, o_ref, *, out_dtype):
     c = c_ref[...].astype(jnp.float32)
-    o_ref[...] = (c * scale_ref[0, 0] + mu_ref[0, 0]).astype(out_dtype)
+    o_ref[...] = (c * scale_ref[...] + mu_ref[...]).astype(out_dtype)
+
+
+def _quantize_pack4_kernel(x_ref, scale_ref, mu_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+    q = jnp.clip(jnp.round((x - mu_ref[...]) / scale_ref[...]), 0.0, 15.0)
+    q = q.astype(jnp.uint8)
+    bm, bn = q.shape
+    # pair adjacent columns: byte j = col 2j (low nibble) | col 2j+1 << 4
+    pairs = q.reshape(bm, bn // 2, 2)
+    o_ref[...] = pairs[..., 0] | (pairs[..., 1] << 4)
 
 
 def quantize_pallas(x, scale, mu, bits: int, block=DEFAULT_BLOCK,
                     interpret: bool = False):
-    """x (M, N) float -> uint8 codes. bits <= 8."""
+    """x (M, N) float -> uint8 codes. bits <= 8. scale/mu per-tensor or
+    per-output-column (broadcastable to (1, N))."""
     assert bits <= 8
     m, n = x.shape
     bm, bn = min(block[0], m), min(block[1], n)
     assert m % bm == 0 and n % bn == 0, (x.shape, block)
     grid = (m // bm, n // bn)
-    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
-    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    scale, mu, smspec = _prep_scale_mu(scale, mu, n, bn)
     return pl.pallas_call(
         functools.partial(_quantize_kernel, levels=(1 << bits) - 1),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            smspec,
+            smspec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint8),
@@ -62,17 +97,42 @@ def dequantize_pallas(codes, scale, mu, out_dtype=jnp.bfloat16,
     bm, bn = min(block[0], m), min(block[1], n)
     assert m % bm == 0 and n % bn == 0
     grid = (m // bm, n // bn)
-    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
-    mu = jnp.asarray(mu, jnp.float32).reshape(1, 1)
+    scale, mu, smspec = _prep_scale_mu(scale, mu, n, bn)
     return pl.pallas_call(
         functools.partial(_dequantize_kernel, out_dtype=out_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+            smspec,
+            smspec,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         interpret=interpret,
     )(codes, scale, mu)
+
+
+def quantize_pack4_pallas(x, scale, mu, block=DEFAULT_BLOCK,
+                          interpret: bool = False):
+    """Fused Eq. 10 + int4 wire packing: x (M, N) float -> (M, N//2) uint8,
+    two 4-bit codes per byte (low nibble = even column — the qmatmul4
+    layout). One VMEM pass; replaces the strided-slice packing that
+    round-tripped int8 codes through HBM."""
+    m, n = x.shape
+    assert n % 2 == 0, "int4 packing pairs adjacent columns"
+    bm, bn = min(block[0], m), min(block[1], n)
+    assert m % bm == 0 and n % bn == 0 and bn % 2 == 0, (x.shape, block)
+    grid = (m // bm, n // bn)
+    scale, mu, smspec = _prep_scale_mu(scale, mu, n, bn)
+    return pl.pallas_call(
+        _quantize_pack4_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            smspec,
+            smspec,
+        ],
+        out_specs=pl.BlockSpec((bm, bn // 2), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n // 2), jnp.uint8),
+        interpret=interpret,
+    )(x, scale, mu)

@@ -24,21 +24,26 @@ def qmatmul_ref(x, w_codes, scale, mu, out_dtype=jnp.float32):
 
 
 def pack_int4_ref(codes):
-    """(K, N) int codes in [0,15] -> (K, N//2) packed bytes (low nibble =
-    even column)."""
-    lo = codes[:, 0::2].astype(jnp.uint8)
-    hi = codes[:, 1::2].astype(jnp.uint8)
+    """(..., N) int codes in [0,15] -> (..., N//2) packed bytes (low
+    nibble = even column)."""
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
     return (lo | (hi << 4)).astype(jnp.uint8)
 
 
 def unpack_int4_ref(packed):
     lo = (packed & 0xF).astype(jnp.int32)
     hi = ((packed >> 4) & 0xF).astype(jnp.int32)
-    k, half = packed.shape
-    out = jnp.zeros((k, half * 2), jnp.int32)
-    out = out.at[:, 0::2].set(lo)
-    out = out.at[:, 1::2].set(hi)
+    half = packed.shape[-1]
+    out = jnp.zeros(packed.shape[:-1] + (half * 2,), jnp.int32)
+    out = out.at[..., 0::2].set(lo)
+    out = out.at[..., 1::2].set(hi)
     return out
+
+
+def quantize_pack4_ref(x, scale, mu):
+    """Oracle for the fused quantize-and-pack-int4 kernel."""
+    return pack_int4_ref(quantize_ref(x, scale, mu, 4))
 
 
 def qmatmul4_ref(x, packed, scale, mu, out_dtype=jnp.float32):

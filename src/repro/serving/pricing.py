@@ -1,0 +1,90 @@
+"""Shared window pricing: Alg. 2's objective for every (request,
+partition point) pair of a request window, as one matrix op per model
+group (DESIGN.md §5).
+
+    obj[r, p] = xi_r · O1[p] + delta_r · (O_total − O1[p]) + eps_r · wire[r, p]
+
+This is the single implementation both batched online paths build on:
+``QPARTServer.serve_batch`` (argmin per row → ServingResult) and
+``WorkloadBalancer`` (adds the queue term per admission step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import (ServerProfile, classifier_layer_specs,
+                                   delta_coeff, eps_coeff, xi_coeff)
+from repro.serving.simulator import InferenceRequest
+
+
+@dataclasses.dataclass
+class WindowTable:
+    """Zero-load pricing of a request window against the plan table.
+    Entry i is a per-request view into its model group's stacked
+    matrices, so one window may mix models with different layer counts."""
+    obj: List[np.ndarray]           # per request: (P+1,) Eq. 17, no queue
+    o1: List[np.ndarray]            # per request: (P+1,) device-side MACs
+    wire: List[np.ndarray]          # per request: (P+1,) wire bits
+    plans: List[list]               # per request: candidate plan list
+    groups: list                    # [(request indices, (G, P+1) obj)]
+
+    def argmin_choices(self) -> np.ndarray:
+        """Best partition point per request — one matrix argmin per
+        model group rather than a per-request scan."""
+        choices = np.empty(len(self.obj), dtype=int)
+        for idxs, obj in self.groups:
+            choices[idxs] = np.argmin(obj, axis=1)
+        return choices
+
+    def select(self, i: int, c: int):
+        """(plan, o1, o2, wire) of candidate c for request i — the one
+        place the result-assembly terms derive from the table."""
+        plan = self.plans[i][c]
+        o1 = float(self.o1[i][c])
+        o2 = float(self.o1[i][-1] - o1)
+        return plan, o1, o2, float(self.wire[i][c])
+
+
+def price_window(models, server: ServerProfile,
+                 requests: Sequence[InferenceRequest]) -> WindowTable:
+    """``models``: name -> RegisteredModel (must hold a built store)."""
+    R = len(requests)
+    tab = WindowTable(obj=[None] * R, o1=[None] * R, wire=[None] * R,
+                      plans=[None] * R, groups=[])
+    by_model = {}
+    for i, r in enumerate(requests):
+        by_model.setdefault(r.model, []).append(i)
+    for name, idxs in by_model.items():
+        m = models[name]
+        assert m.store is not None, "run calibrate() + build_store() first"
+        group = [requests[i] for i in idxs]
+        # per-request reduced coefficients (Eq. 24–26)
+        xi = np.array([xi_coeff(r.weights, r.device) for r in group])
+        dl = np.array([delta_coeff(r.weights, server) for r in group])
+        ep = np.array([eps_coeff(r.weights, r.device, r.channel)
+                       for r in group])
+        # prefix MACs per distinct batch size (windows share few)
+        o1_by_batch = {}
+        plans, o1_rows, wire_rows = [], [], []
+        for r in group:
+            if r.batch not in o1_by_batch:
+                specs = classifier_layer_specs(m.cfg, batch=r.batch)
+                o1_by_batch[r.batch] = np.concatenate(
+                    [[0.0], np.cumsum([sp.o for sp in specs])])
+            o1_rows.append(o1_by_batch[r.batch])
+            a_star = m.store.level_for(r.accuracy_budget)
+            plans.append(m.store.level_plans(a_star))
+            pb, px = m.store.level_payload_rows(a_star)
+            wire_rows.append(px if r.segment_cached else pb)
+        o1 = np.stack(o1_rows)                          # (G, P+1)
+        wire = np.stack(wire_rows)
+        obj = xi[:, None] * o1 + dl[:, None] * (o1[:, -1:] - o1) \
+            + ep[:, None] * wire
+        tab.groups.append((idxs, obj))
+        for j, i in enumerate(idxs):
+            tab.obj[i], tab.o1[i] = obj[j], o1[j]
+            tab.wire[i], tab.plans[i] = wire[j], plans[j]
+    return tab

@@ -14,7 +14,7 @@ Lifecycle (paper Fig. 1–2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,13 +24,15 @@ from repro.configs.classifier import ClassifierConfig
 from repro.core import noise as noise_lib
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
                                    ServerProfile, classifier_layer_specs,
-                                   delta_coeff, eps_coeff, xi_coeff)
+                                   cost_breakdown, delta_coeff, eps_coeff,
+                                   xi_coeff)
 from repro.core.partition import split_classifier
 from repro.core.quantizer import fake_quant, round_bits
 from repro.core.solver import (OfflineStore, build_offline_store,
                                plan_for_partition)
 from repro.models.classifier import (classifier_forward, forward_from_layer,
                                      layer_activations)
+from repro.serving.pricing import price_window
 from repro.serving.simulator import InferenceRequest, ServingResult, simulate_plan
 
 DEFAULT_ACCURACY_LEVELS = (0.001, 0.0025, 0.005, 0.01, 0.02)
@@ -153,6 +155,41 @@ class QPARTServer:
         result.extra["bits_w"] = np.asarray(round_bits(plan.bits_w)) if plan.p else []
         result.extra["bits_x"] = plan.bits_x
         return result
+
+    # ------------------------------------------------------------------
+    def serve_batch(self, requests: Sequence[InferenceRequest],
+                    ) -> List[ServingResult]:
+        """Alg. 2 for a whole request window: price every request against
+        the plan table as one objective matrix per model group
+        (serving.pricing, shared with WorkloadBalancer) instead of the
+        per-request Python loop in ``serve``. Result-for-result identical
+        to ``[self.serve(r) for r in requests]``."""
+        tab = price_window(self.models, self.server, requests)
+        choices = tab.argmin_choices()
+        bits_cache: Dict[int, np.ndarray] = {}   # windows share few plans
+        results: List[ServingResult] = []
+        for i, r in enumerate(requests):
+            plan, o1, o2, wire = tab.select(i, int(choices[i]))
+            # cost of the CHOSEN plan only — one scalar call per request
+            # keeps Eq. 5–8 in a single place (cost_model)
+            costs = cost_breakdown(o1, o2, wire, r.device, self.server,
+                                   r.channel)
+            res = ServingResult(plan=plan, costs=costs,
+                                objective=costs.objective(r.weights),
+                                payload_bits=wire)
+            # same ceil/clip as round_bits, but numpy: no per-request
+            # JAX dispatch on the batched path
+            # fresh array/list per result, like serve(): no aliasing
+            if plan.p:
+                if id(plan) not in bits_cache:
+                    bits_cache[id(plan)] = np.clip(
+                        np.ceil(plan.bits_w), 2, 16).astype(np.int32)
+                res.extra["bits_w"] = bits_cache[id(plan)].copy()
+            else:
+                res.extra["bits_w"] = []
+            res.extra["bits_x"] = plan.bits_x
+            results.append(res)
+        return results
 
     # ------------------------------------------------------------------
     def execute_partitioned(self, name: str, plan, x, y) -> float:

@@ -12,6 +12,11 @@ toward capable devices (larger p), which is exactly the workload balancing
 the title promises: no new math, the paper's Eq. 17 objective re-evaluated
 under load.
 
+Execution: the zero-load objective of every (request, partition) pair is
+precomputed as ONE (R, P+1) matrix (DESIGN.md §5); the sequential
+admission loop then only adds the scalar queue term to a row and takes an
+argmin — no per-request store scans or Python objective closures.
+
 Two policies:
   * fcfs      — requests priced in arrival order, each seeing the queue
                 left by its predecessors.
@@ -27,8 +32,9 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.cost_model import (ObjectiveWeights, ServerProfile,
-                                   cost_breakdown, delta_coeff, eps_coeff,
-                                   xi_coeff)
+                                   classifier_layer_specs, cost_breakdown,
+                                   delta_coeff, eps_coeff, xi_coeff)
+from repro.serving.pricing import WindowTable, price_window
 from repro.serving.simulator import InferenceRequest, ServingResult
 
 
@@ -48,24 +54,55 @@ class WorkloadBalancer:
 
     def schedule(self, qpart_server, requests: Sequence[InferenceRequest],
                  ) -> List[ScheduledResult]:
-        order = list(range(len(requests)))
+        if not len(requests):
+            return []
+        tab = price_window(qpart_server.models, self.server, requests)
+        # per-candidate server seconds and server-use masks from the
+        # shared table's MAC columns
+        t_server = [(row[-1] - row) * self.server.gamma / self.server.f_clock
+                    for row in tab.o1]
+        uses_server = [row[-1] - row > 0 for row in tab.o1]
+        R = len(requests)
+        order = list(range(R))
         if self.policy == "balanced":
             # shortest-server-demand first, estimated at zero load
-            demands = [self._server_seconds(qpart_server, r, 0.0)
-                       for r in requests]
+            zero_choice = tab.argmin_choices()
+            demands = np.array([t_server[i][zero_choice[i]]
+                                for i in range(R)])
             order = list(np.argsort(demands))
         busy_until = 0.0
         out = []
         for rank, idx in enumerate(order):
             req = requests[idx]
-            res = self._serve_under_load(qpart_server, req, busy_until)
-            t_srv = res.costs.t_server
-            out.append(ScheduledResult(req, res, busy_until, rank))
-            busy_until += t_srv
-        out.sort(key=lambda sr: requests.index(sr.request))
-        return out
+            # queueing: the server term waits for the backlog — but only
+            # if the candidate uses the server at all
+            row = tab.obj[idx] \
+                + req.weights.omega * busy_until * uses_server[idx]
+            c = int(np.argmin(row))
+            res = self._result_at(tab, idx, c, req, busy_until)
+            out.append((idx, ScheduledResult(req, res, busy_until, rank)))
+            busy_until += t_server[idx][c]
+        # restore arrival order by the carried original index (a
+        # requests.index() scan is O(n^2) and wrong for duplicates)
+        out.sort(key=lambda t: t[0])
+        return [sr for _, sr in out]
 
     # ------------------------------------------------------------------
+    def _result_at(self, tab: WindowTable, idx: int, c: int,
+                   req: InferenceRequest, queue: float) -> ServingResult:
+        plan, o1, o2, wire = tab.select(idx, c)
+        costs = cost_breakdown(o1, o2, wire, req.device, self.server,
+                               req.channel)
+        res = ServingResult(plan=plan, costs=costs,
+                            objective=costs.objective(req.weights)
+                            + req.weights.omega * (queue if o2 > 0 else 0.0),
+                            payload_bits=wire)
+        res.extra["queue_delay"] = queue if o2 > 0 else 0.0
+        return res
+
+    # ------------------------------------------------------------------
+    # Scalar reference path (kept for the benchmark's before/after and as
+    # executable documentation of the per-request Alg. 2 re-pricing).
     def _server_seconds(self, srv, req, queue: float) -> float:
         res = self._serve_under_load(srv, req, queue)
         return res.costs.t_server
@@ -74,7 +111,6 @@ class WorkloadBalancer:
                           queue: float) -> ServingResult:
         """Alg. 2 with the queue delay added to the server time term."""
         m = srv.models[req.model]
-        from repro.core.cost_model import classifier_layer_specs
         specs = classifier_layer_specs(m.cfg, batch=req.batch)
         o = np.array([sp.o for sp in specs])
         o_cum = np.cumsum(o)
@@ -88,8 +124,6 @@ class WorkloadBalancer:
             wire = plan.payload_x_bits if req.segment_cached \
                 else plan.payload_bits
             base = xi * o1 + dl * o2 + ep * wire
-            # queueing: the server term waits for the backlog — but only
-            # if this plan uses the server at all
             wait = req.weights.omega * queue if o2 > 0 else 0.0
             return base + wait
 

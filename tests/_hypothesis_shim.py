@@ -1,0 +1,40 @@
+"""Import-or-stub hypothesis so the DETERMINISTIC tests in a module keep
+running when hypothesis is not installed (a plain
+``pytest.importorskip("hypothesis")`` would skip the whole file).
+
+With hypothesis present (requirements-dev.txt) this re-exports the real
+``given``/``settings``/``st``; without it, ``@given`` rewrites the test to
+a zero-arg skipper and ``st`` strategies become inert placeholders.
+"""
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _StrategyStub()
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg replacement: pytest must not see the strategy
+            # parameters (it would demand fixtures for them)
+            def skipper():
+                pytest.skip("hypothesis not installed")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+        return deco

@@ -8,7 +8,8 @@ import pytest
 from repro.core.quantizer import quantize
 from repro.kernels import ops, ref
 from repro.kernels.qmatmul import qmatmul4_pallas, qmatmul_pallas
-from repro.kernels.quantize import dequantize_pallas, quantize_pallas
+from repro.kernels.quantize import (dequantize_pallas, quantize_pack4_pallas,
+                                    quantize_pallas)
 
 KEY = jax.random.key(0)
 
@@ -69,6 +70,148 @@ class TestQMatmulKernel:
         np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
                                    rtol=2e-2 if xdtype == jnp.bfloat16 else 1e-4,
                                    atol=1e-2)
+
+
+def _per_channel_qparams(w, bits):
+    """Per-output-column asymmetric grid (Eq. 9–10 at channel granularity)."""
+    mu = jnp.min(w, axis=0, keepdims=True)
+    phi = jnp.max(w, axis=0, keepdims=True)
+    levels = (1 << bits) - 1
+    scale = jnp.maximum((phi - mu) / levels, 1e-12)
+    codes = jnp.clip(jnp.round((w - mu) / scale), 0, levels)
+    return codes, scale, mu
+
+
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 512, 256),
+                                 (64, 1024, 128)])
+class TestPerChannelQMatmul:
+    """Per-output-column scale/zero blocks streamed through VMEM: the
+    kernels must match the jnp oracle and consume quantize_stacked's
+    per-period metadata without reformatting (DESIGN.md §4)."""
+
+    def test_w8_per_channel_matches_oracle(self, mkn):
+        m, k, n = mkn
+        x = _w((m, k))
+        codes, scale, mu = _per_channel_qparams(_w((k, n), seed=11), 8)
+        codes8 = codes.astype(jnp.uint8)
+        out_k = qmatmul_pallas(x, codes8, scale, mu, jnp.float32,
+                               interpret=True)
+        out_r = ref.qmatmul_ref(x, codes8, scale, mu, jnp.float32)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-5, atol=5e-4)
+
+    def test_w4_per_channel_matches_oracle(self, mkn):
+        m, k, n = mkn
+        x = _w((m, k))
+        codes, scale, mu = _per_channel_qparams(_w((k, n), seed=12), 4)
+        packed = ref.pack_int4_ref(codes)
+        out_k = qmatmul4_pallas(x, packed, scale, mu, jnp.float32,
+                                interpret=True)
+        out_r = ref.qmatmul4_ref(x, packed, scale, mu, jnp.float32)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-5, atol=5e-4)
+
+
+class TestQuantizeStackedToKernel:
+    """The serving wire format (core.quantizer.quantize_stacked) plugs
+    straight into the kernels: a period slice of codes/scale/mu is a
+    valid argument triple."""
+
+    def test_int8_period_slice(self):
+        from repro.core.quantizer import quantize_stacked
+        x = _w((128, 512))
+        w3 = _w((3, 512, 256), seed=13)
+        q = quantize_stacked(w3, 8)
+        assert q["scale"].shape == (3, 1, 256)          # per-period+channel
+        for i in (0, 2):
+            out_k = qmatmul_pallas(x, q["codes"][i], q["scale"][i],
+                                   q["mu"][i], jnp.float32, interpret=True)
+            out_r = ref.qmatmul_ref(x, q["codes"][i], q["scale"][i],
+                                    q["mu"][i], jnp.float32)
+            np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                       rtol=1e-5, atol=5e-4)
+
+    def test_int4_period_slice(self):
+        from repro.core.quantizer import quantize_stacked
+        x = _w((128, 512))
+        w3 = _w((2, 512, 256), seed=14)
+        q = quantize_stacked(w3, 4)
+        out_k = qmatmul4_pallas(x, q["codes_packed"][1], q["scale"][1],
+                                q["mu"][1], jnp.float32, interpret=True)
+        out_r = ref.qmatmul4_ref(x, q["codes_packed"][1], q["scale"][1],
+                                 q["mu"][1], jnp.float32)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-5, atol=5e-4)
+
+    def test_per_tensor_metadata_still_accepted(self):
+        from repro.core.quantizer import quantize_stacked
+        x = _w((128, 256))
+        w3 = _w((2, 256, 128), seed=15)
+        q = quantize_stacked(w3, 8, per_channel=False)
+        assert q["scale"].shape == (2, 1, 1)
+        out_k = qmatmul_pallas(x, q["codes"][0], q["scale"][0], q["mu"][0],
+                               jnp.float32, interpret=True)
+        out_r = ref.qmatmul_ref(x, q["codes"][0], q["scale"][0], q["mu"][0],
+                                jnp.float32)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   rtol=1e-5, atol=5e-4)
+
+
+class TestFusedQuantizePack:
+    """quantize_pack4_pallas = Eq. 10 + nibble packing in one VMEM pass;
+    must equal quantize_stacked's wire bytes and the jnp oracle."""
+
+    def test_matches_quantize_stacked_and_ref(self):
+        from repro.core.quantizer import quantize_stacked
+        leaf = _w((2, 128, 256), seed=16)
+        q = quantize_stacked(leaf, 4)                    # jnp path (cpu)
+        for i in range(2):
+            fused = quantize_pack4_pallas(leaf[i], q["scale"][i], q["mu"][i],
+                                          interpret=True)
+            np.testing.assert_array_equal(np.asarray(fused),
+                                          np.asarray(q["codes_packed"][i]))
+            np.testing.assert_array_equal(
+                np.asarray(fused),
+                np.asarray(ref.quantize_pack4_ref(leaf[i], q["scale"][i],
+                                                  q["mu"][i])))
+
+    def test_per_tensor_scale(self):
+        x = _w((128, 128), seed=17)
+        codes, scale, mu = quantize(x, 4)
+        fused = quantize_pack4_pallas(x, scale, mu, interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(fused), np.asarray(ref.quantize_pack4_ref(x, scale, mu)))
+
+    def test_quantize_stacked_pallas_path_agrees(self):
+        from repro.core.quantizer import quantize_stacked
+        leaf = _w((3, 256, 512), seed=18)
+        jnp_path = quantize_stacked(leaf, 4, use_pallas=False)
+        pallas_path = quantize_stacked(leaf, 4, use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(pallas_path["codes_packed"]),
+                                      np.asarray(jnp_path["codes_packed"]))
+
+    def test_wrapper_dispatch(self):
+        x = _w((128, 256), seed=19)
+        codes, scale, mu = quantize(x, 4)
+        a = ops.quantize_pack4(x, scale, mu, use_pallas=True)
+        b = ops.quantize_pack4(x, scale, mu, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestPerChannelQuantizeKernels:
+    def test_quantize_dequantize_per_channel(self):
+        w = _w((256, 512), seed=20)
+        codes, scale, mu = _per_channel_qparams(w, 8)
+        codes8 = codes.astype(jnp.uint8)
+        k = quantize_pallas(w, scale, mu, 8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(k),
+                                      np.asarray(ref.quantize_ref(w, scale,
+                                                                  mu, 8)))
+        d = dequantize_pallas(codes8, scale, mu, jnp.float32, interpret=True)
+        np.testing.assert_allclose(
+            np.asarray(d),
+            np.asarray(ref.dequantize_ref(codes8, scale, mu, jnp.float32)),
+            rtol=1e-5, atol=1e-6)
 
 
 class TestPacking:

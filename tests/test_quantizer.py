@@ -1,11 +1,9 @@
 """Quantizer unit + property tests (paper Eq. 9–10, 18–19)."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_shim import given, settings, st
 
 from repro.core.quantizer import (analytic_noise_scale, dequantize,
                                   fake_quant, payload_bits, quant_noise_energy,
@@ -54,6 +52,32 @@ class TestQuantizeBasics:
 
     def test_payload_bits(self):
         assert float(payload_bits(1000, 8)) == 1000 * 8 + 64
+
+    def test_pinned_mu_only(self):
+        """Regression: quantize(x, b, mu=...) with phi=None must fall back
+        to the tensor max for the top of the grid."""
+        x = _rand((128,), lo=0.5, hi=2.0)
+        codes, scale, mu = quantize(x, 8, mu=0.0)
+        assert float(mu) == 0.0
+        xq = dequantize(codes, scale, mu)
+        assert np.isclose(float(xq.max()), float(x.max()), atol=1e-5)
+        assert float(jnp.max(jnp.abs(x - xq))) <= float(scale) / 2 + 1e-6
+
+    def test_pinned_phi_only(self):
+        x = _rand((128,), lo=-2.0, hi=-0.5)
+        codes, scale, mu = quantize(x, 8, phi=0.0)
+        xq = dequantize(codes, scale, mu)
+        assert np.isclose(float(xq.min()), float(x.min()), atol=1e-5)
+
+    def test_stacked_wire_bits_counts_real_metadata(self):
+        from repro.core.quantizer import quantize_stacked, stacked_wire_bits
+        w = _rand((2, 16, 8))
+        q8 = quantize_stacked(w, 8)                   # per-channel default
+        assert stacked_wire_bits(q8) == 2 * 16 * 8 * 8 + 32 * 2 * (2 * 8)
+        q8t = quantize_stacked(w, 8, per_channel=False)
+        assert stacked_wire_bits(q8t) == 2 * 16 * 8 * 8 + 32 * 2 * 2
+        q4 = quantize_stacked(w, 4)                   # packed: half codes
+        assert stacked_wire_bits(q4) == 2 * 16 * 4 * 8 + 32 * 2 * (2 * 8)
 
 
 class TestNoiseLaw:

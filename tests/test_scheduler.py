@@ -88,3 +88,71 @@ class TestWorkloadBalancing:
         reqs = _window(dev, ch, w, n=4)
         out = WorkloadBalancer(ServerProfile()).schedule(srv, reqs)
         assert [r.request for r in out] == reqs
+
+    def test_duplicate_request_objects_keep_positions(self, calibrated_server):
+        """Arrival order restoration must survive duplicate (equal)
+        requests — the old requests.index() scan collapsed them."""
+        srv, dev, ch, w = calibrated_server
+        r = InferenceRequest("mnist", 0.01, dev, ch, w, segment_cached=True)
+        reqs = [r, r, r, r]
+        out = WorkloadBalancer(ServerProfile(), policy="fcfs").schedule(srv,
+                                                                        reqs)
+        assert [sr.request for sr in out] == reqs
+        # fcfs over identical requests: each sees the queue its
+        # predecessors left, so delays are non-decreasing by position
+        delays = [sr.queue_delay for sr in out]
+        assert delays == sorted(delays)
+        assert delays[-1] > 0
+
+    def test_mixed_model_window(self):
+        """One window may mix models with different layer counts — rows
+        are priced per model group (no calibration needed: pricing only
+        touches the store and the cost model)."""
+        import numpy as np
+        from repro.configs.classifier import CIFAR_CNN
+        srv = QPARTServer()
+        dev, ch, w = DeviceProfile(), Channel(capacity_bps=2e6), \
+            ObjectiveWeights()
+        x28 = np.zeros((4, 28, 28), np.float32)
+        x32 = np.zeros((4, 3, 32, 32), np.float32)
+        y = np.zeros(4, np.int32)
+        for name, cfg, x in (("mnist6", MNIST_MLP, x28),
+                             ("cifar", CIFAR_CNN, x32)):
+            srv.register_model(name, cfg, x, x, y)
+            m = srv.models[name]
+            L = cfg.num_layers
+            m.s_w = np.ones(L)
+            m.s_x = np.ones(L)
+            m.rho = np.full(L, 0.1)
+            m.delta_table = {a: a * 50 for a in srv.levels}
+            srv.build_store(name, dev, ch, w)
+        reqs = [InferenceRequest("mnist6" if i % 2 else "cifar", 0.01,
+                                 dev, ch, w, segment_cached=True)
+                for i in range(8)]
+        bal = WorkloadBalancer(ServerProfile(), policy="fcfs")
+        out = bal.schedule(srv, reqs)
+        assert [sr.request for sr in out] == reqs
+        queue = 0.0
+        for sr in out:
+            ref = bal._serve_under_load(srv, sr.request, queue)
+            assert sr.result.plan is ref.plan
+            queue += ref.costs.t_server
+
+    def test_matches_scalar_reference_pricing(self, calibrated_server):
+        """The window objective matrix must reproduce the per-request
+        Alg. 2 re-pricing (_serve_under_load) decision-for-decision."""
+        srv, dev, ch, w = calibrated_server
+        bal = WorkloadBalancer(ServerProfile(), policy="fcfs")
+        strong = dataclasses.replace(dev, f_clock=2e9)
+        reqs = [InferenceRequest("mnist", 0.01 if i % 2 else 0.004,
+                                 strong if i % 3 == 0 else dev, ch, w,
+                                 segment_cached=bool(i % 2))
+                for i in range(12)]
+        out = bal.schedule(srv, reqs)
+        queue = 0.0
+        for sr in out:
+            ref = bal._serve_under_load(srv, sr.request, queue)
+            assert sr.result.plan is ref.plan
+            assert sr.result.objective == pytest.approx(ref.objective,
+                                                        rel=1e-9)
+            queue += ref.costs.t_server

@@ -106,6 +106,50 @@ class TestQPARTEndToEnd:
         assert res.objective > 0
 
 
+class TestServeBatch:
+    """The batched window pricing must be result-for-result identical to
+    the per-request serve loop (same plan object, objective, costs)."""
+
+    def _window(self, dev, ch, w, n=32):
+        strong = dataclasses.replace(dev, f_clock=2e9)
+        slow = dataclasses.replace(ch, capacity_bps=2e6)
+        budgets = (0.001, 0.004, 0.011, 0.05)
+        return [InferenceRequest("mnist", budgets[i % 4],
+                                 strong if i % 3 == 0 else dev,
+                                 slow if i % 2 else ch, w,
+                                 batch=1 + (i % 2) * 3,
+                                 segment_cached=bool(i % 5))
+                for i in range(n)]
+
+    def test_matches_sequential_serve(self, served):
+        srv, (dev, ch, w), _ = served
+        reqs = self._window(dev, ch, w)
+        batch = srv.serve_batch(reqs)
+        for req, br in zip(reqs, batch):
+            sr = srv.serve(req)
+            assert br.plan is sr.plan
+            assert br.objective == pytest.approx(sr.objective, rel=1e-9)
+            assert br.payload_bits == pytest.approx(sr.payload_bits, rel=1e-12)
+            assert br.costs.t_total == pytest.approx(sr.costs.t_total,
+                                                     rel=1e-9)
+            assert br.costs.e_total == pytest.approx(sr.costs.e_total,
+                                                     rel=1e-9)
+            np.testing.assert_array_equal(np.asarray(br.extra["bits_w"]),
+                                          np.asarray(sr.extra["bits_w"]))
+
+    def test_empty_window(self, served):
+        srv, _, _ = served
+        assert srv.serve_batch([]) == []
+
+    def test_mixed_accuracy_levels_pick_feasible(self, served):
+        srv, (dev, ch, w), _ = served
+        m = srv.models["mnist"]
+        for a in (0.0012, 0.006, 0.03, 0.2):
+            res = srv.serve_batch([InferenceRequest("mnist", a, dev, ch, w)])[0]
+            lv = [k[0] for k, v in m.store.plans.items() if v is res.plan][0]
+            assert lv <= a or lv == min(srv.levels)
+
+
 class TestBaselines:
     def test_no_opt_keeps_base_accuracy(self, trained_mnist):
         params, (x_tr, y_tr, x_te, y_te) = trained_mnist

@@ -1,12 +1,13 @@
 """Closed-form solver tests (paper Eq. 23–40): KKT water-filling
 properties, constraint satisfaction, joint (b, p) search, offline store."""
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_shim import given, settings, st
 
 from repro.core.solver import (OfflineStore, SegmentItems, build_offline_store,
-                               plan_for_partition, solve_joint, waterfill_bits)
+                               plan_all_partitions, plan_for_partition,
+                               solve_joint, waterfill_bits,
+                               waterfill_bits_batch)
 
 LN4 = np.log(4.0)
 
@@ -128,6 +129,115 @@ class TestOfflineStore:
         obj = lambda plan: plan.p
         plan = store.lookup(0.01, obj)
         assert plan.p == 0
+
+
+class TestVectorizedSolver:
+    """The batched water-filling path must be plan-for-plan identical to
+    the scalar reference (bits, lambda, objective) — the contract that
+    lets build_offline_store run one array program per accuracy level."""
+
+    @staticmethod
+    def _instance(L, seed):
+        rng = np.random.default_rng(seed)
+        return dict(
+            layer_z_w=rng.uniform(1e3, 1e6, L),
+            layer_z_x=rng.uniform(1e2, 1e4, L),
+            layer_s_w=rng.uniform(1e-2, 1e2, L),
+            layer_s_x=rng.uniform(1e-2, 1e2, L),
+            layer_rho=rng.uniform(1e-3, 1e1, L),
+        )
+
+    def test_matches_scalar_plan_for_plan(self):
+        coef = dict(xi=1e-8, delta_cost=1e-9, eps=1e-8, input_z=784.0)
+        for seed in range(4):
+            for L in (1, 5, 17):
+                inst = self._instance(L, seed)
+                rng = np.random.default_rng(seed + 100)
+                o = rng.uniform(1e5, 1e7, L)
+                o_cum = np.cumsum(o)
+                o_total = float(o_cum[-1])
+                # budgets spanning lo-clamp, interior, and infeasible
+                for budget in (1e-5, 1e-2, 1.0, 500.0):
+                    vec = plan_all_partitions(o_cum=o_cum, o_total=o_total,
+                                              psi_budget=budget, **inst,
+                                              **coef)
+                    assert len(vec) == L + 1
+                    for p in range(L + 1):
+                        ref = plan_for_partition(p, o_cum=o_cum,
+                                                 o_total=o_total,
+                                                 psi_budget=budget, **inst,
+                                                 **coef)
+                        np.testing.assert_allclose(vec[p].bits_w, ref.bits_w,
+                                                   rtol=1e-9, atol=1e-9)
+                        np.testing.assert_allclose(vec[p].bits_x, ref.bits_x,
+                                                   rtol=1e-9)
+                        np.testing.assert_allclose(vec[p].objective,
+                                                   ref.objective, rtol=1e-9)
+                        np.testing.assert_allclose(vec[p].psi_total,
+                                                   ref.psi_total, rtol=1e-9)
+                        np.testing.assert_allclose(vec[p].payload_bits,
+                                                   ref.payload_bits,
+                                                   rtol=1e-9)
+                        np.testing.assert_allclose(vec[p].payload_x_bits,
+                                                   ref.payload_x_bits,
+                                                   rtol=1e-9)
+
+    def test_batched_waterfill_matches_scalar_rowwise(self):
+        """Directly: each row of the batched solve == waterfill_bits on
+        that row's item subset (including the KKT multiplier)."""
+        rng = np.random.default_rng(7)
+        R, I = 9, 12
+        z = rng.uniform(1e3, 1e6, (R, I))
+        s = rng.uniform(1e-2, 1e2, (R, I))
+        rho = rng.uniform(1e-3, 1e1, (R, I))
+        valid = np.zeros((R, I), bool)
+        for r in range(R):
+            valid[r, :rng.integers(1, I + 1)] = True
+        for delta in (1e-4, 0.05, 10.0):
+            bits, lam, psi, payload = waterfill_bits_batch(
+                z, s, rho, valid, delta)
+            for r in range(R):
+                m = valid[r]
+                sol = waterfill_bits(SegmentItems(z[r, m], s[r, m],
+                                                  rho[r, m]), delta)
+                np.testing.assert_allclose(bits[r, m], sol.bits,
+                                           rtol=1e-9, atol=1e-9)
+                np.testing.assert_allclose(lam[r], sol.lam, rtol=1e-9)
+                np.testing.assert_allclose(psi[r], sol.psi_total, rtol=1e-9)
+                np.testing.assert_allclose(payload[r], sol.payload_bits,
+                                           rtol=1e-9)
+                assert np.all(bits[r, ~m] == 0.0)
+
+    def test_store_vectorized_equals_reference(self):
+        inst = self._instance(6, seed=3)
+        rng = np.random.default_rng(3)
+        o = rng.uniform(1e5, 1e7, 6)
+        levels = (0.001, 0.005, 0.02)
+        budgets = {a: a * 10 for a in levels}
+        kw = dict(levels=levels, budgets=budgets, layer_o=o, xi=1e-8,
+                  delta_cost=1e-9, eps=1e-8, input_z=784.0, **inst)
+        vec = build_offline_store(vectorized=True, **kw)
+        ref = build_offline_store(vectorized=False, **kw)
+        assert vec.plans.keys() == ref.plans.keys()
+        for key in ref.plans:
+            np.testing.assert_allclose(vec.plans[key].bits_w,
+                                       ref.plans[key].bits_w,
+                                       rtol=1e-9, atol=1e-9)
+            np.testing.assert_allclose(vec.plans[key].objective,
+                                       ref.plans[key].objective, rtol=1e-9)
+
+    def test_infeasible_budget_lam_defined(self):
+        """Regression: waterfill_bits must not hit an unbound ``lam`` and
+        the batched path must agree on the fully-clamped solution."""
+        it = SegmentItems(z=np.array([1e4, 1e5]), s=np.array([1e8, 1e9]),
+                          rho=np.array([1e-6, 1e-6]))
+        sol = waterfill_bits(it, delta=1e-12)
+        assert np.all(sol.bits == 16.0) and np.isfinite(sol.psi_total)
+        bits, lam, psi, _ = waterfill_bits_batch(
+            it.z[None, :], it.s[None, :], it.rho[None, :],
+            np.ones((1, 2), bool), 1e-12)
+        np.testing.assert_allclose(bits[0], sol.bits)
+        np.testing.assert_allclose(lam[0], sol.lam, rtol=1e-9)
 
 
 @settings(max_examples=15, deadline=None)
