@@ -14,6 +14,7 @@ from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
                                    ServerProfile, classifier_layer_specs)
 from repro.data.pipeline import minibatches, synthetic_images, synthetic_mnist
 from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.backends import ClassifierBackend
 from repro.serving.qpart_server import QPARTServer
 from repro.serving.simulator import InferenceRequest
 
@@ -54,8 +55,8 @@ def mnist_setup():
     data = (x_tr, y_tr, x_all[:2048], y_all[:2048])
     params, acc = train_classifier(MNIST_MLP, data)
     srv = QPARTServer()
-    srv.register_model("mnist", MNIST_MLP, params, x_all[2048:3072],
-                       y_all[2048:3072])
+    srv.register("mnist", ClassifierBackend(MNIST_MLP, params),
+                 x_all[2048:3072], y_all[2048:3072])
     srv.calibrate("mnist")
     srv.build_store("mnist", DEVICE, CHANNEL, WEIGHTS)
     return srv, params, data, acc
@@ -70,8 +71,8 @@ def cnn_setup(name: str = "cifar", seed: int = 0):
     params, acc = train_classifier(CIFAR_CNN, data, steps=300, lr=0.01,
                                    seed=seed)
     srv = QPARTServer()
-    srv.register_model(name, CIFAR_CNN, params, x_all[1024:1536],
-                       y_all[1024:1536])
+    srv.register(name, ClassifierBackend(CIFAR_CNN, params),
+                 x_all[1024:1536], y_all[1024:1536])
     srv.calibrate(name)
     srv.build_store(name, DEVICE, CHANNEL, WEIGHTS)
     return srv, params, data, acc

@@ -29,7 +29,7 @@ def payload():
     srv, params, data, acc = mnist_setup()
     m = srv.models["mnist"]
     specs = classifier_layer_specs(MNIST_MLP)
-    plan = m.store.plans[(0.01, MNIST_MLP.num_layers)]   # fully on-device
+    plan = m.store().plans[(0.01, MNIST_MLP.num_layers)]   # fully on-device
     rows = []
     bits = np.asarray(round_bits(plan.bits_w))
     for i, sp in enumerate(specs):
@@ -54,7 +54,7 @@ def layerwise_cost():
     o = np.array([sp.o for sp in specs])
     rows = []
     for p in range(0, MNIST_MLP.num_layers + 1):
-        plan = m.store.plans[(0.01, p)]
+        plan = m.store().plans[(0.01, p)]
         q = cost_breakdown(float(o[:p].sum()), float(o[p:].sum()),
                            plan.payload_bits, DEVICE, SERVER, CHANNEL)
         f32_wire = sum(specs[i].z_w for i in range(p)) * 32.0 + \
@@ -81,7 +81,7 @@ def size_vs_accuracy():
     full_bits = sum(sp.z_w for sp in specs) * 32.0
     rows = []
     for a in srv.levels:
-        plan = m.store.plans[(a, MNIST_MLP.num_layers)]
+        plan = m.store().plans[(a, MNIST_MLP.num_layers)]
         rows.append({
             "bench": "fig6_size_vs_acc", "accuracy_budget": a,
             "payload_bits": plan.payload_bits,
@@ -99,22 +99,23 @@ def baselines():
     x_tr, y_tr, x_te, y_te = data
     x_te, y_te = jnp.asarray(x_te), y_te
     m = srv.models["mnist"]
-    specs = classifier_layer_specs(MNIST_MLP)
+    backend = m.backend
+    specs = backend.layer_specs()
     ae = AutoencoderBaseline(code_ratio=0.25)
     rows = []
     for p in range(1, MNIST_MLP.num_layers + 1):
-        q_plan = m.store.plans[(0.01, p)]
+        q_plan = m.store().plans[(0.01, p)]
         q = simulate_plan(q_plan, specs, DEVICE, SERVER, CHANNEL, WEIGHTS)
         q.accuracy = srv.execute_partitioned("mnist", q_plan, x_te, y_te)
-        n = no_opt_offload(params, MNIST_MLP, specs, p, DEVICE, SERVER,
+        n = no_opt_offload(backend, p, DEVICE, SERVER,
                            CHANNEL, WEIGHTS, x_te, y_te, acc)
-        a = ae.offload(params, MNIST_MLP, specs, p, jnp.asarray(x_tr[:512]),
+        a = ae.offload(backend, p, jnp.asarray(x_tr[:512]),
                        DEVICE, SERVER, CHANNEL, WEIGHTS, x_te, y_te, acc)
         pr = PruningBaseline().calibrated(
-            params, MNIST_MLP, specs, p, jnp.asarray(x_tr[:1024]),
+            backend, p, jnp.asarray(x_tr[:1024]),
             y_tr[:1024], budget=float(acc - q.accuracy) + 0.01,
             base_accuracy=acc)
-        pres = pr.offload(params, MNIST_MLP, specs, p, DEVICE, SERVER,
+        pres = pr.offload(backend, p, DEVICE, SERVER,
                           CHANNEL, WEIGHTS, x_te, y_te, acc)
         for scheme, r in (("qpart", q), ("no_opt", n), ("autoencoder", a),
                           ("pruning", pres)):
@@ -139,10 +140,10 @@ def multimodel():
     for model_name, ds, (srv, params, data, acc) in setups:
         key = list(srv.models)[0]
         m = srv.models[key]
-        cfg = m.cfg
-        specs = classifier_layer_specs(cfg)
+        cfg = m.backend.cfg
+        specs = m.backend.layer_specs()
         L = cfg.num_layers
-        plan = m.store.plans[(0.005, L)]       # a = 0.5% budget, all layers
+        plan = m.store().plans[(0.005, L)]       # a = 0.5% budget, all layers
         x_te, y_te = jnp.asarray(data[2]), data[3]
         acc_opt = srv.execute_partitioned(key, plan, x_te, y_te)
         full_mb = sum(sp.z_w for sp in specs) * 32.0 / 8e6

@@ -75,9 +75,10 @@ def _store_rows():
 
 def _serve_rows():
     srv = QPARTServer(levels=LEVELS)
+    from repro.serving.backends import ClassifierBackend
     x = np.zeros((4, 28, 28), np.float32)
     y = np.zeros(4, np.int32)
-    srv.register_model("bench", MNIST_MLP, x, x, y)
+    srv.register("bench", ClassifierBackend(MNIST_MLP, None), x, y)
     # fabricate a calibration (pricing only exercises the store + cost
     # model; no accuracy is measured here)
     m = srv.models["bench"]

@@ -19,6 +19,7 @@ from repro.core.cost_model import Channel, DeviceProfile, ObjectiveWeights
 from repro.core.quantizer import round_bits
 from repro.data.pipeline import minibatches, synthetic_mnist
 from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.backends import ClassifierBackend
 from repro.serving.qpart_server import QPARTServer
 from repro.serving.simulator import InferenceRequest
 
@@ -34,7 +35,7 @@ def train():
     @jax.jit
     def step(p, x, y):
         _, g = jax.value_and_grad(loss_fn)(p, x, y)
-        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+        return jax.tree.map(lambda a, b: a - 0.1 * b, p, g)
 
     it = minibatches(x_tr, y_tr, 128)
     for _ in range(400):
@@ -46,8 +47,8 @@ def train():
 def main():
     params, (x_te, y_te) = train()
     srv = QPARTServer()
-    srv.register_model("mnist", MNIST_MLP, params,
-                       x_te[2048:3072], y_te[2048:3072])
+    srv.register("mnist", ClassifierBackend(MNIST_MLP, params),
+                 x_te[2048:3072], y_te[2048:3072])
     srv.calibrate("mnist")
     base_dev, base_ch, w = DeviceProfile(), Channel(), ObjectiveWeights()
     srv.build_store("mnist", base_dev, base_ch, w)
@@ -66,7 +67,7 @@ def main():
         ch = dataclasses.replace(base_ch, capacity_bps=cap)
         req = InferenceRequest("mnist", budget, dev, ch, w,
                                segment_cached=cached)
-        res = srv.serve(req)
+        res = srv.serve(req)                 # a Deployment (plan + costs)
         bits = np.asarray(round_bits(res.plan.bits_w)) if res.plan.p else []
         print(f"{cap/1e6:>8.1f}Mb {f_clk/1e6:>8.0f}MHz {budget:>7.3f} "
               f"{str(cached):>6} {res.plan.p:>2} {str(list(bits)):>20} "

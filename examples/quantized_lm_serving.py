@@ -1,10 +1,13 @@
-"""QPART beyond classifiers: layer-wise quantized LM serving.
+"""QPART beyond classifiers: a decoder LM through the FULL serving
+pipeline.
 
-Applies the paper's decision layer to a transformer decoder: per-block
-(z_w, z_x, o) come from the analytic cost model, the closed-form solver
-picks the partition point + per-block bit-widths for an edge request,
-the chosen blocks are really quantized (Eq. 10) and generation runs with
-the quantized weights — comparing perplexity and payload against f32.
+With the ``ModelBackend`` protocol a transformer goes through the same
+calibrate → build_store → serve → execute path as the paper's
+classifiers: per-block (z_w, z_x, o) come from the analytic cost model,
+Alg. 1 tabulates per-block bit-widths + partition points, Alg. 2 picks a
+plan per request context, and ``Deployment.execute`` really runs the
+quantized device blocks + quantized cut activation + f32 server tail —
+reporting measured accuracy degradation.
 
 This is the TPU-serving view from DESIGN.md §3: the same water-filled
 bit allocation that cuts the radio payload cuts HBM traffic for the
@@ -19,21 +22,103 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
-                                   delta_coeff, eps_coeff,
-                                   transformer_layer_specs, xi_coeff,
-                                   ServerProfile)
-from repro.core.quantizer import fake_quant, round_bits
-from repro.core.solver import solve_joint
-from repro.data.pipeline import TokenStream, TokenStreamConfig
+from repro.core.cost_model import Channel, DeviceProfile, ObjectiveWeights
+from repro.core.quantizer import round_bits
 from repro.launch.serve import generate
 from repro.models import transformer as T
-from repro.train.optimizer import AdamWConfig, init_opt_state
-from repro.train.train_loop import make_train_step
+from repro.serving.backends import TransformerBackend
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+
+SEQ = 32
+
+
+def cycle_batch(rng, vocab, n):
+    """Learnable synthetic next-token task: t[i+1] = (t[i] + 1) % V."""
+    start = rng.integers(0, vocab, size=(n, 1))
+    toks = (start + np.arange(SEQ + 1)[None, :]) % vocab
+    return (jnp.asarray(toks[:, :SEQ], jnp.int32),
+            jnp.asarray(toks[:, SEQ], jnp.int32))
+
+
+def main():
+    cfg = dataclasses.replace(
+        get_config("smollm-135m"), name="smollm-8m", num_layers=4,
+        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64, d_ff=768,
+        vocab_size=256, tp_pad=1, dtype="float32")
+    key = jax.random.key(0)
+    params = T.init_params(key, cfg)
+    rng = np.random.default_rng(0)
+
+    print("1) briefly train so quantization has something to preserve...")
+
+    def loss_fn(p, toks):
+        logits, _ = T.forward(p, cfg, toks[:, :-1])
+        lp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(lp, toks[:, 1:][..., None], -1))
+
+    @jax.jit
+    def step(p, toks):
+        l, g = jax.value_and_grad(loss_fn)(p, toks)
+        return jax.tree.map(lambda a, b: a - 0.3 * b, p, g), l
+
+    for i in range(300):
+        start = rng.integers(0, cfg.vocab_size, size=(32, 1))
+        toks = jnp.asarray((start + np.arange(SEQ + 1)[None, :])
+                           % cfg.vocab_size, jnp.int32)
+        params, l = step(params, toks)
+    print(f"   final loss {float(l):.3f}")
+
+    print("2) register the TransformerBackend; calibrate + build the "
+          "pattern store (Alg. 1)...")
+    backend = TransformerBackend(cfg, params, seq_len=SEQ)
+    srv = QPARTServer()
+    x_cal, y_cal = cycle_batch(rng, cfg.vocab_size, 128)
+    srv.register("smollm", backend, x_cal, y_cal)
+    srv.calibrate("smollm")
+    print(f"   base next-token accuracy: "
+          f"{srv.models['smollm'].base_accuracy:.3f}")
+    dev = DeviceProfile()
+    ch = Channel(capacity_bps=2e6)
+    # a server-cost-sensitive tenant: eta prices server MACs high enough
+    # that keeping quantized blocks on-device wins (cf. the privacy
+    # reading: raw tokens never leave the device when p = L)
+    w = ObjectiveWeights(eta=1e7)
+    srv.build_store("smollm", dev, ch, w)
+
+    print("3) serve one edge request (Alg. 2) and really execute it...")
+    req = InferenceRequest("smollm", 0.01, dev, ch, w, segment_cached=True)
+    dep = srv.serve(req)
+    plan = dep.plan
+    bits = np.asarray(round_bits(plan.bits_w)) if plan.p else []
+    L = backend.num_layers
+    print(f"   partition p = {plan.p}/{L} blocks on-device, bits = {bits}")
+    specs = backend.layer_specs()
+    f32_bits = sum(sp.z_w for sp in specs[:plan.p]) * 32
+    if plan.p:
+        print(f"   device-segment payload: {plan.payload_w_bits/1e6:.1f} "
+              f"Mbit vs {f32_bits/1e6:.1f} Mbit f32 "
+              f"({100*(1-plan.payload_w_bits/max(f32_bits,1)):.0f}% saved)")
+    x_te, y_te = cycle_batch(rng, cfg.vocab_size, 128)
+    res = dep.execute(x_te, y_te)
+    print(f"   measured accuracy {res.accuracy:.3f} "
+          f"(degradation {100*res.accuracy_degradation:+.2f}% vs f32 on the "
+          f"same set)")
+
+    print("4) generate with the plan's quantized blocks, compare to f32...")
+    qparams = quantize_blocks(params, bits, cfg.num_layers)
+    x_p, _ = cycle_batch(rng, cfg.vocab_size, 2)
+    prompt = x_p[:, :16]
+    out_f32 = generate(params, cfg, prompt, max_len=32, gen=16)
+    out_q = generate(qparams, cfg, prompt, max_len=32, gen=16)
+    match = float(jnp.mean(out_f32 == out_q))
+    print(f"   greedy tokens agree on {100*match:.0f}% of steps")
+    assert res.accuracy_degradation <= 0.25, "quantization hurt the LM too much"
 
 
 def quantize_blocks(params, bits_per_block, num_blocks):
     """Fake-quantize the first `len(bits)` stacked blocks layer-wise."""
+    from repro.core.quantizer import fake_quant
     out = jax.tree.map(lambda x: x, params)      # shallow copy
     for per, bp in enumerate(out["blocks"]):
         def q(leaf):
@@ -48,74 +133,6 @@ def quantize_blocks(params, bits_per_block, num_blocks):
             return jnp.stack(new)
         out["blocks"][per] = jax.tree.map(q, bp)
     return out
-
-
-def main():
-    cfg = dataclasses.replace(
-        get_config("smollm-135m"), name="smollm-8m", num_layers=4,
-        d_model=256, num_heads=4, num_kv_heads=2, head_dim=64, d_ff=768,
-        vocab_size=2048, tp_pad=1, dtype="float32")
-    key = jax.random.key(0)
-    params = T.init_params(key, cfg)
-
-    print("1) briefly train so quantization has something to preserve...")
-    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=1e-3, warmup_steps=10,
-                                                    total_steps=150),
-                                   remat=False), donate_argnums=(0, 1))
-    opt = init_opt_state(params)
-    stream = TokenStream(TokenStreamConfig(vocab_size=cfg.vocab_size,
-                                           seq_len=129, batch_size=16))
-    for i, batch in enumerate(stream.batches()):
-        if i >= 150:
-            break
-        params, opt, m = step(params, opt, batch)
-    print(f"   final loss {float(m['loss']):.3f}")
-
-    print("2) solve layer-wise bits + partition for an edge request...")
-    specs = transformer_layer_specs(cfg, seq_len=128, batch=1,
-                                    mode="prefill")[1:]   # skip embed row
-    L = len(specs)
-    dev, ch, w = DeviceProfile(), Channel(capacity_bps=20e6), ObjectiveWeights()
-    # noise stats: analytic scale (quantizer round-off law) with uniform
-    # robustness — the LM analogue of Alg. 1's probes at CPU-budget scale
-    rng = np.random.default_rng(0)
-    s = np.array([sp.z_w for sp in specs]) * 1e-4
-    rho = np.full(L, 1e-3)
-    # privacy constraint: raw tokens must not leave the device, so full
-    # offload (p = 0) is excluded — the solver picks the cheapest cut among
-    # on-device segments (allow_full_offload=False)
-    best, plans = solve_joint(
-        [sp.z_w for sp in specs], [sp.z_x for sp in specs], s, s, rho,
-        [sp.o for sp in specs], xi=xi_coeff(w, dev),
-        delta_cost=delta_coeff(w, ServerProfile()),
-        eps=eps_coeff(w, dev, ch), psi_budget=1e-2,
-        allow_full_offload=False, input_z=128.0)
-    bits = np.asarray(round_bits(best.bits_w))
-    print(f"   partition p = {best.p}/{L} blocks on-device, bits = {bits}")
-
-    f32_bits = sum(sp.z_w for sp in specs[:best.p]) * 32
-    print(f"   device-segment payload: {best.payload_bits/1e6:.1f} Mbit vs "
-          f"{f32_bits/1e6:.1f} Mbit f32 "
-          f"({100*(1-best.payload_bits/max(f32_bits,1)):.0f}% saved)")
-
-    print("3) generate with quantized weights, compare to f32...")
-    qparams = quantize_blocks(params, bits, cfg.num_layers)
-    prompt = next(stream.batches())["tokens"][:2, :32]
-    out_f32 = generate(params, cfg, prompt, max_len=48, gen=16)
-    out_q = generate(qparams, cfg, prompt, max_len=48, gen=16)
-    match = float(jnp.mean(out_f32 == out_q))
-    print(f"   greedy tokens agree on {100*match:.0f}% of steps")
-
-    # eval: quantized xent vs f32 xent on held-out stream
-    from repro.train.train_loop import lm_loss
-    eval_batch = next(TokenStream(TokenStreamConfig(
-        vocab_size=cfg.vocab_size, seq_len=129, batch_size=16,
-        seed=9)).batches())
-    l_f32, _ = lm_loss(params, cfg, eval_batch, remat=False)
-    l_q, _ = lm_loss(qparams, cfg, eval_batch, remat=False)
-    print(f"   eval xent: f32 {float(l_f32):.4f} vs quantized "
-          f"{float(l_q):.4f} (delta {float(l_q - l_f32):+.4f})")
-    assert float(l_q - l_f32) < 0.1, "quantization hurt the LM too much"
 
 
 if __name__ == "__main__":

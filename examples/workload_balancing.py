@@ -15,6 +15,7 @@ from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
                                    ServerProfile)
 from repro.data.pipeline import minibatches, synthetic_mnist
 from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.backends import ClassifierBackend
 from repro.serving.qpart_server import QPARTServer
 from repro.serving.scheduler import WorkloadBalancer, total_latency
 from repro.serving.simulator import InferenceRequest
@@ -32,16 +33,20 @@ def main():
     @jax.jit
     def step(p, x, y):
         _, g = jax.value_and_grad(loss_fn)(p, x, y)
-        return jax.tree.map(lambda a, b: a - 0.05 * b, p, g)
+        return jax.tree.map(lambda a, b: a - 0.1 * b, p, g)
 
     it = minibatches(x_tr, y_tr, 128)
     for _ in range(400):
         bx, by = next(it)
         params = step(params, bx, by)
 
-    srv = QPARTServer()
-    srv.register_model("mnist", MNIST_MLP, params,
-                       x_te[2048:3072], y_te[2048:3072])
+    # a 1 GHz shared server: strong enough that low-load requests offload
+    # layers to it, weak enough that a 48-request backlog visibly moves
+    # the Eq. 17 optimum toward the devices
+    shared = ServerProfile(f_clock=1e9)
+    srv = QPARTServer(shared)
+    srv.register("mnist", ClassifierBackend(MNIST_MLP, params),
+                 x_te[2048:3072], y_te[2048:3072])
     srv.calibrate("mnist")
     dev = DeviceProfile()
     ch = Channel(capacity_bps=2e6)
@@ -50,7 +55,7 @@ def main():
 
     reqs = [InferenceRequest("mnist", 0.01, dev, ch, w, segment_cached=True)
             for _ in range(48)]
-    bal = WorkloadBalancer(ServerProfile(), policy="fcfs")
+    bal = WorkloadBalancer(shared, policy="fcfs")
     results = bal.schedule(srv, reqs)
     print(f"\n{'req':>4} {'queue ms':>9} {'p':>2}  (identical requests; the "
           f"growing queue pushes work on-device)")
@@ -66,9 +71,9 @@ def main():
     strong = dataclasses.replace(dev, f_clock=2e9)
     mixed = [InferenceRequest("mnist", 0.01, strong if i % 2 else dev, ch, w,
                               segment_cached=True) for i in range(12)]
-    t_f = total_latency(WorkloadBalancer(ServerProfile(),
+    t_f = total_latency(WorkloadBalancer(shared,
                                          policy="fcfs").schedule(srv, mixed))
-    t_b = total_latency(WorkloadBalancer(ServerProfile(),
+    t_b = total_latency(WorkloadBalancer(shared,
                                          policy="balanced").schedule(srv, mixed))
     print(f"\nheterogeneous window of 12: total latency "
           f"FCFS {t_f*1e3:.1f} ms vs balanced {t_b*1e3:.1f} ms "

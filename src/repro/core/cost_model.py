@@ -16,7 +16,7 @@ import math
 from typing import List, Optional
 
 from repro.configs.base import ATTN, ModelConfig
-from repro.configs.classifier import ClassifierConfig, ConvSpec, DenseSpec
+from repro.configs.classifier import ClassifierConfig, DenseSpec
 
 
 @dataclasses.dataclass(frozen=True)

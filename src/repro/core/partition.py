@@ -26,30 +26,55 @@ class DeviceSegment:
     payload_bits: float          # exact wire size (Eq. 14)
 
 
-def split_classifier(params: List[dict], plan: PartitionPlan,
-                     layer_specs) -> tuple[DeviceSegment, List[dict]]:
-    """Split + quantize a classifier at plan.p. Returns (device, server)."""
+def split_blocks(layer_params: List, plan: PartitionPlan,
+                 layer_specs) -> DeviceSegment:
+    """Split + quantize a per-layer parameter list (classifier layer
+    dicts, transformer block pytrees — any pytree per layer) at plan.p.
+    Only the device segment is materialized; the server side keeps the
+    caller's full-precision params."""
+    import jax
     p = plan.p
     bits_int = np.asarray(round_bits(plan.bits_w)) if p else np.zeros(0, int)
     dev_params = []
     wire = 0.0
     for i in range(p):
         b = int(bits_int[i])
-        q = {k: fake_quant(v, b) for k, v in params[i].items()}
-        dev_params.append(q)
-        n = sum(int(np.prod(v.shape)) for v in params[i].values())
+        dev_params.append(jax.tree.map(lambda t, b=b: fake_quant(t, b),
+                                       layer_params[i]))
+        n = sum(int(np.prod(v.shape))
+                for v in jax.tree.leaves(layer_params[i]))
         wire += float(payload_bits(n, b))
     bits_x = int(round_bits(np.array([plan.bits_x]))[0]) if p else 32
     # activation payload counted when the device sends the cut activation
     wire_x = float(payload_bits(int(layer_specs[p - 1].z_x), bits_x)) if p else 0.0
-    seg = DeviceSegment(dev_params, bits_int, bits_x, wire + wire_x)
-    return seg, list(params[p:])
+    return DeviceSegment(dev_params, bits_int, bits_x, wire + wire_x)
+
+
+def split_classifier(params: List[dict], plan: PartitionPlan,
+                     layer_specs) -> tuple[DeviceSegment, List[dict]]:
+    """Split + quantize a classifier at plan.p. Returns (device, server)."""
+    seg = split_blocks(params, plan, layer_specs)
+    return seg, list(params[plan.p:])
 
 
 def segment_memory_bytes(seg: DeviceSegment) -> float:
     """Device memory footprint of the quantized segment (packed codes)."""
+    import jax
     total = 0.0
     for i, lp in enumerate(seg.params):
-        n = sum(int(np.prod(v.shape)) for v in lp.values())
+        n = sum(int(np.prod(v.shape)) for v in jax.tree.leaves(lp))
         total += n * int(seg.bits_w[i]) / 8.0
     return total
+
+
+def plan_memory_bytes(plan: PartitionPlan, layer_specs) -> float:
+    """Analytic device memory (bytes) a plan's quantized segment occupies
+    at the deployed (ceil-rounded) bit-widths — the quantity serve-time
+    admission checks against ``DeviceProfile.memory_bytes``. Equals
+    ``plan.device_memory_bytes`` when the plan came out of the solver;
+    provided for plans built elsewhere (baseline stubs, tests)."""
+    if plan.p == 0:
+        return 0.0
+    bits = np.clip(np.ceil(np.asarray(plan.bits_w, np.float64)), 2, 16)
+    z_w = np.array([sp.z_w for sp in layer_specs[:plan.p]], np.float64)
+    return float(np.sum(bits * z_w) / 8.0)

@@ -38,7 +38,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence
+from typing import List, Sequence
 
 import numpy as np
 
@@ -233,6 +233,10 @@ class PartitionPlan:
     payload_w_bits: float = 0.0   # weight share of the wire (Eq. 14 Z_w)
     payload_x_bits: float = 0.0   # activation share (Z_x) — all that is
                                   # left when the device cached the segment
+    device_memory_bytes: float = 0.0   # quantized-segment footprint at the
+                                       # DEPLOYED (ceil-rounded) bit-widths —
+                                       # what DeviceProfile.memory_bytes is
+                                       # checked against at plan time
 
 
 def plan_for_partition(p: int, layer_z_w, layer_z_x, layer_s_w, layer_s_x,
@@ -263,12 +267,15 @@ def plan_for_partition(p: int, layer_z_w, layer_z_x, layer_s_w, layer_s_x,
     payload = sol.payload_bits
     payload_x = float(sol.bits[-1] * items.z[-1])
     obj = xi * o1 + delta_cost * o2 + eps * payload
+    mem = float(np.sum(np.clip(np.ceil(sol.bits[:-1]), 2, 16)
+                       * items.z[:-1]) / 8.0)
     return PartitionPlan(
         p=p, bits_w=sol.bits[:-1], bits_x=float(sol.bits[-1]),
         objective=float(obj), psi_total=sol.psi_total, payload_bits=payload,
         breakdown={"compute_local": xi * o1, "compute_server": delta_cost * o2,
                    "payload": eps * payload},
-        payload_w_bits=payload - payload_x, payload_x_bits=payload_x)
+        payload_w_bits=payload - payload_x, payload_x_bits=payload_x,
+        device_memory_bytes=mem)
 
 
 def _segment_matrices(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho):
@@ -293,23 +300,29 @@ def _segment_matrices(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho):
     return z, s, rho, valid
 
 
-def _plans_from_rows(bits, psi, payload, layer_z_x, o_cum, o_total, xi,
-                     delta_cost, eps) -> List[PartitionPlan]:
+def _plans_from_rows(bits, psi, payload, layer_z_w, layer_z_x, o_cum,
+                     o_total, xi, delta_cost, eps) -> List[PartitionPlan]:
     """Materialize PartitionPlans for p=1..L from one batched solution
     block (row r = partition p=r+1)."""
     L = bits.shape[0]
+    z_w = np.asarray(layer_z_w, np.float64)
     z_x = np.asarray(layer_z_x, np.float64)
     o_cum = np.asarray(o_cum, np.float64)
     payload_x = bits[:, L] * z_x
     o1 = o_cum
     o2 = o_total - o1
     obj = xi * o1 + delta_cost * o2 + eps * payload
+    # deployed (ceil-rounded) segment footprint, weight columns 0..r only
+    tril = np.tril(np.ones((L, L), bool))
+    mem = np.where(tril, np.clip(np.ceil(bits[:, :L]), 2, 16) * z_w[None, :],
+                   0.0).sum(axis=1) / 8.0
     # bulk scalar extraction (tolist) beats per-element numpy-scalar float()
     bits_x_l = bits[:, L].tolist()
     obj_l, psi_l, pay_l = obj.tolist(), psi.tolist(), payload.tolist()
     pay_x_l = payload_x.tolist()
     loc_l, srv_l = (xi * o1).tolist(), (delta_cost * o2).tolist()
     eps_pay_l = (eps * payload).tolist()
+    mem_l = mem.tolist()
     plans = []
     for r in range(L):
         p = r + 1
@@ -321,7 +334,8 @@ def _plans_from_rows(bits, psi, payload, layer_z_x, o_cum, o_total, xi,
                        "compute_server": srv_l[r],
                        "payload": eps_pay_l[r]},
             payload_w_bits=pay_l[r] - pay_x_l[r],
-            payload_x_bits=pay_x_l[r]))
+            payload_x_bits=pay_x_l[r],
+            device_memory_bytes=mem_l[r]))
     return plans
 
 
@@ -343,8 +357,8 @@ def plan_all_partitions(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
                                          layer_s_x, layer_rho)
     bits, _lam, psi, payload = waterfill_bits_batch(
         z, s, rho, valid, psi_budget, b_min, b_max)
-    plans += _plans_from_rows(bits, psi, payload, layer_z_x, o_cum, o_total,
-                              xi, delta_cost, eps)
+    plans += _plans_from_rows(bits, psi, payload, layer_z_w, layer_z_x,
+                              o_cum, o_total, xi, delta_cost, eps)
     return plans
 
 
@@ -390,6 +404,7 @@ class OfflineStore:
     def __post_init__(self):
         self._level_plans_cache: dict = {}
         self._payload_rows_cache: dict = {}
+        self._memory_rows_cache: dict = {}
 
     # -- fast accessors for the batched online path (DESIGN.md §5) ------
     def level_for(self, a: float) -> float:
@@ -418,11 +433,29 @@ class OfflineStore:
                 np.array([pl.payload_x_bits for pl in cands]))
         return self._payload_rows_cache[a_star]
 
-    def lookup(self, a: float, objective_fn) -> PartitionPlan:
+    def level_memory_rows(self, a_star: float) -> np.ndarray:
+        """(P+1,) deployed device-segment memory (bytes) of one level's
+        candidates — what the plan-time DeviceProfile.memory_bytes check
+        compares against (p=0 holds no weights on the device)."""
+        if a_star not in self._memory_rows_cache:
+            self._memory_rows_cache[a_star] = np.array(
+                [pl.device_memory_bytes for pl in self.level_plans(a_star)])
+        return self._memory_rows_cache[a_star]
+
+    def lookup(self, a: float, objective_fn,
+               feasible_fn=None) -> PartitionPlan:
         """Alg. 2: pick the largest tabulated level <= a, then the partition
         point minimizing the runtime objective (which may differ from the
-        offline objective because the channel/device changed)."""
+        offline objective because the channel/device changed).
+        ``feasible_fn(plan) -> bool`` drops candidates before the argmin
+        (e.g. quantized segments that exceed the device memory); the
+        first-minimum tie-break over the surviving candidates matches the
+        masked-argmin of the batched window path."""
         cands = self.level_plans(self.level_for(a))
+        if feasible_fn is not None:
+            cands = [pl for pl in cands if feasible_fn(pl)]
+            if not cands:
+                raise ValueError("no feasible partition candidate")
         return min(cands, key=objective_fn)
 
 
@@ -453,8 +486,8 @@ def build_offline_store(levels, budgets, layer_z_w, layer_z_x, layer_s_w,
                 b_min, b_max, input_z=input_z)
             rows = slice(i * L, (i + 1) * L)
             for p, plan in enumerate(_plans_from_rows(
-                    bits[rows], psi[rows], payload[rows], layer_z_x, o_cum,
-                    o_total, xi, delta_cost, eps), start=1):
+                    bits[rows], psi[rows], payload[rows], layer_z_w,
+                    layer_z_x, o_cum, o_total, xi, delta_cost, eps), start=1):
                 plans[(a, p)] = plan
     else:
         for a in levels:

@@ -12,7 +12,7 @@ shardable, no device allocation — for every model input of the step.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -7,11 +7,9 @@ mesh with the same sharded step functions the dry-run lowers.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -20,7 +18,7 @@ from repro.data.pipeline import TokenStream, TokenStreamConfig
 from repro.launch import sharding as shard_lib
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
-from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.checkpoint import save_checkpoint
 from repro.train.optimizer import AdamWConfig, init_opt_state
 from repro.train.train_loop import make_train_step
 

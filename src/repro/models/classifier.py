@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.configs.classifier import ClassifierConfig, ConvSpec, DenseSpec
+from repro.configs.classifier import ClassifierConfig, DenseSpec
 from repro.models.common import dense_init
 
 
@@ -87,3 +87,10 @@ def forward_from_layer(params, cfg: ClassifierConfig, x, start: int):
         x = _apply_layer(cfg.layers[i], params[i], x,
                          last=i == cfg.num_layers - 1)
     return x
+
+
+# Public single-layer entry points for the serving backend
+# (repro.serving.backends.classifier) — partitioned execution applies
+# layers one at a time with swapped (quantized / pruned) params.
+apply_layer = _apply_layer
+ensure_batched = _ensure_batched

@@ -15,7 +15,6 @@ Three entry points mirror the input-shape suite:
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -317,3 +316,22 @@ def decode_step(params, cfg: ModelConfig, token, caches, pos):
     x, caches = jax.lax.scan(scan_fn, x, (tuple(params["blocks"]),
                                           tuple(caches)))
     return _unembed(params, cfg, x), list(caches)
+
+
+# ---------------------------------------------------------------------------
+# Public single-block entry points (repro.serving.backends.transformer):
+# embed/unembed and one block application — the non-scan view of the same
+# math `forward` runs under lax.scan, for paths that need per-block access
+# (QPART noise calibration, partitioned device-segment execution).
+
+embed_tokens = _embed
+unembed = _unembed
+apply_block = _block_apply
+
+
+def block_at(params, cfg: ModelConfig, layer: int):
+    """(block param pytree, period position) of global block index
+    ``layer``: the scan iterates periods on the stacked leading axis and
+    positions within a period, so layer = period * period_len + pos."""
+    per, pos = divmod(layer, period_len(cfg))
+    return jax.tree.map(lambda t: t[per], params["blocks"][pos]), pos

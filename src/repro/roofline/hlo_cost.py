@@ -21,7 +21,6 @@ Accounting rules:
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional
 

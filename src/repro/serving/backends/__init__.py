@@ -1,0 +1,7 @@
+"""Model backends: everything architecture-specific behind one protocol
+(DESIGN.md §6). The serving stack is model-agnostic; a backend owns the
+family's layer specs, forward functions and quantized device-segment
+execution."""
+from repro.serving.backends.base import DeviceExecutor, ModelBackend  # noqa: F401
+from repro.serving.backends.classifier import ClassifierBackend  # noqa: F401
+from repro.serving.backends.transformer import TransformerBackend  # noqa: F401

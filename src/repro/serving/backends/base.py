@@ -1,0 +1,129 @@
+"""The ``ModelBackend`` protocol: everything architecture-specific the
+QPART serving pipeline needs, behind one interface (DESIGN.md §6).
+
+The serving stack (``QPARTServer``, ``pricing``, ``scheduler``,
+``baselines``) is model-agnostic: it speaks plans, costs and accuracy.
+A backend owns the model family — its config, parameters, layer-spec
+builder, forward functions and the quantized device-segment execution —
+so a new architecture plugs into calibrate → build_store → serve by
+implementing this class and nothing else.
+
+Conventions shared by all backends:
+
+  * "layers" are the partitionable units (classifier layers, decoder
+    blocks). ``layer_specs()[l]`` describes layer ``l+1`` in the paper's
+    1-indexed notation; a plan with ``p`` runs layers ``1..p`` on-device.
+  * ``forward``-family methods return the logits the accuracy/noise
+    calibration probes: shape (batch, num_classes) — for decoder LMs the
+    next-token logits at the last position.
+  * every forward method accepts a ``params`` override (default: the
+    backend's own) so the calibration can probe perturbed weights and the
+    baselines can run pruned ones without private model reach-ins.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.core.cost_model import LayerSpec
+from repro.core.partition import DeviceSegment, segment_memory_bytes
+from repro.core.solver import PartitionPlan
+
+
+class ModelBackend(abc.ABC):
+    """Architecture adapter for the QPART serving pipeline."""
+
+    cfg: object          # the family's config dataclass
+    params: object       # canonical full-precision parameters
+
+    # -- structure ------------------------------------------------------
+    @property
+    @abc.abstractmethod
+    def num_layers(self) -> int:
+        """Number of partitionable layers L."""
+
+    @abc.abstractmethod
+    def layer_specs(self, batch: int = 1,
+                    seq_len: Optional[int] = None) -> List[LayerSpec]:
+        """(z_w, z_x, o) per partitionable layer for a request shape."""
+
+    @abc.abstractmethod
+    def input_elements(self) -> float:
+        """Elements of one raw input example — what a full offload (p=0)
+        uploads at 32 bits (the plan table's ``input_z``)."""
+
+    # -- forward family (calibration + measurement) ---------------------
+    @abc.abstractmethod
+    def forward(self, x, params=None):
+        """Full forward: input batch -> logits (B, C)."""
+
+    @abc.abstractmethod
+    def forward_from_layer(self, a, start: int, params=None):
+        """Resume from the activation ENTERING layer ``start`` (0-based):
+        the server-side tail after a partition at p = start."""
+
+    @abc.abstractmethod
+    def layer_activations(self, x, params=None):
+        """(activations entering each layer [x_1..x_L], logits)."""
+
+    @abc.abstractmethod
+    def with_layer_quantized(self, layer: int, bits: int):
+        """Params tree with layer ``layer``'s weights fake-quantized at
+        ``bits`` — the Alg. 1 noise probe's perturbed model."""
+
+    # -- quantized device-segment execution -----------------------------
+    @abc.abstractmethod
+    def split(self, plan: PartitionPlan) -> DeviceSegment:
+        """Materialize the quantized device segment (layers 1..p at the
+        plan's per-layer bit-widths). The server side keeps the backend's
+        own full-precision params."""
+
+    @abc.abstractmethod
+    def run_device_segment(self, seg: DeviceSegment, plan: PartitionPlan, x):
+        """Run layers 1..p on the quantized segment and return the cut
+        activation, quantized at the plan's ``bits_x`` for the uplink."""
+
+    # -- shared logic (family-independent) ------------------------------
+    def device_executor(self, plan: PartitionPlan) -> "DeviceExecutor":
+        """Callable quantized device segment for ``plan``."""
+        return DeviceExecutor(self, plan, self.split(plan))
+
+    def execute_plan(self, plan: PartitionPlan, x,
+                     executor: Optional["DeviceExecutor"] = None):
+        """Really run the partitioned, quantized model: quantized device
+        segment, quantized cut activation, full-precision server tail.
+        ``executor`` reuses an already-materialized device segment
+        (``Deployment`` passes its cached one)."""
+        if plan.p == 0:
+            return self.forward(x)
+        h = (executor or self.device_executor(plan))(x)
+        return self.forward_from_layer(h, plan.p)
+
+    def evaluate(self, x, y, params=None) -> float:
+        """Top-1 accuracy of the (full-precision) forward on (x, y)."""
+        logits = self.forward(x, params=params)
+        return float(jnp.mean(jnp.argmax(logits, -1) == y))
+
+
+@dataclasses.dataclass
+class DeviceExecutor:
+    """A materialized quantized device segment, callable on inputs: what a
+    ``Deployment`` ships to the edge device. ``__call__`` maps a raw input
+    batch to the quantized cut activation (the uplink payload)."""
+    backend: ModelBackend
+    plan: PartitionPlan
+    segment: DeviceSegment
+
+    def __call__(self, x):
+        return self.backend.run_device_segment(self.segment, self.plan, x)
+
+    @property
+    def payload_bits(self) -> float:
+        return self.segment.payload_bits
+
+    @property
+    def memory_bytes(self) -> float:
+        return segment_memory_bytes(self.segment)

@@ -1,0 +1,82 @@
+"""``ClassifierBackend`` — the paper's own MLP/CNN evaluation models
+behind the ``ModelBackend`` protocol.
+
+This is the code that used to be inlined across ``qpart_server.py`` and
+``baselines.py`` (both reaching into ``repro.models.classifier``'s
+private ``_apply_layer``/``_ensure_batched``); it now lives here once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.configs.classifier import ClassifierConfig, DenseSpec
+from repro.core.cost_model import LayerSpec, classifier_layer_specs
+from repro.core.partition import DeviceSegment, split_classifier
+from repro.core.quantizer import fake_quant
+from repro.models.classifier import (apply_layer, classifier_forward,
+                                     ensure_batched, forward_from_layer,
+                                     layer_activations)
+from repro.serving.backends.base import ModelBackend
+
+
+@dataclasses.dataclass
+class ClassifierBackend(ModelBackend):
+    """cfg: ClassifierConfig; params: list of per-layer {"w", "b"} dicts
+    (``repro.models.classifier.init_classifier``)."""
+    cfg: ClassifierConfig
+    params: list
+
+    @property
+    def num_layers(self) -> int:
+        return self.cfg.num_layers
+
+    def layer_specs(self, batch: int = 1,
+                    seq_len: Optional[int] = None) -> List[LayerSpec]:
+        return classifier_layer_specs(self.cfg, batch=batch)
+
+    def input_elements(self) -> float:
+        return float(np.prod(self.cfg.input_shape))
+
+    # -- forward family -------------------------------------------------
+    def forward(self, x, params=None):
+        return classifier_forward(self.params if params is None else params,
+                                  self.cfg, x)
+
+    def forward_from_layer(self, a, start: int, params=None):
+        return forward_from_layer(self.params if params is None else params,
+                                  self.cfg, a, start)
+
+    def layer_activations(self, x, params=None):
+        return layer_activations(self.params if params is None else params,
+                                 self.cfg, x)
+
+    def with_layer_quantized(self, layer: int, bits: int):
+        noisy = list(self.params)
+        noisy[layer] = {k: fake_quant(v, bits)
+                        for k, v in self.params[layer].items()}
+        return noisy
+
+    # -- device-segment execution ---------------------------------------
+    def run_prefix(self, x, p: int, params=None):
+        """Activation leaving layer p when layers 1..p run with ``params``
+        (default: the backend's own; a device segment's quantized list or
+        a baseline's pruned list both index the same way)."""
+        params = self.params if params is None else params
+        h = ensure_batched(x, self.cfg)
+        if isinstance(self.cfg.layers[0], DenseSpec):
+            h = h.reshape(h.shape[0], -1)
+        for l in range(p):
+            h = apply_layer(self.cfg.layers[l], params[l], h,
+                            last=l == self.cfg.num_layers - 1)
+        return h
+
+    def split(self, plan) -> DeviceSegment:
+        seg, _server = split_classifier(self.params, plan, self.layer_specs())
+        return seg
+
+    def run_device_segment(self, seg: DeviceSegment, plan, x):
+        h = self.run_prefix(x, plan.p, params=seg.params)
+        return fake_quant(h, int(seg.bits_x))

@@ -1,0 +1,136 @@
+"""``TransformerBackend`` — decoder LMs behind the ``ModelBackend``
+protocol, so a transformer goes through the SAME calibrate →
+``build_store`` → serve pipeline as the paper's classifiers.
+
+Mapping onto the protocol:
+
+  * partitionable layers = the decoder blocks (the embedding table always
+    stays on-device — it starts the computation — and is not shipped, so
+    it carries no payload term; ``transformer_layer_specs``'s embed row is
+    dropped).
+  * "logits" = next-token logits at the LAST sequence position, shape
+    (B, V): the calibration's adversarial-margin and accuracy math
+    (``core.noise``) applies unchanged, with y = the next token.
+  * block-by-block execution uses the public non-scan entry points of
+    ``repro.models.transformer`` (``embed_tokens`` / ``apply_block`` /
+    ``unembed``) — numerically the same math ``forward`` runs under
+    ``lax.scan``, needed here because calibration probes and partitioned
+    execution address single blocks.
+
+Intended for reduced/small configs on the serving host: the per-block
+Python loop trades scan's compile-time depth-independence for block
+addressability.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.core.cost_model import LayerSpec, transformer_layer_specs
+from repro.core.partition import DeviceSegment, split_blocks
+from repro.core.quantizer import fake_quant
+from repro.models import rope as rope_lib
+from repro.models import transformer as T
+from repro.serving.backends.base import ModelBackend
+
+
+@dataclasses.dataclass
+class TransformerBackend(ModelBackend):
+    """cfg: ModelConfig; params: ``transformer.init_params`` tree.
+    ``seq_len`` is the reference sequence length requests are planned at
+    (inputs are token batches of shape (B, seq_len)); ``mode`` follows
+    ``transformer_layer_specs`` ("prefill" | "decode")."""
+    cfg: ModelConfig
+    params: dict
+    seq_len: int
+    mode: str = "prefill"
+    # jitted (embed →) blocks-from-start → last-position logits, keyed by
+    # start block (-1 = token input). Calibration probes re-enter these
+    # with perturbed params of the SAME pytree structure, so each start
+    # traces once.
+    _jits: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
+
+    @property
+    def num_layers(self) -> int:
+        return self.cfg.num_layers
+
+    def _logits_fn(self, start: int):
+        if start not in self._jits:
+            def f(params, a):
+                if start < 0:
+                    a = T.embed_tokens(params, self.cfg, a)
+                h = self._run_blocks(params, a, max(start, 0),
+                                     self.num_layers)
+                return T.unembed(params, self.cfg, h)[:, -1, :]
+            self._jits[start] = jax.jit(f)
+        return self._jits[start]
+
+    def layer_specs(self, batch: int = 1,
+                    seq_len: Optional[int] = None) -> List[LayerSpec]:
+        return transformer_layer_specs(
+            self.cfg, seq_len or self.seq_len, batch=batch,
+            mode=self.mode)[1:]                      # drop the embed row
+
+    def input_elements(self) -> float:
+        return float(self.seq_len)                   # token ids per example
+
+    # -- block-by-block forward family ----------------------------------
+    def _positions(self, b: int, s: int):
+        return rope_lib.text_positions(b, s)
+
+    def _run_blocks(self, params, h, start: int, stop: int):
+        b, s, _ = h.shape
+        positions = self._positions(b, s)
+        for l in range(start, stop):
+            bp, pos = T.block_at(params, self.cfg, l)
+            h, _, _ = T.apply_block(bp, self.cfg, pos, h, positions)
+        return h
+
+    def forward(self, x, params=None):
+        return self._logits_fn(-1)(self.params if params is None else params,
+                                   x)
+
+    def forward_from_layer(self, a, start: int, params=None):
+        return self._logits_fn(start)(
+            self.params if params is None else params, a)
+
+    def layer_activations(self, x, params=None):
+        params = self.params if params is None else params
+        h = T.embed_tokens(params, self.cfg, x)
+        b, s, _ = h.shape
+        positions = self._positions(b, s)
+        acts = []
+        for l in range(self.num_layers):
+            acts.append(h)
+            bp, pos = T.block_at(params, self.cfg, l)
+            h, _, _ = T.apply_block(bp, self.cfg, pos, h, positions)
+        return acts, T.unembed(params, self.cfg, h)[:, -1, :]
+
+    def with_layer_quantized(self, layer: int, bits: int):
+        plen = T.period_len(self.cfg)
+        per, pos = divmod(layer, plen)
+        blocks = list(self.params["blocks"])
+        blocks[pos] = jax.tree.map(
+            lambda t: t.at[per].set(fake_quant(t[per], bits)), blocks[pos])
+        return {**self.params, "blocks": blocks}
+
+    # -- device-segment execution ---------------------------------------
+    def _device_blocks(self, p: int):
+        return [T.block_at(self.params, self.cfg, l)[0] for l in range(p)]
+
+    def split(self, plan) -> DeviceSegment:
+        return split_blocks(self._device_blocks(plan.p), plan,
+                            self.layer_specs())
+
+    def run_device_segment(self, seg: DeviceSegment, plan, x):
+        h = T.embed_tokens(self.params, self.cfg, x)
+        b, s, _ = h.shape
+        positions = self._positions(b, s)
+        for l in range(plan.p):
+            pos = l % T.period_len(self.cfg)
+            h, _, _ = T.apply_block(seg.params[l], self.cfg, pos, h, positions)
+        return fake_quant(h, int(seg.bits_x))

@@ -12,24 +12,26 @@ Table III):
     keep measured accuracy degradation comparable to QPART's budget, which
     shrinks both the shipped weights and the cut activation.
 
-Every baseline returns the same ``ServingResult`` as QPART (priced by the
-same simulator), so the comparison is apples-to-apples.
+Every baseline takes a ``ModelBackend`` and returns the same
+``ServingResult`` as QPART (priced by the same simulator), so the
+comparison is apples-to-apples. All model execution goes through the
+backend's forward family / ``run_prefix`` — no private model reach-ins.
+The pruning baseline additionally assumes the classifier param layout
+(a list of per-layer ``{"w", "b"}`` dicts) since magnitude pruning is
+defined on those weight matrices.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.classifier import ClassifierConfig, DenseSpec
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
                                    ServerProfile, cost_breakdown)
 from repro.core.solver import PartitionPlan
-from repro.models.classifier import (classifier_forward, forward_from_layer,
-                                     layer_activations)
+from repro.serving.backends.base import ModelBackend
 from repro.serving.simulator import ServingResult
 
 
@@ -51,23 +53,28 @@ def _result(plan, specs, device, server, channel, weights,
                          payload_bits=plan.payload_bits)
 
 
+def _measure(res: ServingResult, logits, test_y,
+             base_accuracy: Optional[float]) -> None:
+    res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
+    if base_accuracy is not None:
+        res.accuracy_degradation = base_accuracy - res.accuracy
+
+
 # ---------------------------------------------------------------------------
 # 1. No optimization.
 
-def no_opt_offload(params, cfg: ClassifierConfig, specs, p: int,
+def no_opt_offload(backend: ModelBackend, p: int,
                    device: DeviceProfile, server: ServerProfile,
                    channel: Channel, weights: ObjectiveWeights,
                    test_x=None, test_y=None,
                    base_accuracy: Optional[float] = None) -> ServingResult:
     """Ship segment + activation at f32; accuracy == base model."""
+    specs = backend.layer_specs()
     wire = sum(specs[i].z_w for i in range(p)) * 32.0
-    wire += (specs[p - 1].z_x if p else float(np.prod(cfg.input_shape))) * 32.0
+    wire += (specs[p - 1].z_x if p else backend.input_elements()) * 32.0
     res = _result(_plan_stub(p, wire), specs, device, server, channel, weights)
     if test_x is not None:
-        logits = classifier_forward(params, cfg, test_x)
-        res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
-        if base_accuracy is not None:
-            res.accuracy_degradation = base_accuracy - res.accuracy
+        _measure(res, backend.forward(test_x), test_y, base_accuracy)
     return res
 
 
@@ -80,15 +87,17 @@ class AutoencoderBaseline:
     calibration activations (closed form — no SGD needed for a linear AE)."""
     code_ratio: float = 0.25      # code dim = ratio * activation dim
 
-    def offload(self, params, cfg, specs, p: int, calib_x,
+    def offload(self, backend: ModelBackend, p: int, calib_x,
                 device, server, channel, weights,
                 test_x=None, test_y=None,
                 base_accuracy: Optional[float] = None) -> ServingResult:
         assert p >= 1, "autoencoder needs an on-device segment"
-        acts, logits_c = layer_activations(params, cfg, calib_x)
+        specs = backend.layer_specs()
+        L = backend.num_layers
+        acts, logits_c = backend.layer_activations(calib_x)
         # the cut activation = OUTPUT of layer p (input of p+1); at p == L
         # that's the logits themselves
-        a = acts[p] if p < cfg.num_layers else logits_c
+        a = acts[p] if p < L else logits_c
         a = a.reshape(a.shape[0], -1)
         d = a.shape[-1]
         code = max(int(d * self.code_ratio), 1)
@@ -108,16 +117,13 @@ class AutoencoderBaseline:
         res = _result(_plan_stub(p, wire), specs, device, server, channel,
                       weights, extra_dev, extra_srv)
         if test_x is not None:
-            acts_t, logits_t = layer_activations(params, cfg, test_x)
-            at = acts_t[p] if p < cfg.num_layers else logits_t
+            acts_t, logits_t = backend.layer_activations(test_x)
+            at = acts_t[p] if p < L else logits_t
             shape_t = at.shape
             at = at.reshape(at.shape[0], -1)
             recon = ((at - mu) @ enc @ enc.T + mu).reshape(shape_t)
-            logits = forward_from_layer(params, cfg, recon, p) \
-                if p < cfg.num_layers else recon
-            res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
-            if base_accuracy is not None:
-                res.accuracy_degradation = base_accuracy - res.accuracy
+            logits = backend.forward_from_layer(recon, p) if p < L else recon
+            _measure(res, logits, test_y, base_accuracy)
         res.extra["code_dim"] = code
         return res
 
@@ -125,71 +131,55 @@ class AutoencoderBaseline:
 # ---------------------------------------------------------------------------
 # 3. Magnitude pruning of the device segment ([44][45]).
 
+def _pruned_params(params, p: int, retain: float):
+    pruned = [dict(lp) for lp in params]
+    kept_elems = []
+    for i in range(p):
+        w = pruned[i]["w"]
+        thresh = jnp.quantile(jnp.abs(w), 1.0 - retain)
+        mask = jnp.abs(w) >= thresh
+        pruned[i]["w"] = w * mask
+        kept_elems.append(float(mask.sum()))
+    return pruned, kept_elems
+
+
 @dataclasses.dataclass
 class PruningBaseline:
     retain: float = 0.5           # fraction of weights kept per layer
 
-    def offload(self, params, cfg, specs, p: int,
+    def offload(self, backend: ModelBackend, p: int,
                 device, server, channel, weights,
                 test_x=None, test_y=None,
                 base_accuracy: Optional[float] = None) -> ServingResult:
-        pruned = [dict(lp) for lp in params]
-        kept_elems = []
-        for i in range(p):
-            w = pruned[i]["w"]
-            thresh = jnp.quantile(jnp.abs(w), 1.0 - self.retain)
-            mask = jnp.abs(w) >= thresh
-            pruned[i]["w"] = w * mask
-            kept_elems.append(float(mask.sum()))
+        specs = backend.layer_specs()
+        pruned, kept_elems = _pruned_params(backend.params, p, self.retain)
         # wire: sparse encoding ~ (32-bit value + 32-bit index) per kept
         # weight — the honest cost of unstructured sparsity
         wire = sum(k * 64.0 for k in kept_elems)
-        wire += (specs[p - 1].z_x if p else float(np.prod(cfg.input_shape))) * 32.0
+        wire += (specs[p - 1].z_x if p else backend.input_elements()) * 32.0
         # device MACs shrink with the retained fraction
         o_dev = sum(specs[i].o * self.retain for i in range(p))
         o_full_dev = sum(specs[i].o for i in range(p))
         res = _result(_plan_stub(p, wire), specs, device, server, channel,
                       weights, extra_dev_macs=o_dev - o_full_dev)
-        if test_x is not None and p >= 1:
-            from repro.configs.classifier import DenseSpec as _DS
-            from repro.models.classifier import _apply_layer, _ensure_batched
-            h = _ensure_batched(test_x, cfg)
-            if isinstance(cfg.layers[0], _DS):
-                h = h.reshape(h.shape[0], -1)
-            for l in range(p):
-                h = _apply_layer(cfg.layers[l], pruned[l], h,
-                                 last=l == cfg.num_layers - 1)
-            logits = forward_from_layer(params, cfg, h, p)
-            res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
-            if base_accuracy is not None:
-                res.accuracy_degradation = base_accuracy - res.accuracy
-        elif test_x is not None:
-            logits = classifier_forward(params, cfg, test_x)
-            res.accuracy = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
-            if base_accuracy is not None:
-                res.accuracy_degradation = base_accuracy - res.accuracy
+        if test_x is not None:
+            if p >= 1:
+                h = backend.run_prefix(test_x, p, params=pruned)
+                logits = backend.forward_from_layer(h, p)
+            else:
+                logits = backend.forward(test_x)
+            _measure(res, logits, test_y, base_accuracy)
         res.extra["retain"] = self.retain
         return res
 
-    def calibrated(self, params, cfg, specs, p, calib_x, calib_y,
+    def calibrated(self, backend: ModelBackend, p: int, calib_x, calib_y,
                    budget: float, base_accuracy: float):
         """Pick the lowest retention whose measured degradation stays within
         ``budget`` (the paper matches pruning degradation to QPART's)."""
-        from repro.models.classifier import _apply_layer
         for retain in (0.1, 0.2, 0.3, 0.5, 0.7, 0.9, 1.0):
-            pruned = [dict(lp) for lp in params]
-            for i in range(p):
-                w = pruned[i]["w"]
-                thresh = jnp.quantile(jnp.abs(w), 1.0 - retain)
-                pruned[i]["w"] = w * (jnp.abs(w) >= thresh)
-            from repro.configs.classifier import DenseSpec as _DS
-            h = calib_x
-            if isinstance(cfg.layers[0], _DS):
-                h = h.reshape(h.shape[0], -1)
-            for l in range(p):
-                h = _apply_layer(cfg.layers[l], pruned[l], h,
-                                 last=l == cfg.num_layers - 1)
-            logits = forward_from_layer(params, cfg, h, p)
+            pruned, _ = _pruned_params(backend.params, p, retain)
+            h = backend.run_prefix(calib_x, p, params=pruned)
+            logits = backend.forward_from_layer(h, p)
             acc = float(jnp.mean(jnp.argmax(logits, -1) == calib_y))
             if base_accuracy - acc <= budget:
                 return dataclasses.replace(self, retain=retain)

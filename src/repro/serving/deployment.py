@@ -1,0 +1,96 @@
+"""Plan → deploy → execute: the objects the online pipeline hands out.
+
+``QPARTServer`` keys its offline stores by a ``ReferenceContext`` (the
+device/channel/weights Alg. 1 optimized for) and its online entry points
+(``serve`` / ``serve_batch`` / ``WorkloadBalancer.schedule``) return a
+``Deployment``: the chosen plan, its priced costs, and a callable
+quantized device segment — with measurement (really running the
+partitioned, quantized model on a test set) an explicit separate step,
+``Deployment.execute``, instead of an optional side effect of serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights)
+from repro.core.solver import PartitionPlan
+from repro.serving.backends.base import DeviceExecutor, ModelBackend
+from repro.serving.simulator import InferenceRequest, ServingResult
+
+
+@dataclasses.dataclass(frozen=True)
+class ReferenceContext:
+    """The (device, channel, weights) a pattern store was built against
+    (Alg. 1's reference request). Hashable — all three profiles are frozen
+    dataclasses — so one model holds stores for many contexts side by
+    side instead of each ``build_store`` overwriting the last."""
+    device: DeviceProfile
+    channel: Channel
+    weights: ObjectiveWeights
+
+
+@dataclasses.dataclass
+class Deployment:
+    """One served request: the plan Alg. 2 picked, its priced costs, and
+    the means to really run it. Cheap to create — the quantized segment
+    materializes lazily on first ``device_segment()``/``execute`` so the
+    batched pricing paths never pay for quantization."""
+    model: str
+    backend: ModelBackend
+    request: InferenceRequest
+    plan: PartitionPlan
+    result: ServingResult
+    _segment: Optional[DeviceExecutor] = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    # -- convenience views over the priced result -----------------------
+    @property
+    def costs(self):
+        return self.result.costs
+
+    @property
+    def objective(self) -> float:
+        return self.result.objective
+
+    @property
+    def payload_bits(self) -> float:
+        return self.result.payload_bits
+
+    @property
+    def extra(self) -> dict:
+        return self.result.extra
+
+    @property
+    def accuracy(self):
+        return self.result.accuracy
+
+    @property
+    def accuracy_degradation(self):
+        return self.result.accuracy_degradation
+
+    # -- deploy ---------------------------------------------------------
+    def device_segment(self) -> DeviceExecutor:
+        """The callable quantized device segment (lazily materialized):
+        maps a raw input batch to the quantized cut activation the device
+        would uplink. Cached — repeated execute calls quantize once."""
+        if self._segment is None:
+            self._segment = self.backend.device_executor(self.plan)
+        return self._segment
+
+    # -- execute --------------------------------------------------------
+    def execute(self, test_x, test_y) -> ServingResult:
+        """Really run the partitioned, quantized model on (test_x,
+        test_y): quantized device segment, quantized cut activation,
+        full-precision server tail. Fills ``result.accuracy`` and
+        ``result.accuracy_degradation`` (vs the full-precision model on
+        the SAME test set) and returns the result."""
+        executor = self.device_segment() if self.plan.p else None
+        logits = self.backend.execute_plan(self.plan, test_x,
+                                           executor=executor)
+        import jax.numpy as jnp
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
+        base = self.backend.evaluate(test_x, test_y)
+        self.result.accuracy = acc
+        self.result.accuracy_degradation = base - acc
+        return self.result

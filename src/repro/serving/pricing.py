@@ -5,18 +5,22 @@ group (DESIGN.md §5).
     obj[r, p] = xi_r · O1[p] + delta_r · (O_total − O1[p]) + eps_r · wire[r, p]
 
 This is the single implementation both batched online paths build on:
-``QPARTServer.serve_batch`` (argmin per row → ServingResult) and
-``WorkloadBalancer`` (adds the queue term per admission step).
+``QPARTServer.serve_batch`` (argmin per row → Deployment) and
+``WorkloadBalancer`` (adds the queue term per admission step). Partition
+candidates whose deployed quantized segment exceeds the request device's
+``memory_bytes`` are masked to +inf before any argmin — the matrix form
+of the scalar path's ``OfflineStore.lookup`` feasibility filter.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import (ServerProfile, classifier_layer_specs,
-                                   delta_coeff, eps_coeff, xi_coeff)
+from repro.core.cost_model import (ServerProfile, delta_coeff, eps_coeff,
+                                   xi_coeff)
+from repro.serving.deployment import ReferenceContext
 from repro.serving.simulator import InferenceRequest
 
 
@@ -49,8 +53,13 @@ class WindowTable:
 
 
 def price_window(models, server: ServerProfile,
-                 requests: Sequence[InferenceRequest]) -> WindowTable:
-    """``models``: name -> RegisteredModel (must hold a built store)."""
+                 requests: Sequence[InferenceRequest],
+                 context: Optional[ReferenceContext] = None) -> WindowTable:
+    """``models``: name -> ModelState (raises ``UnknownModelError`` /
+    ``NotCalibratedError`` through ``ModelState.store`` when a request
+    names an unregistered or un-calibrated model)."""
+    from repro.serving.errors import UnknownModelError
+
     R = len(requests)
     tab = WindowTable(obj=[None] * R, o1=[None] * R, wire=[None] * R,
                       plans=[None] * R, groups=[])
@@ -58,8 +67,10 @@ def price_window(models, server: ServerProfile,
     for i, r in enumerate(requests):
         by_model.setdefault(r.model, []).append(i)
     for name, idxs in by_model.items():
+        if name not in models:
+            raise UnknownModelError(name, models)
         m = models[name]
-        assert m.store is not None, "run calibrate() + build_store() first"
+        store = m.store(context)
         group = [requests[i] for i in idxs]
         # per-request reduced coefficients (Eq. 24–26)
         xi = np.array([xi_coeff(r.weights, r.device) for r in group])
@@ -68,21 +79,28 @@ def price_window(models, server: ServerProfile,
                        for r in group])
         # prefix MACs per distinct batch size (windows share few)
         o1_by_batch = {}
-        plans, o1_rows, wire_rows = [], [], []
+        plans, o1_rows, wire_rows, mem_rows = [], [], [], []
         for r in group:
             if r.batch not in o1_by_batch:
-                specs = classifier_layer_specs(m.cfg, batch=r.batch)
+                specs = m.backend.layer_specs(batch=r.batch)
                 o1_by_batch[r.batch] = np.concatenate(
                     [[0.0], np.cumsum([sp.o for sp in specs])])
             o1_rows.append(o1_by_batch[r.batch])
-            a_star = m.store.level_for(r.accuracy_budget)
-            plans.append(m.store.level_plans(a_star))
-            pb, px = m.store.level_payload_rows(a_star)
+            a_star = store.level_for(r.accuracy_budget)
+            plans.append(store.level_plans(a_star))
+            pb, px = store.level_payload_rows(a_star)
             wire_rows.append(px if r.segment_cached else pb)
+            mem_rows.append(store.level_memory_rows(a_star))
         o1 = np.stack(o1_rows)                          # (G, P+1)
         wire = np.stack(wire_rows)
         obj = xi[:, None] * o1 + dl[:, None] * (o1[:, -1:] - o1) \
             + ep[:, None] * wire
+        # device-memory admission (plan-time): infeasible candidates can
+        # never win the argmin. p=0 holds no device weights, so a finite
+        # column always remains.
+        mem = np.stack(mem_rows)
+        dev_mem = np.array([r.device.memory_bytes for r in group])
+        obj = np.where(mem > dev_mem[:, None], np.inf, obj)
         tab.groups.append((idxs, obj))
         for j, i in enumerate(idxs):
             tab.obj[i], tab.o1[i] = obj[j], o1[j]

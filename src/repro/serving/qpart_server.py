@@ -1,37 +1,39 @@
 """The QPART inference-serving server.
 
-Lifecycle (paper Fig. 1–2):
-  1. ``register_model`` stores a pre-trained model + calibration data.
-  2. ``calibrate``   — offline noise calibration: per-layer (s_w, s_x, rho)
-     probes + Delta(a) table (Alg. 1 steps 7–10).
-  3. ``build_offline_store`` — Alg. 1: closed-form bit patterns for 5
-     accuracy levels x all partition points.
-  4. ``serve``       — Alg. 2: pick the stored pattern minimizing the
-     runtime objective for the request's device/channel, quantize the
-     segment, price the plan, and (optionally) measure real accuracy of
-     the partitioned, quantized execution.
+Lifecycle (paper Fig. 1–2), model-agnostic via ``ModelBackend``:
+  1. ``register``    — name a backend (which owns the architecture:
+     config, params, layer specs, forward fns, quantized execution) plus
+     its calibration data.
+  2. ``calibrate``   — offline noise calibration: per-layer (s_w, s_x,
+     rho) probes + Delta(a) table (Alg. 1 steps 7–10), through the
+     backend's forward family only.
+  3. ``build_store`` — Alg. 1: closed-form bit patterns for 5 accuracy
+     levels x all partition points, per ``ReferenceContext`` (device,
+     channel, weights) — one model serves many contexts side by side.
+  4. ``serve``       — Alg. 2: plan (pick the stored pattern minimizing
+     the runtime objective, device-memory-feasible only) → deploy
+     (a ``Deployment`` bundling plan, priced costs and a callable
+     quantized device segment) → execute (``Deployment.execute``
+     measures real accuracy of the partitioned, quantized model).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.classifier import ClassifierConfig
 from repro.core import noise as noise_lib
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
-                                   ServerProfile, classifier_layer_specs,
-                                   cost_breakdown, delta_coeff, eps_coeff,
-                                   xi_coeff)
-from repro.core.partition import split_classifier
+                                   ServerProfile, cost_breakdown, delta_coeff,
+                                   eps_coeff, xi_coeff)
 from repro.core.quantizer import fake_quant, round_bits
-from repro.core.solver import (OfflineStore, build_offline_store,
-                               plan_for_partition)
-from repro.models.classifier import (classifier_forward, forward_from_layer,
-                                     layer_activations)
+from repro.core.solver import OfflineStore, build_offline_store
+from repro.serving.backends.base import ModelBackend
+from repro.serving.deployment import Deployment, ReferenceContext
+from repro.serving.errors import (NotCalibratedError, PlanInfeasibleError,
+                                  StoreMissingError, UnknownModelError)
 from repro.serving.pricing import price_window
 from repro.serving.simulator import InferenceRequest, ServingResult, simulate_plan
 
@@ -39,9 +41,12 @@ DEFAULT_ACCURACY_LEVELS = (0.001, 0.0025, 0.005, 0.01, 0.02)
 
 
 @dataclasses.dataclass
-class RegisteredModel:
-    cfg: ClassifierConfig
-    params: list
+class ModelState:
+    """Per-model serving state: the backend plus everything the offline
+    phase derives from it. Replaces the old ``RegisteredModel`` field-bag
+    (whose single ``store`` field each ``build_store`` silently
+    overwrote)."""
+    backend: ModelBackend
     calib_x: jnp.ndarray
     calib_y: jnp.ndarray
     s_w: np.ndarray = None
@@ -49,7 +54,22 @@ class RegisteredModel:
     rho: np.ndarray = None
     delta_table: dict = None
     base_accuracy: float = None
-    store: OfflineStore = None
+    stores: Dict[ReferenceContext, OfflineStore] = dataclasses.field(
+        default_factory=dict)
+    default_context: Optional[ReferenceContext] = None
+
+    def store(self, context: Optional[ReferenceContext] = None) -> OfflineStore:
+        """The pattern store for ``context`` (default: the most recently
+        built one, matching the old single-store behavior)."""
+        if not self.stores:
+            raise NotCalibratedError(
+                "no offline store — run calibrate() + build_store() first")
+        ctx = self.default_context if context is None else context
+        if ctx not in self.stores:
+            raise StoreMissingError(
+                f"no store built for context {ctx}; "
+                f"{len(self.stores)} other context(s) available")
+        return self.stores[ctx]
 
 
 class QPARTServer:
@@ -57,44 +77,42 @@ class QPARTServer:
                  levels: Sequence[float] = DEFAULT_ACCURACY_LEVELS):
         self.server = server_profile or ServerProfile()
         self.levels = tuple(levels)
-        self.models: Dict[str, RegisteredModel] = {}
+        self.models: Dict[str, ModelState] = {}
 
     # ------------------------------------------------------------------
-    def register_model(self, name: str, cfg: ClassifierConfig, params,
-                       calib_x, calib_y) -> None:
-        self.models[name] = RegisteredModel(cfg, params,
-                                            jnp.asarray(calib_x),
-                                            jnp.asarray(calib_y))
+    def register(self, name: str, backend: ModelBackend,
+                 calib_x, calib_y) -> None:
+        """Register a model backend + its calibration split."""
+        self.models[name] = ModelState(backend, jnp.asarray(calib_x),
+                                       jnp.asarray(calib_y))
+
+    def _model(self, name: str) -> ModelState:
+        if name not in self.models:
+            raise UnknownModelError(name, self.models)
+        return self.models[name]
 
     # ------------------------------------------------------------------
     # Offline phase (Alg. 1)
     def calibrate(self, name: str, probe_bits: int = noise_lib.PROBE_BITS) -> None:
-        m = self.models[name]
-        cfg, params = m.cfg, m.params
+        m = self._model(name)
+        b = m.backend
         x = m.calib_x
 
-        def apply_fn(p, a, start: int = 0):
-            if start == 0:
-                return classifier_forward(p, cfg, a)
-            return forward_from_layer(p, cfg, a, start)
-
-        acts, logits = layer_activations(params, cfg, x)
+        acts, logits = b.layer_activations(x)
         adv = noise_lib.adversarial_noise_energy(logits)
         adv_mean = float(jnp.mean(adv))
 
-        L = cfg.num_layers
+        L = b.num_layers
         s_w = np.zeros(L)
         s_x = np.zeros(L)
         rho = np.zeros(L)
         n_calib = x.shape[0]
         for l in range(L):
-            wq = {k: fake_quant(v, probe_bits) for k, v in params[l].items()}
-            noisy = list(params)
-            noisy[l] = wq
-            e_w = float(noise_lib.output_noise_energy(
-                lambda p, a: apply_fn(p, a), params, noisy, x))
+            noisy = b.with_layer_quantized(l, probe_bits)
+            d_w = (b.forward(x, params=noisy) - logits).astype(jnp.float32)
+            e_w = float(jnp.sum(jnp.square(d_w)))
             aq = fake_quant(acts[l], probe_bits)
-            d = apply_fn(params, aq, start=l) - apply_fn(params, acts[l], start=l)
+            d = b.forward_from_layer(aq, l) - b.forward_from_layer(acts[l], l)
             e_x = float(jnp.sum(jnp.square(d.astype(jnp.float32))))
             s_w[l] = e_w / n_calib * 4.0 ** probe_bits
             s_x[l] = e_x / n_calib * 4.0 ** probe_bits
@@ -103,15 +121,23 @@ class QPARTServer:
         m.s_w, m.s_x, m.rho = s_w, s_x, rho
 
         m.delta_table, m.base_accuracy = noise_lib.calibrate_delta(
-            lambda p, a: apply_fn(p, a), params, x, m.calib_y, rho,
+            lambda p, a: b.forward(a, params=p), b.params, x, m.calib_y, rho,
             targets=self.levels)
 
     def build_store(self, name: str, device: DeviceProfile, channel: Channel,
-                    weights: ObjectiveWeights) -> None:
-        """Alg. 1 proper: precompute {(b_a^p, p)} for the reference context."""
-        m = self.models[name]
-        specs = classifier_layer_specs(m.cfg)
-        m.store = build_offline_store(
+                    weights: ObjectiveWeights) -> ReferenceContext:
+        """Alg. 1 proper: precompute {(b_a^p, p)} for one reference
+        context. Stores accumulate per context (keyed by the returned
+        ``ReferenceContext``); the most recent build becomes the default
+        the online phase uses when no context is passed."""
+        m = self._model(name)
+        if m.delta_table is None:
+            raise NotCalibratedError(
+                f"model {name!r} has no noise calibration — run calibrate() "
+                "before build_store()")
+        specs = m.backend.layer_specs()
+        ctx = ReferenceContext(device, channel, weights)
+        m.stores[ctx] = build_offline_store(
             levels=self.levels, budgets=m.delta_table,
             layer_z_w=[sp.z_w for sp in specs],
             layer_z_x=[sp.z_x for sp in specs],
@@ -119,14 +145,17 @@ class QPARTServer:
             layer_o=[sp.o for sp in specs],
             xi=xi_coeff(weights, device), delta_cost=delta_coeff(weights, self.server),
             eps=eps_coeff(weights, device, channel),
-            input_z=float(np.prod(m.cfg.input_shape)))
+            input_z=m.backend.input_elements())
+        m.default_context = ctx
+        return ctx
 
     # ------------------------------------------------------------------
-    # Online phase (Alg. 2)
-    def serve(self, req: InferenceRequest, test_x=None, test_y=None) -> ServingResult:
-        m = self.models[req.model]
-        assert m.store is not None, "run calibrate() + build_store() first"
-        specs = classifier_layer_specs(m.cfg, batch=req.batch)
+    # Online phase (Alg. 2): plan → deploy (execute lives on Deployment)
+    def serve(self, req: InferenceRequest,
+              context: Optional[ReferenceContext] = None) -> Deployment:
+        m = self._model(req.model)
+        store = m.store(context)
+        specs = m.backend.layer_specs(batch=req.batch)
         xi = xi_coeff(req.weights, req.device)
         dl = delta_coeff(req.weights, self.server)
         ep = eps_coeff(req.weights, req.device, req.channel)
@@ -139,35 +168,35 @@ class QPARTServer:
                 else plan.payload_bits
             return xi * o1 + dl * (o_cum[-1] - o1) + ep * wire
 
-        plan = m.store.lookup(req.accuracy_budget, runtime_objective)
+        try:
+            plan = store.lookup(
+                req.accuracy_budget, runtime_objective,
+                feasible_fn=lambda pl:
+                    pl.device_memory_bytes <= req.device.memory_bytes)
+        except ValueError:
+            raise PlanInfeasibleError(
+                f"no stored pattern fits device memory "
+                f"{req.device.memory_bytes:.0f} B for model {req.model!r}")
         wire = plan.payload_x_bits if req.segment_cached else plan.payload_bits
         result = simulate_plan(plan, specs, req.device, self.server,
                                req.channel, req.weights, payload_bits=wire)
-
-        if test_x is not None:
-            acc = self.execute_partitioned(req.model, plan, test_x, test_y)
-            result.accuracy = acc
-            # degrade vs the SAME test set (base_accuracy is measured on the
-            # calibration split, which may differ in difficulty)
-            base_logits = classifier_forward(m.params, m.cfg, test_x)
-            base_acc = float(jnp.mean(jnp.argmax(base_logits, -1) == test_y))
-            result.accuracy_degradation = base_acc - acc
         result.extra["bits_w"] = np.asarray(round_bits(plan.bits_w)) if plan.p else []
         result.extra["bits_x"] = plan.bits_x
-        return result
+        return Deployment(req.model, m.backend, req, plan, result)
 
     # ------------------------------------------------------------------
     def serve_batch(self, requests: Sequence[InferenceRequest],
-                    ) -> List[ServingResult]:
+                    context: Optional[ReferenceContext] = None,
+                    ) -> List[Deployment]:
         """Alg. 2 for a whole request window: price every request against
         the plan table as one objective matrix per model group
         (serving.pricing, shared with WorkloadBalancer) instead of the
         per-request Python loop in ``serve``. Result-for-result identical
         to ``[self.serve(r) for r in requests]``."""
-        tab = price_window(self.models, self.server, requests)
+        tab = price_window(self.models, self.server, requests, context=context)
         choices = tab.argmin_choices()
         bits_cache: Dict[int, np.ndarray] = {}   # windows share few plans
-        results: List[ServingResult] = []
+        out: List[Deployment] = []
         for i, r in enumerate(requests):
             plan, o1, o2, wire = tab.select(i, int(choices[i]))
             # cost of the CHOSEN plan only — one scalar call per request
@@ -188,30 +217,17 @@ class QPARTServer:
             else:
                 res.extra["bits_w"] = []
             res.extra["bits_x"] = plan.bits_x
-            results.append(res)
-        return results
+            out.append(Deployment(r.model, self.models[r.model].backend,
+                                  r, plan, res))
+        return out
 
     # ------------------------------------------------------------------
     def execute_partitioned(self, name: str, plan, x, y) -> float:
-        """Really run the two segments: device side with quantized weights
-        + quantized cut activation, server side full precision."""
-        m = self.models[name]
-        specs = classifier_layer_specs(m.cfg)
-        seg, server_params = split_classifier(m.params, plan, specs)
-        p = plan.p
-        if p == 0:
-            logits = classifier_forward(m.params, m.cfg, x)
-        else:
-            from repro.configs.classifier import DenseSpec
-            from repro.models.classifier import _apply_layer, _ensure_batched
-            # device: layers 1..p on quantized weights, then quantize the
-            # cut activation for the uplink; server: full-precision tail.
-            h = _ensure_batched(x, m.cfg)
-            if isinstance(m.cfg.layers[0], DenseSpec):
-                h = h.reshape(h.shape[0], -1)
-            for l in range(p):
-                h = _apply_layer(m.cfg.layers[l], seg.params[l], h,
-                                 last=l == m.cfg.num_layers - 1)
-            h = fake_quant(h, int(round_bits(np.array([plan.bits_x]))[0]))
-            logits = forward_from_layer(m.params, m.cfg, h, p)
+        """Really run the two segments of an arbitrary stored plan:
+        device side with quantized weights + quantized cut activation,
+        server side full precision (convenience over the backend's
+        ``execute_plan``; ``Deployment.execute`` is the serving-path
+        equivalent)."""
+        m = self._model(name)
+        logits = m.backend.execute_plan(plan, x)
         return float(jnp.mean(jnp.argmax(logits, -1) == y))

@@ -15,7 +15,9 @@ under load.
 Execution: the zero-load objective of every (request, partition) pair is
 precomputed as ONE (R, P+1) matrix (DESIGN.md §5); the sequential
 admission loop then only adds the scalar queue term to a row and takes an
-argmin — no per-request store scans or Python objective closures.
+argmin — no per-request store scans or Python objective closures. Each
+admission yields a ``Deployment`` (plan + priced costs + callable
+quantized segment), same as ``serve``/``serve_batch``.
 
 Two policies:
   * fcfs      — requests priced in arrival order, each seeing the queue
@@ -31,9 +33,9 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import (ObjectiveWeights, ServerProfile,
-                                   classifier_layer_specs, cost_breakdown,
+from repro.core.cost_model import (ServerProfile, cost_breakdown,
                                    delta_coeff, eps_coeff, xi_coeff)
+from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.pricing import WindowTable, price_window
 from repro.serving.simulator import InferenceRequest, ServingResult
 
@@ -41,9 +43,14 @@ from repro.serving.simulator import InferenceRequest, ServingResult
 @dataclasses.dataclass
 class ScheduledResult:
     request: InferenceRequest
-    result: ServingResult
+    deployment: Deployment
     queue_delay: float              # server wait this request experienced
     start_order: int
+
+    @property
+    def result(self) -> ServingResult:
+        """Priced result of the deployment (view)."""
+        return self.deployment.result
 
 
 @dataclasses.dataclass
@@ -53,10 +60,12 @@ class WorkloadBalancer:
     policy: str = "balanced"        # fcfs | balanced
 
     def schedule(self, qpart_server, requests: Sequence[InferenceRequest],
+                 context: Optional[ReferenceContext] = None,
                  ) -> List[ScheduledResult]:
         if not len(requests):
             return []
-        tab = price_window(qpart_server.models, self.server, requests)
+        tab = price_window(qpart_server.models, self.server, requests,
+                           context=context)
         # per-candidate server seconds and server-use masks from the
         # shared table's MAC columns
         t_server = [(row[-1] - row) * self.server.gamma / self.server.f_clock
@@ -79,8 +88,9 @@ class WorkloadBalancer:
             row = tab.obj[idx] \
                 + req.weights.omega * busy_until * uses_server[idx]
             c = int(np.argmin(row))
-            res = self._result_at(tab, idx, c, req, busy_until)
-            out.append((idx, ScheduledResult(req, res, busy_until, rank)))
+            dep = self._deployment_at(qpart_server, tab, idx, c, req,
+                                      busy_until)
+            out.append((idx, ScheduledResult(req, dep, busy_until, rank)))
             busy_until += t_server[idx][c]
         # restore arrival order by the carried original index (a
         # requests.index() scan is O(n^2) and wrong for duplicates)
@@ -88,8 +98,9 @@ class WorkloadBalancer:
         return [sr for _, sr in out]
 
     # ------------------------------------------------------------------
-    def _result_at(self, tab: WindowTable, idx: int, c: int,
-                   req: InferenceRequest, queue: float) -> ServingResult:
+    def _deployment_at(self, qpart_server, tab: WindowTable, idx: int,
+                       c: int, req: InferenceRequest,
+                       queue: float) -> Deployment:
         plan, o1, o2, wire = tab.select(idx, c)
         costs = cost_breakdown(o1, o2, wire, req.device, self.server,
                                req.channel)
@@ -98,7 +109,8 @@ class WorkloadBalancer:
                             + req.weights.omega * (queue if o2 > 0 else 0.0),
                             payload_bits=wire)
         res.extra["queue_delay"] = queue if o2 > 0 else 0.0
-        return res
+        backend = qpart_server.models[req.model].backend
+        return Deployment(req.model, backend, req, plan, res)
 
     # ------------------------------------------------------------------
     # Scalar reference path (kept for the benchmark's before/after and as
@@ -107,11 +119,14 @@ class WorkloadBalancer:
         res = self._serve_under_load(srv, req, queue)
         return res.costs.t_server
 
-    def _serve_under_load(self, srv, req: InferenceRequest,
-                          queue: float) -> ServingResult:
-        """Alg. 2 with the queue delay added to the server time term."""
+    def _serve_under_load(self, srv, req: InferenceRequest, queue: float,
+                          context: Optional[ReferenceContext] = None,
+                          ) -> ServingResult:
+        """Alg. 2 with the queue delay added to the server time term.
+        ``context`` must match what ``schedule`` was given for the
+        before/after comparison to price against the same plan table."""
         m = srv.models[req.model]
-        specs = classifier_layer_specs(m.cfg, batch=req.batch)
+        specs = m.backend.layer_specs(batch=req.batch)
         o = np.array([sp.o for sp in specs])
         o_cum = np.cumsum(o)
         xi = xi_coeff(req.weights, req.device)
@@ -127,7 +142,10 @@ class WorkloadBalancer:
             wait = req.weights.omega * queue if o2 > 0 else 0.0
             return base + wait
 
-        plan = m.store.lookup(req.accuracy_budget, objective)
+        plan = m.store(context).lookup(
+            req.accuracy_budget, objective,
+            feasible_fn=lambda pl:
+                pl.device_memory_bytes <= req.device.memory_bytes)
         wire = plan.payload_x_bits if req.segment_cached else plan.payload_bits
         o1 = float(o_cum[plan.p - 1]) if plan.p else 0.0
         o2 = float(o_cum[-1] - o1)

@@ -12,7 +12,7 @@ quantized models in JAX.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Optional
 
 import numpy as np
 

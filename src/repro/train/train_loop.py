@@ -2,7 +2,6 @@
 pjit-compatible (the launch layer supplies shardings)."""
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -13,6 +13,7 @@ from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
                                    ServerProfile)
 from repro.data.pipeline import minibatches, synthetic_mnist
 from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.backends import ClassifierBackend
 from repro.serving.qpart_server import QPARTServer
 from repro.serving.scheduler import WorkloadBalancer, total_latency
 from repro.serving.simulator import InferenceRequest
@@ -39,8 +40,8 @@ def calibrated_server():
     # strong server (default 3 GHz): attractive at low load so the queue
     # is what pushes work device-side
     srv = QPARTServer()
-    srv.register_model("mnist", MNIST_MLP, params,
-                       x_te[1024:1536], y_te[1024:1536])
+    srv.register("mnist", ClassifierBackend(MNIST_MLP, params),
+                 x_te[1024:1536], y_te[1024:1536])
     srv.calibrate("mnist")
     dev, ch, w = DeviceProfile(), Channel(capacity_bps=2e6), ObjectiveWeights()
     srv.build_store("mnist", dev, ch, w)
@@ -118,7 +119,7 @@ class TestWorkloadBalancing:
         y = np.zeros(4, np.int32)
         for name, cfg, x in (("mnist6", MNIST_MLP, x28),
                              ("cifar", CIFAR_CNN, x32)):
-            srv.register_model(name, cfg, x, x, y)
+            srv.register(name, ClassifierBackend(cfg, None), x, y)
             m = srv.models[name]
             L = cfg.num_layers
             m.s_w = np.ones(L)

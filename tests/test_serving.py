@@ -1,7 +1,7 @@
 """End-to-end QPART serving tests (paper §V claims, scaled down):
-calibrate -> offline store -> online serve -> measured accuracy degradation
-within budget, payload reduced vs f32, QPART beats the no-opt baseline on
-the objective at matched accuracy."""
+calibrate -> offline store -> online serve -> Deployment.execute ->
+measured accuracy degradation within budget, payload reduced vs f32,
+QPART beats the no-opt baseline on the objective at matched accuracy."""
 import dataclasses
 
 import jax
@@ -11,9 +11,11 @@ import pytest
 
 from repro.configs.classifier import MNIST_MLP
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
-                                   ServerProfile, classifier_layer_specs)
+                                   ServerProfile, delta_coeff, eps_coeff,
+                                   xi_coeff)
 from repro.data.pipeline import minibatches, synthetic_mnist
 from repro.models.classifier import classifier_forward, init_classifier
+from repro.serving.backends import ClassifierBackend
 from repro.serving.baselines import (AutoencoderBaseline, PruningBaseline,
                                      no_opt_offload)
 from repro.serving.qpart_server import QPARTServer
@@ -42,10 +44,16 @@ def trained_mnist():
 
 
 @pytest.fixture(scope="module")
-def served(trained_mnist):
+def backend(trained_mnist):
+    params, _ = trained_mnist
+    return ClassifierBackend(MNIST_MLP, params)
+
+
+@pytest.fixture(scope="module")
+def served(trained_mnist, backend):
     params, (x_tr, y_tr, x_te, y_te) = trained_mnist
     srv = QPARTServer()
-    srv.register_model("mnist", MNIST_MLP, params, x_tr[:512], y_tr[:512])
+    srv.register("mnist", backend, x_tr[:512], y_tr[:512])
     srv.calibrate("mnist")
     dev, ch, w = DeviceProfile(), Channel(), ObjectiveWeights()
     srv.build_store("mnist", dev, ch, w)
@@ -60,8 +68,8 @@ class TestQPARTEndToEnd:
     def test_degradation_within_budget(self, served):
         srv, (dev, ch, w), (x_te, y_te) = served
         for budget in (0.005, 0.01, 0.02):
-            res = srv.serve(InferenceRequest("mnist", budget, dev, ch, w),
-                            jnp.asarray(x_te), y_te)
+            dep = srv.serve(InferenceRequest("mnist", budget, dev, ch, w))
+            res = dep.execute(jnp.asarray(x_te), y_te)
             # Delta calibration is statistical; allow 2x slack + noise floor
             assert res.accuracy_degradation <= 2 * budget + 0.01, \
                 (budget, res.accuracy_degradation)
@@ -72,14 +80,14 @@ class TestQPARTEndToEnd:
         assert np.all(m.s_w > 0) and np.all(m.rho > 0)
         assert len(m.s_w) == MNIST_MLP.num_layers
 
-    def test_payload_reduced_vs_f32_when_on_device(self, served):
+    def test_payload_reduced_vs_f32_when_on_device(self, served, backend):
         """Fig. 3: when the plan keeps layers on-device the quantized wire
         size must be way below the f32 wire size of the same segment."""
         srv, (dev, ch, w), (x_te, y_te) = served
         m = srv.models["mnist"]
-        specs = classifier_layer_specs(MNIST_MLP)
+        specs = backend.layer_specs()
         # force evaluation of every stored partition pattern
-        for (a, p), plan in m.store.plans.items():
+        for (a, p), plan in m.store().plans.items():
             if p == 0:
                 continue
             f32_wire = sum(specs[i].z_w for i in range(p)) * 32.0 \
@@ -94,16 +102,32 @@ class TestQPARTEndToEnd:
         srv, _, _ = served
         m = srv.models["mnist"]
         p = 3
-        tight = m.store.plans[(0.001, p)].bits_w
-        loose = m.store.plans[(0.02, p)].bits_w
+        tight = m.store().plans[(0.001, p)].bits_w
+        loose = m.store().plans[(0.02, p)].bits_w
         assert np.all(tight >= loose - 1e-9)
 
     def test_quantized_execution_runs(self, served):
         srv, (dev, ch, w), (x_te, y_te) = served
-        res = srv.serve(InferenceRequest("mnist", 0.01, dev, ch, w),
-                        jnp.asarray(x_te), y_te)
+        dep = srv.serve(InferenceRequest("mnist", 0.01, dev, ch, w))
+        res = dep.execute(jnp.asarray(x_te), y_te)
         assert res.accuracy is not None and res.accuracy > 0.8
         assert res.objective > 0
+        assert dep.accuracy == res.accuracy     # view over the same result
+
+    def test_device_segment_callable(self, served):
+        """The Deployment hands out a callable quantized device segment
+        whose cut activation feeds the server tail to the same logits the
+        executed result was measured on."""
+        srv, (dev, ch, w), (x_te, y_te) = served
+        m = srv.models["mnist"]
+        plan = m.store().plans[(0.01, 3)]
+        seg = m.backend.device_executor(plan)
+        assert seg.payload_bits > 0
+        # plan-time memory accounting == materialized segment footprint
+        assert seg.memory_bytes == pytest.approx(plan.device_memory_bytes)
+        h = seg(jnp.asarray(x_te[:32]))
+        logits = m.backend.forward_from_layer(h, plan.p)
+        assert logits.shape == (32, MNIST_MLP.num_classes)
 
 
 class TestServeBatch:
@@ -137,6 +161,44 @@ class TestServeBatch:
             np.testing.assert_array_equal(np.asarray(br.extra["bits_w"]),
                                           np.asarray(sr.extra["bits_w"]))
 
+    def test_matches_prerefactor_reference(self, served, backend):
+        """Regression lock: serve/serve_batch must reproduce the
+        PRE-backend-refactor Alg. 2 semantics on the classifier path —
+        reimplemented inline here exactly as the old ``serve`` computed
+        them (store.lookup over the level's plans with the reduced-
+        coefficient runtime objective, no memory filter: the default
+        device fits every MNIST plan)."""
+        srv, (dev, ch, w), _ = served
+        m = srv.models["mnist"]
+        store = m.store()
+        reqs = self._window(dev, ch, w, n=16)
+        batch = srv.serve_batch(reqs)
+        for req, br in zip(reqs, batch):
+            from repro.core.cost_model import classifier_layer_specs
+            specs = classifier_layer_specs(MNIST_MLP, batch=req.batch)
+            xi = xi_coeff(req.weights, req.device)
+            dl = delta_coeff(req.weights, srv.server)
+            ep = eps_coeff(req.weights, req.device, req.channel)
+            o_cum = np.cumsum([sp.o for sp in specs])
+
+            def runtime_objective(plan):
+                o1 = o_cum[plan.p - 1] if plan.p else 0.0
+                wire = plan.payload_x_bits if req.segment_cached \
+                    else plan.payload_bits
+                return xi * o1 + dl * (o_cum[-1] - o1) + ep * wire
+
+            ref_plan = store.lookup(req.accuracy_budget, runtime_objective)
+            assert br.plan is ref_plan
+            # objective recomputed from the chosen plan's cost breakdown
+            o1 = o_cum[ref_plan.p - 1] if ref_plan.p else 0.0
+            wire = ref_plan.payload_x_bits if req.segment_cached \
+                else ref_plan.payload_bits
+            from repro.core.cost_model import cost_breakdown
+            costs = cost_breakdown(float(o1), float(o_cum[-1] - o1), wire,
+                                   req.device, srv.server, req.channel)
+            assert br.objective == pytest.approx(
+                costs.objective(req.weights), rel=1e-12)
+
     def test_empty_window(self, served):
         srv, _, _ = served
         assert srv.serve_batch([]) == []
@@ -145,58 +207,54 @@ class TestServeBatch:
         srv, (dev, ch, w), _ = served
         m = srv.models["mnist"]
         for a in (0.0012, 0.006, 0.03, 0.2):
-            res = srv.serve_batch([InferenceRequest("mnist", a, dev, ch, w)])[0]
-            lv = [k[0] for k, v in m.store.plans.items() if v is res.plan][0]
+            dep = srv.serve_batch([InferenceRequest("mnist", a, dev, ch, w)])[0]
+            lv = [k[0] for k, v in m.store().plans.items() if v is dep.plan][0]
             assert lv <= a or lv == min(srv.levels)
 
 
 class TestBaselines:
-    def test_no_opt_keeps_base_accuracy(self, trained_mnist):
+    def test_no_opt_keeps_base_accuracy(self, trained_mnist, backend):
         params, (x_tr, y_tr, x_te, y_te) = trained_mnist
-        specs = classifier_layer_specs(MNIST_MLP)
         dev, srv_p, ch, w = (DeviceProfile(), ServerProfile(), Channel(),
                              ObjectiveWeights())
-        res = no_opt_offload(params, MNIST_MLP, specs, 3, dev, srv_p, ch, w,
+        res = no_opt_offload(backend, 3, dev, srv_p, ch, w,
                              jnp.asarray(x_te), y_te)
         base = float(jnp.mean(jnp.argmax(
             classifier_forward(params, MNIST_MLP, jnp.asarray(x_te)), -1)
             == y_te))
         assert res.accuracy == pytest.approx(base)
 
-    def test_autoencoder_compresses_but_perturbs(self, trained_mnist):
+    def test_autoencoder_compresses_but_perturbs(self, trained_mnist, backend):
         params, (x_tr, y_tr, x_te, y_te) = trained_mnist
-        specs = classifier_layer_specs(MNIST_MLP)
         dev, srv_p, ch, w = (DeviceProfile(), ServerProfile(), Channel(),
                              ObjectiveWeights())
         ae = AutoencoderBaseline(code_ratio=0.25)
-        res = ae.offload(params, MNIST_MLP, specs, 2, jnp.asarray(x_tr[:512]),
+        res = ae.offload(backend, 2, jnp.asarray(x_tr[:512]),
                          dev, srv_p, ch, w, jnp.asarray(x_te), y_te)
         assert res.accuracy is not None and res.accuracy > 0.5
         assert res.extra["code_dim"] == int(0.25 * 256)
 
-    def test_pruning_calibration_meets_budget(self, trained_mnist):
+    def test_pruning_calibration_meets_budget(self, trained_mnist, backend):
         params, (x_tr, y_tr, x_te, y_te) = trained_mnist
-        specs = classifier_layer_specs(MNIST_MLP)
         base = float(jnp.mean(jnp.argmax(
             classifier_forward(params, MNIST_MLP, jnp.asarray(x_tr[:1024])),
             -1) == y_tr[:1024]))
         pb = PruningBaseline().calibrated(
-            params, MNIST_MLP, specs, 3, jnp.asarray(x_tr[:1024]),
+            backend, 3, jnp.asarray(x_tr[:1024]),
             y_tr[:1024], budget=0.02, base_accuracy=base)
         assert 0.0 < pb.retain <= 1.0
 
-    def test_qpart_beats_no_opt_objective(self, served, trained_mnist):
+    def test_qpart_beats_no_opt_objective(self, served, backend):
         """Fig. 7: at every partition point the QPART pattern's objective
         is below the f32 no-opt objective (quantization only reduces the
         payload term; compute terms are identical)."""
         srv, (dev, ch, w), _ = served
-        params, _ = trained_mnist
-        specs = classifier_layer_specs(MNIST_MLP)
+        specs = backend.layer_specs()
         m = srv.models["mnist"]
         from repro.serving.simulator import simulate_plan
         for p in range(1, MNIST_MLP.num_layers + 1):
-            qp = m.store.plans[(0.01, p)]
+            qp = m.store().plans[(0.01, p)]
             q_res = simulate_plan(qp, specs, dev, ServerProfile(), ch, w)
-            n_res = no_opt_offload(params, MNIST_MLP, specs, p, dev,
+            n_res = no_opt_offload(backend, p, dev,
                                    ServerProfile(), ch, w)
             assert q_res.objective < n_res.objective, p
