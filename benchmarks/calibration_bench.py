@@ -1,0 +1,224 @@
+"""Serving benchmark (BENCH_serving.json trajectory): compile-once
+partitioned execution vs the pre-PR-3 per-start-jit design.
+
+What is measured, per depth L (transformer, reduced-width blocks):
+
+  * ``calibrate``  — Alg. 1 noise calibration wall-clock. Legacy: the
+    scalar probe loop over a backend whose ``forward_from_layer`` jits
+    one UNROLLED block loop per resume point (O(L) compilations of up to
+    L traced blocks — O(L^2) traced block applications). Compile-once:
+    ``QPARTServer.calibrate``'s vectorized probe (one chunked ``lax.map``
+    program over the masked segment forward).
+  * ``execute``    — partitioned execution swept over every partition
+    point p = 1..L: quantize the device segment, run it, run the server
+    tail. Legacy pays an eager per-block python loop plus one fresh XLA
+    compilation per distinct p; compile-once runs every split through
+    the same programs with (start, stop) as dynamic operands.
+  * ``traces``     — XLA trace counts from the backends' shared trace
+    counter: O(L) legacy, O(1) compile-once.
+
+Equivalence is asserted inline (s_w/s_x/rho within float tolerance) —
+a benchmark of a wrong answer is meaningless. Acceptance (ISSUE 3):
+calibrate + execute >= 5x at L = 24.
+
+  PYTHONPATH=src python -m benchmarks.run --only serving
+  PYTHONPATH=src python -m benchmarks.run --smoke          # CI subset
+
+Writes ``BENCH_serving.json`` at the repo root (committed — the serving
+perf trajectory starts at PR 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core import noise as noise_lib
+from repro.core.cost_model import Channel, DeviceProfile, ObjectiveWeights
+from repro.core.quantizer import fake_quant
+from repro.models import rope as rope_lib
+from repro.models import transformer as T
+from repro.serving.backends import TransformerBackend
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+
+SEQ = 16
+BATCH = 8
+LEVEL = 0.01
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+
+# ---------------------------------------------------------------------------
+# The pre-PR-3 execution paths, kept HERE (not in src) as the regression
+# baseline: per-start jit family + eager block loops.
+
+class LegacyTransformerBackend(TransformerBackend):
+    """``TransformerBackend`` as it was before the masked segment
+    forward: ``forward``/``forward_from_layer`` jit one unrolled python
+    block loop per start, ``layer_activations`` and the device segment
+    run eager block-by-block. Probes go through the scalar reference
+    loop (``core.noise.backend_layer_energies``)."""
+
+    def _run_blocks(self, params, h, start: int, stop: int):
+        b, s, _ = h.shape
+        positions = rope_lib.text_positions(b, s)
+        for l in range(start, stop):
+            bp, pos = T.block_at(params, self.cfg, l)
+            h, _, _ = T.apply_block(bp, self.cfg, pos, h, positions)
+        return h
+
+    def _logits_fn(self, start: int):
+        def make():
+            def f(params, a):
+                if start < 0:
+                    a = T.embed_tokens(params, self.cfg, a)
+                h = self._run_blocks(params, a, max(start, 0),
+                                     self.num_layers)
+                return T.unembed(params, self.cfg, h)[:, -1, :]
+            return f
+        return self.jitted(("legacy", start), make)
+
+    def forward(self, x, params=None):
+        return self._logits_fn(-1)(self.params if params is None else params,
+                                   x)
+
+    def forward_from_layer(self, a, start: int, params=None):
+        return self._logits_fn(start)(
+            self.params if params is None else params, a)
+
+    def layer_activations(self, x, params=None):
+        params = self.params if params is None else params
+        h = T.embed_tokens(params, self.cfg, x)
+        b, s, _ = h.shape
+        positions = rope_lib.text_positions(b, s)
+        acts = []
+        for l in range(self.num_layers):
+            acts.append(h)
+            bp, pos = T.block_at(params, self.cfg, l)
+            h, _, _ = T.apply_block(bp, self.cfg, pos, h, positions)
+        return acts, T.unembed(params, self.cfg, h)[:, -1, :]
+
+    def calibrate_probes(self, x, probe_bits=noise_lib.PROBE_BITS, **_):
+        return noise_lib.backend_layer_energies(self, x, probe_bits)
+
+    def run_device_segment(self, seg, plan, x):
+        h = T.embed_tokens(self.params, self.cfg, x)
+        b, s, _ = h.shape
+        positions = rope_lib.text_positions(b, s)
+        for l in range(plan.p):
+            pos = l % T.period_len(self.cfg)
+            h, _, _ = T.apply_block(seg.params[l], self.cfg, pos, h,
+                                    positions)
+        return fake_quant(h, int(seg.bits_x))
+
+
+# ---------------------------------------------------------------------------
+
+def _bench_cfg(L: int):
+    # keep in sync with tests/test_calibration.py::lm_config — the bench
+    # must measure the model the regression tests lock
+    return dataclasses.replace(
+        get_config("smollm-135m").reduced(), name=f"smollm-bench-L{L}",
+        num_layers=L, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128, vocab_size=32, tp_pad=1, dtype="float32")
+
+
+def _cycle_batch(rng, cfg, n):
+    start = rng.integers(0, cfg.vocab_size, size=(n, 1))
+    toks = (start + np.arange(SEQ + 1)[None, :]) % cfg.vocab_size
+    return (jnp.asarray(toks[:, :SEQ], jnp.int32),
+            jnp.asarray(toks[:, SEQ], jnp.int32))
+
+
+def _run_impl(kind: str, cfg, params, x_cal, y_cal, x_te):
+    """One full serving lifetime: calibrate -> build_store -> serve ->
+    execute every partition point. Returns timings + trace counts."""
+    cls = LegacyTransformerBackend if kind == "legacy" else TransformerBackend
+    backend = cls(cfg, params, seq_len=SEQ)
+    srv = QPARTServer()
+    srv.register("lm", backend, x_cal, y_cal)
+
+    t0 = time.perf_counter()
+    srv.calibrate("lm", vectorized=(kind != "legacy"))
+    t_cal = time.perf_counter() - t0
+    traces_cal = backend.trace_count
+
+    dev, ch, w = (DeviceProfile(), Channel(capacity_bps=2e6),
+                  ObjectiveWeights())
+    t0 = time.perf_counter()
+    srv.build_store("lm", dev, ch, w)
+    dep = srv.serve(InferenceRequest("lm", LEVEL, dev, ch, w,
+                                     segment_cached=True))
+    t_serve = time.perf_counter() - t0
+
+    m = srv.models["lm"]
+    plans = [m.store().plans[(LEVEL, p)] for p in range(1, cfg.num_layers + 1)]
+    t0 = time.perf_counter()
+    for plan in plans:
+        logits = backend.execute_plan(plan, x_te)
+    jax.block_until_ready(logits)
+    t_exec = time.perf_counter() - t0
+
+    return {"t_cal": t_cal, "t_serve": t_serve, "t_exec": t_exec,
+            "traces_cal": traces_cal,
+            "traces_total": backend.trace_count,
+            "s_w": m.s_w, "s_x": m.s_x, "rho": m.rho, "dep": dep}
+
+
+def serving(smoke: bool = False):
+    depths = (2, 4) if smoke else (4, 12, 24)
+    rng = np.random.default_rng(0)
+    rows = []
+    for L in depths:
+        cfg = _bench_cfg(L)
+        params = T.init_params(jax.random.key(0), cfg)
+        x_cal, y_cal = _cycle_batch(rng, cfg, BATCH)
+        x_te, _ = _cycle_batch(rng, cfg, BATCH)
+        res = {k: _run_impl(k, cfg, params, x_cal, y_cal, x_te)
+               for k in ("legacy", "compile_once")}
+        lg, co = res["legacy"], res["compile_once"]
+        # equivalence guard: same calibration within float tolerance
+        for key in ("s_w", "s_x", "rho"):
+            np.testing.assert_allclose(co[key], lg[key], rtol=5e-2,
+                                       err_msg=f"{key} diverged at L={L}")
+        t_lg = lg["t_cal"] + lg["t_exec"]
+        t_co = co["t_cal"] + co["t_exec"]
+        rows.append({
+            "bench": "serving_calibrate_execute",
+            "config": f"L{L}xB{BATCH}xS{SEQ}",
+            "depth": L,
+            "legacy_cal_s": round(lg["t_cal"], 3),
+            "compile_once_cal_s": round(co["t_cal"], 3),
+            "legacy_exec_s": round(lg["t_exec"], 3),
+            "compile_once_exec_s": round(co["t_exec"], 3),
+            "serve_s": round(co["t_serve"], 4),
+            "legacy_traces": lg["traces_total"],
+            "compile_once_traces": co["traces_total"],
+            "speedup": round(t_lg / t_co, 1),
+        })
+    if not smoke:
+        last = rows[-1]
+        assert last["depth"] >= 24 and last["speedup"] >= 5.0, \
+            f"acceptance: >=5x at L=24, got {last['speedup']}x"
+        # compile count O(1) in depth: identical trace counts across L
+        counts = {r["compile_once_traces"] for r in rows}
+        assert len(counts) == 1, f"compile-once traces grew with depth: {rows}"
+    OUT_PATH.write_text(json.dumps({
+        "schema": "qpart-serving-bench/v1",
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "rows": rows,
+    }, indent=2) + "\n")
+    print(f"wrote {OUT_PATH}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in serving():
+        print(row)

@@ -1,13 +1,18 @@
 """Benchmark harness entrypoint — one benchmark per paper table/figure
-(deliverable d) plus kernel microbench and the roofline table.
+(deliverable d) plus kernel microbench, planner/serving hot paths and the
+roofline table.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --only fig3_payload roofline
+  PYTHONPATH=src python -m benchmarks.run --smoke    # CI: fast serving
+                                                     # subset, refreshes
+                                                     # BENCH_serving.json
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import functools
 import io
 import sys
 import time
@@ -16,8 +21,8 @@ BENCHES = {}
 
 
 def _register():
-    from benchmarks import (kernel_bench, paper_tables, planner_bench,
-                            roofline_report)
+    from benchmarks import (calibration_bench, kernel_bench, paper_tables,
+                            planner_bench, roofline_report)
     BENCHES.update({
         "fig3_payload": paper_tables.payload,
         "fig5_layerwise": paper_tables.layerwise_cost,
@@ -26,6 +31,7 @@ def _register():
         "table4_multimodel": paper_tables.multimodel,
         "kernels": kernel_bench.kernels,
         "planner": planner_bench.planner,
+        "serving": calibration_bench.serving,
         "roofline": roofline_report.roofline,
     })
 
@@ -34,9 +40,19 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--csv", default=None, help="also write rows to a file")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset: reduced-depth serving bench only")
     args = ap.parse_args(argv)
+    if args.smoke and args.only:
+        ap.error("--smoke selects its own benchmark set; drop --only")
     _register()
-    names = args.only or list(BENCHES)
+    if args.smoke:
+        from benchmarks import calibration_bench
+        BENCHES["serving"] = functools.partial(calibration_bench.serving,
+                                               smoke=True)
+        names = ["serving"]
+    else:
+        names = args.only or list(BENCHES)
     all_rows = []
     for name in names:
         t0 = time.time()

@@ -103,6 +103,35 @@ def calibrate_layer(apply_fn, params, x, layer_idx: int,
     return s_w, s_x
 
 
+def backend_layer_energies(backend, x, probe_bits: int = PROBE_BITS):
+    """Reference SCALAR probe loop for Alg. 1 steps 7–9 over a serving
+    ``ModelBackend`` (duck-typed: only the protocol's forward family is
+    touched). Per layer l: quantize the layer's weights / input
+    activation at ``probe_bits`` and measure the squared logit
+    perturbation — 1 full + 2 suffix forwards per layer, L times.
+
+    This is the ground truth the backends' vectorized
+    ``calibrate_probes`` overrides (one chunked ``lax.map`` over a
+    "which layer is quantized" index, a single compiled program) are
+    regression-locked against — tests and ``benchmarks/
+    calibration_bench.py`` both compare against it.
+
+    Returns (e_w (L,), e_x (L,), clean logits (B, C))."""
+    acts, logits = backend.layer_activations(x)
+    L = backend.num_layers
+    e_w = np.zeros(L)
+    e_x = np.zeros(L)
+    for l in range(L):
+        noisy = backend.with_layer_quantized(l, probe_bits)
+        d_w = (backend.forward(x, params=noisy) - logits).astype(jnp.float32)
+        e_w[l] = float(jnp.sum(jnp.square(d_w)))
+        aq = fake_quant(acts[l], probe_bits)
+        d = backend.forward_from_layer(aq, l) \
+            - backend.forward_from_layer(acts[l], l)
+        e_x[l] = float(jnp.sum(jnp.square(d.astype(jnp.float32))))
+    return e_w, e_x, logits
+
+
 def accuracy(apply_fn, params, x, y) -> float:
     logits = apply_fn(params, x)
     return float(jnp.mean(jnp.argmax(logits, -1) == y))

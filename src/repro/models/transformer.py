@@ -319,6 +319,64 @@ def decode_step(params, cfg: ModelConfig, token, caches, pos):
 
 
 # ---------------------------------------------------------------------------
+# Depth-independent segment forward (compile-once partitioned execution)
+
+def segment_forward(params, cfg: ModelConfig, h, start, stop, *,
+                    positions=None, collect: bool = False):
+    """Apply blocks ``[start, stop)`` of the stack to hidden state ``h``
+    (B, S, D) under ONE masked ``lax.scan`` over the stacked period
+    representation. ``start``/``stop`` are DYNAMIC operands — every
+    device/server segment split of the same input shape shares a single
+    compiled program, instead of one XLA compilation per resume point.
+
+    Every block of the stack is computed and blocks outside the segment
+    are masked to identity (``jnp.where``): O(L) FLOPs regardless of
+    segment length, O(1) compilations regardless of L — the QPART serving
+    paths (calibration probes at every layer, arbitrary partition points)
+    are compile-bound, not FLOP-bound, at the depths they sweep.
+
+    ``collect=True`` additionally stacks the activation ENTERING each
+    block — shape (L, B, S, D), the Alg. 1 calibration's ``acts`` — at
+    the cost of the extra output buffer. Returns ``h_out`` or
+    ``(h_out, acts)``. Router aux losses are dropped (serving paths only
+    consume logits)."""
+    b, s, _ = h.shape
+    if positions is None:
+        positions = rope_lib.text_positions(b, s)
+    plen, nper = period_len(cfg), num_periods(cfg)
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+
+    def scan_fn(x, inp):
+        per_idx, period_params = inp
+        entries = []
+        for pos in range(plen):
+            layer = per_idx * plen + pos
+            if collect:
+                entries.append(x)
+            x_new, _, _ = _block_apply(period_params[pos], cfg, pos, x,
+                                       positions)
+            active = (layer >= start) & (layer < stop)
+            x = jnp.where(active, x_new, x)
+        return x, (jnp.stack(entries) if collect else None)
+
+    xs = (jnp.arange(nper), tuple(params["blocks"]))
+    h, acts = jax.lax.scan(scan_fn, h, xs)
+    if collect:
+        # (nper, plen, B, S, D) -> (L, B, S, D); layer = per * plen + pos
+        return h, acts.reshape((nper * plen,) + acts.shape[2:])
+    return h
+
+
+def segment_logits(params, cfg: ModelConfig, h, start, stop, *,
+                   positions=None):
+    """``segment_forward`` + unembed at the LAST position — the
+    (B, V) "logits" view the serving backends and Alg. 1 probes use."""
+    h = segment_forward(params, cfg, h, start, stop, positions=positions)
+    return _unembed(params, cfg, h)[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
 # Public single-block entry points (repro.serving.backends.transformer):
 # embed/unembed and one block application — the non-scan view of the same
 # math `forward` runs under lax.scan, for paths that need per-block access

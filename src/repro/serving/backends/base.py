@@ -19,6 +19,10 @@ Conventions shared by all backends:
   * every forward method accepts a ``params`` override (default: the
     backend's own) so the calibration can probe perturbed weights and the
     baselines can run pruned ones without private model reach-ins.
+  * the forward family is jit-compiled through the shared ``jitted``
+    compile cache (DESIGN.md §7): compilations are keyed by (function
+    key, input shape) — NEVER by partition point or probe layer — and
+    counted by ``trace_count``, which tests assert is O(1) in depth.
 """
 from __future__ import annotations
 
@@ -26,11 +30,15 @@ import abc
 import dataclasses
 from typing import List, Optional
 
+import jax
 import jax.numpy as jnp
 
+from repro.core import noise as noise_lib
 from repro.core.cost_model import LayerSpec
 from repro.core.partition import DeviceSegment, segment_memory_bytes
 from repro.core.solver import PartitionPlan
+
+_EVAL_MEMO_SLOTS = 4         # distinct test sets remembered per backend
 
 
 class ModelBackend(abc.ABC):
@@ -38,6 +46,34 @@ class ModelBackend(abc.ABC):
 
     cfg: object          # the family's config dataclass
     params: object       # canonical full-precision parameters
+
+    # -- shared compile cache -------------------------------------------
+    # Backends are dataclasses; caches live in __dict__ lazily so
+    # subclasses don't have to declare (or hash/compare) them.
+    def jitted(self, key, make_fn, **jit_kw):
+        """The compiled executable for ``key`` — building and jitting
+        ``make_fn()`` on first use. ``jax.jit`` keys recompilation by
+        input shape under the hood, so a cache entry is really a family
+        of executables keyed (key, input shape): deployments that share
+        ``(p, input shape)`` share one compiled program across requests.
+        Traces bump ``trace_count`` (the python body runs only when XLA
+        traces), giving tests and benchmarks a compile counter."""
+        cache = self.__dict__.setdefault("_jit_cache", {})
+        if key not in cache:
+            fn = make_fn()
+
+            def counted(*a, _fn=fn, **k):
+                self.__dict__["_trace_count"] = self.trace_count + 1
+                return _fn(*a, **k)
+
+            cache[key] = jax.jit(counted, **jit_kw)
+        return cache[key]
+
+    @property
+    def trace_count(self) -> int:
+        """XLA trace (compilation) count across the backend's jitted
+        forward family — O(1) in depth for compile-once backends."""
+        return self.__dict__.get("_trace_count", 0)
 
     # -- structure ------------------------------------------------------
     @property
@@ -74,6 +110,20 @@ class ModelBackend(abc.ABC):
         """Params tree with layer ``layer``'s weights fake-quantized at
         ``bits`` — the Alg. 1 noise probe's perturbed model."""
 
+    # -- calibration probes (Alg. 1 steps 7-9) --------------------------
+    def calibrate_probes(self, x, probe_bits: int = noise_lib.PROBE_BITS):
+        """Per-layer output-noise energies for the Alg. 1 calibration:
+        (e_w (L,), e_x (L,), clean logits). e_w[l] is the squared logit
+        perturbation from quantizing layer l's WEIGHTS at ``probe_bits``;
+        e_x[l] the same for layer l's input ACTIVATION.
+
+        Default: the scalar reference loop (``core.noise
+        .backend_layer_energies`` — 1 full + 2 suffix forwards per
+        layer). Compile-once backends override with a vectorized probe
+        that emits all L energies from a single compiled program;
+        overrides are regression-locked against this reference."""
+        return noise_lib.backend_layer_energies(self, x, probe_bits)
+
     # -- quantized device-segment execution -----------------------------
     @abc.abstractmethod
     def split(self, plan: PartitionPlan) -> DeviceSegment:
@@ -103,7 +153,24 @@ class ModelBackend(abc.ABC):
         return self.forward_from_layer(h, plan.p)
 
     def evaluate(self, x, y, params=None) -> float:
-        """Top-1 accuracy of the (full-precision) forward on (x, y)."""
+        """Top-1 accuracy of the (full-precision) forward on (x, y).
+
+        Memoized per test-set IDENTITY (the exact array objects) when run
+        on the backend's own params: a window of deployments executing
+        against one test set pays for the baseline forward once
+        (``Deployment.execute`` calls this per deployment)."""
+        if params is not None:
+            return self._measure(x, y, params)
+        memo = self.__dict__.setdefault("_eval_memo", [])
+        for mx, my, val in memo:
+            if mx is x and my is y:
+                return val
+        val = self._measure(x, y, self.params)
+        memo.append((x, y, val))
+        del memo[:-_EVAL_MEMO_SLOTS]
+        return val
+
+    def _measure(self, x, y, params) -> float:
         logits = self.forward(x, params=params)
         return float(jnp.mean(jnp.argmax(logits, -1) == y))
 
@@ -112,7 +179,10 @@ class ModelBackend(abc.ABC):
 class DeviceExecutor:
     """A materialized quantized device segment, callable on inputs: what a
     ``Deployment`` ships to the edge device. ``__call__`` maps a raw input
-    batch to the quantized cut activation (the uplink payload)."""
+    batch to the quantized cut activation (the uplink payload). The
+    compiled executable behind it comes from the backend's shared
+    ``jitted`` cache, so executors for the same (p, input shape) reuse
+    one compilation."""
     backend: ModelBackend
     plan: PartitionPlan
     segment: DeviceSegment

@@ -11,15 +11,18 @@ Mapping onto the protocol:
   * "logits" = next-token logits at the LAST sequence position, shape
     (B, V): the calibration's adversarial-margin and accuracy math
     (``core.noise``) applies unchanged, with y = the next token.
-  * block-by-block execution uses the public non-scan entry points of
-    ``repro.models.transformer`` (``embed_tokens`` / ``apply_block`` /
-    ``unembed``) — numerically the same math ``forward`` runs under
-    ``lax.scan``, needed here because calibration probes and partitioned
-    execution address single blocks.
-
-Intended for reduced/small configs on the serving host: the per-block
-Python loop trades scan's compile-time depth-independence for block
-addressability.
+  * the whole forward family — ``forward``, ``forward_from_layer`` at
+    EVERY resume point, ``layer_activations`` and the quantized
+    ``run_device_segment`` — runs on ``transformer.segment_forward``'s
+    masked ``lax.scan`` with DYNAMIC ``(start, stop)`` operands: one XLA
+    compilation per input shape, not one per split point (DESIGN.md §7).
+    The pre-PR-3 design kept a ``_jits`` dict with one jitted unrolled
+    block loop per start — O(L) compilations of O(L) traced blocks.
+  * ``calibrate_probes`` (Alg. 1 steps 7–9) emits all L per-layer noise
+    energies from a single compiled program: a chunked ``lax.map`` over
+    the "which layer is quantized" index, selecting the perturbed layer
+    by masked ``jnp.where`` on the stacked period axis. Regression-locked
+    against the scalar loop in ``core.noise.backend_layer_energies``.
 """
 from __future__ import annotations
 
@@ -27,14 +30,19 @@ import dataclasses
 from typing import List, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import noise as noise_lib
 from repro.core.cost_model import LayerSpec, transformer_layer_specs
 from repro.core.partition import DeviceSegment, split_blocks
 from repro.core.quantizer import fake_quant
-from repro.models import rope as rope_lib
 from repro.models import transformer as T
 from repro.serving.backends.base import ModelBackend
+
+PROBE_CHUNK = 4      # layers probed per lax.map step (memory/parallelism)
+_STACKED_CACHE_SLOTS = 4     # stacked quantized trees kept per backend
 
 
 @dataclasses.dataclass
@@ -47,27 +55,10 @@ class TransformerBackend(ModelBackend):
     params: dict
     seq_len: int
     mode: str = "prefill"
-    # jitted (embed →) blocks-from-start → last-position logits, keyed by
-    # start block (-1 = token input). Calibration probes re-enter these
-    # with perturbed params of the SAME pytree structure, so each start
-    # traces once.
-    _jits: dict = dataclasses.field(default_factory=dict, repr=False,
-                                    compare=False)
 
     @property
     def num_layers(self) -> int:
         return self.cfg.num_layers
-
-    def _logits_fn(self, start: int):
-        if start not in self._jits:
-            def f(params, a):
-                if start < 0:
-                    a = T.embed_tokens(params, self.cfg, a)
-                h = self._run_blocks(params, a, max(start, 0),
-                                     self.num_layers)
-                return T.unembed(params, self.cfg, h)[:, -1, :]
-            self._jits[start] = jax.jit(f)
-        return self._jits[start]
 
     def layer_specs(self, batch: int = 1,
                     seq_len: Optional[int] = None) -> List[LayerSpec]:
@@ -78,37 +69,53 @@ class TransformerBackend(ModelBackend):
     def input_elements(self) -> float:
         return float(self.seq_len)                   # token ids per example
 
-    # -- block-by-block forward family ----------------------------------
-    def _positions(self, b: int, s: int):
-        return rope_lib.text_positions(b, s)
+    # -- compile-once forward family ------------------------------------
+    # Four programs total (ModelBackend.jitted: shape-keyed, trace-
+    # counted), each taking the segment bounds as DYNAMIC operands:
+    #   tokens_logits  (params, tokens, start, stop) -> (B, V)
+    #   h_logits       (params, h,      start, stop) -> (B, V)
+    #   acts           (params, tokens)              -> ((L,B,S,D), (B,V))
+    #   cut            (params, tokens, stop)        -> (B, S, D)
+    # Calibration probes re-enter them with perturbed params of the SAME
+    # pytree structure, so the compile count stays O(1) in depth.
+    def _tokens_logits(self):
+        def f(params, tokens, start, stop):
+            h = T.embed_tokens(params, self.cfg, tokens)
+            return T.segment_logits(params, self.cfg, h, start, stop)
+        return self.jitted("tokens_logits", lambda: f)
 
-    def _run_blocks(self, params, h, start: int, stop: int):
-        b, s, _ = h.shape
-        positions = self._positions(b, s)
-        for l in range(start, stop):
-            bp, pos = T.block_at(params, self.cfg, l)
-            h, _, _ = T.apply_block(bp, self.cfg, pos, h, positions)
-        return h
+    def _h_logits(self):
+        def f(params, h, start, stop):
+            return T.segment_logits(params, self.cfg, h, start, stop)
+        return self.jitted("h_logits", lambda: f)
+
+    def _acts(self):
+        def f(params, tokens):
+            h = T.embed_tokens(params, self.cfg, tokens)
+            h, acts = T.segment_forward(params, self.cfg, h, 0,
+                                        self.num_layers, collect=True)
+            return acts, T.unembed(params, self.cfg, h)[:, -1, :]
+        return self.jitted("acts", lambda: f)
+
+    def _cut(self):
+        def f(params, tokens, stop):
+            h = T.embed_tokens(params, self.cfg, tokens)
+            return T.segment_forward(params, self.cfg, h, 0, stop)
+        return self.jitted("cut", lambda: f)
 
     def forward(self, x, params=None):
-        return self._logits_fn(-1)(self.params if params is None else params,
-                                   x)
+        return self._tokens_logits()(
+            self.params if params is None else params, x, 0, self.num_layers)
 
     def forward_from_layer(self, a, start: int, params=None):
-        return self._logits_fn(start)(
-            self.params if params is None else params, a)
+        return self._h_logits()(
+            self.params if params is None else params, a, start,
+            self.num_layers)
 
     def layer_activations(self, x, params=None):
-        params = self.params if params is None else params
-        h = T.embed_tokens(params, self.cfg, x)
-        b, s, _ = h.shape
-        positions = self._positions(b, s)
-        acts = []
-        for l in range(self.num_layers):
-            acts.append(h)
-            bp, pos = T.block_at(params, self.cfg, l)
-            h, _, _ = T.apply_block(bp, self.cfg, pos, h, positions)
-        return acts, T.unembed(params, self.cfg, h)[:, -1, :]
+        acts, logits = self._acts()(
+            self.params if params is None else params, x)
+        return list(acts), logits
 
     def with_layer_quantized(self, layer: int, bits: int):
         plen = T.period_len(self.cfg)
@@ -118,19 +125,96 @@ class TransformerBackend(ModelBackend):
             lambda t: t.at[per].set(fake_quant(t[per], bits)), blocks[pos])
         return {**self.params, "blocks": blocks}
 
+    # -- vectorized Alg. 1 probes ---------------------------------------
+    def calibrate_probes(self, x, probe_bits: int = noise_lib.PROBE_BITS,
+                         chunk: int = PROBE_CHUNK):
+        """All L per-layer noise energies from ONE compiled program.
+
+        The probed model for layer l is selected functionally: every
+        block's weights are pre-quantized per period slice (the same
+        per-slice ``fake_quant`` as ``with_layer_quantized``) and the
+        body of a chunked ``lax.map`` over l picks quantized vs clean
+        leaves with a ``jnp.where`` mask on the stacked period axis — no
+        per-layer params tree is ever rebuilt on the host. e_x probes
+        resume from the stacked activations through the same masked
+        segment forward ``forward_from_layer`` runs on."""
+        L, plen = self.num_layers, T.period_len(self.cfg)
+        nper = T.num_periods(self.cfg)
+        cfg = self.cfg
+
+        def probe_all(params, tokens):
+            h0 = T.embed_tokens(params, cfg, tokens)
+            h, acts = T.segment_forward(params, cfg, h0, 0, L, collect=True)
+            logits = T.unembed(params, cfg, h)[:, -1, :]
+            qblocks = [jax.tree.map(
+                jax.vmap(lambda t: fake_quant(t, probe_bits)), bp)
+                for bp in params["blocks"]]
+
+            def probe(l):
+                per = l // plen
+                blocks_l = []
+                for pos in range(plen):
+                    sel = (jnp.arange(nper) == per) & (l % plen == pos)
+                    blocks_l.append(jax.tree.map(
+                        lambda c, q, sel=sel: jnp.where(
+                            sel.reshape((nper,) + (1,) * (c.ndim - 1)),
+                            q, c),
+                        params["blocks"][pos], qblocks[pos]))
+                params_l = {**params, "blocks": blocks_l}
+                d_w = T.segment_logits(params_l, cfg, h0, 0, L) - logits
+                e_w = jnp.sum(jnp.square(d_w.astype(jnp.float32)))
+                a = acts[l]
+                d_x = T.segment_logits(params, cfg, fake_quant(a, probe_bits),
+                                       l, L) \
+                    - T.segment_logits(params, cfg, a, l, L)
+                e_x = jnp.sum(jnp.square(d_x.astype(jnp.float32)))
+                return e_w, e_x
+
+            e_w, e_x = jax.lax.map(probe, jnp.arange(L),
+                                   batch_size=min(chunk, L))
+            return e_w, e_x, logits
+
+        fn = self.jitted(("probe_all", probe_bits, min(chunk, L)),
+                         lambda: probe_all)
+        e_w, e_x, logits = fn(self.params, x)
+        return np.asarray(e_w, np.float64), np.asarray(e_x, np.float64), \
+            logits
+
     # -- device-segment execution ---------------------------------------
     def _device_blocks(self, p: int):
         return [T.block_at(self.params, self.cfg, l)[0] for l in range(p)]
+
+    def _stack_segment(self, seg_params: list):
+        """Scatter the per-layer quantized trees back into the stacked
+        period representation (full-precision beyond p — masked out by
+        the segment forward's dynamic ``stop``), so the quantized device
+        segment runs on the SAME compiled program as everything else."""
+        plen = T.period_len(self.cfg)
+        blocks = list(self.params["blocks"])
+        for l, layer_tree in enumerate(seg_params):
+            per, pos = divmod(l, plen)
+            blocks[pos] = jax.tree.map(
+                lambda full, q, per=per: full.at[per].set(q),
+                blocks[pos], layer_tree)
+        return {**self.params, "blocks": blocks}
 
     def split(self, plan) -> DeviceSegment:
         return split_blocks(self._device_blocks(plan.p), plan,
                             self.layer_specs())
 
     def run_device_segment(self, seg: DeviceSegment, plan, x):
-        h = T.embed_tokens(self.params, self.cfg, x)
-        b, s, _ = h.shape
-        positions = self._positions(b, s)
-        for l in range(plan.p):
-            pos = l % T.period_len(self.cfg)
-            h, _, _ = T.apply_block(seg.params[l], self.cfg, pos, h, positions)
+        # the stacked tree is a full-stack weight copy, so it is built
+        # LAZILY on first execution (split alone — pricing, payload and
+        # memory queries — never pays for it) and cached per DEPLOYED
+        # plan on the backend, bounded: deployments sharing a plan (the
+        # common case — windows price onto few plans) share one copy,
+        # and N concurrent deployments never hold N model-size trees
+        key = (plan.p, tuple(int(b) for b in np.asarray(seg.bits_w)),
+               int(seg.bits_x))
+        cache = self.__dict__.setdefault("_stacked_cache", {})
+        if key not in cache:
+            while len(cache) >= _STACKED_CACHE_SLOTS:
+                cache.pop(next(iter(cache)))
+            cache[key] = self._stack_segment(seg.params)
+        h = self._cut()(cache[key], x, plan.p)
         return fake_quant(h, int(seg.bits_x))

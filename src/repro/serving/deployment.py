@@ -13,6 +13,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import jax.numpy as jnp
+
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights)
 from repro.core.solver import PartitionPlan
 from repro.serving.backends.base import DeviceExecutor, ModelBackend
@@ -88,8 +90,10 @@ class Deployment:
         executor = self.device_segment() if self.plan.p else None
         logits = self.backend.execute_plan(self.plan, test_x,
                                            executor=executor)
-        import jax.numpy as jnp
         acc = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
+        # memoized per test-set identity on the backend: a window of
+        # deployments executing against one test set pays for the
+        # full-precision baseline forward once
         base = self.backend.evaluate(test_x, test_y)
         self.result.accuracy = acc
         self.result.accuracy_degradation = base - acc

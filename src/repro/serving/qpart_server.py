@@ -28,7 +28,7 @@ from repro.core import noise as noise_lib
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
                                    ServerProfile, cost_breakdown, delta_coeff,
                                    eps_coeff, xi_coeff)
-from repro.core.quantizer import fake_quant, round_bits
+from repro.core.quantizer import round_bits
 from repro.core.solver import OfflineStore, build_offline_store
 from repro.serving.backends.base import ModelBackend
 from repro.serving.deployment import Deployment, ReferenceContext
@@ -93,36 +93,38 @@ class QPARTServer:
 
     # ------------------------------------------------------------------
     # Offline phase (Alg. 1)
-    def calibrate(self, name: str, probe_bits: int = noise_lib.PROBE_BITS) -> None:
+    def calibrate(self, name: str, probe_bits: int = noise_lib.PROBE_BITS,
+                  vectorized: bool = True) -> None:
+        """Noise calibration (Alg. 1 steps 7–10): per-layer (s_w, s_x,
+        rho) + the Delta(a) budget table. The per-layer probe energies
+        come from the backend's ``calibrate_probes`` — by default ONE
+        compiled program emitting all L values (chunked ``lax.map`` over
+        the "which layer is quantized" index); ``vectorized=False``
+        forces the scalar reference loop (``core.noise
+        .backend_layer_energies``: 1 full + 2 suffix forwards per layer)
+        the vectorized path is regression-locked against."""
         m = self._model(name)
         b = m.backend
         x = m.calib_x
 
-        acts, logits = b.layer_activations(x)
-        adv = noise_lib.adversarial_noise_energy(logits)
-        adv_mean = float(jnp.mean(adv))
+        if vectorized:
+            e_w, e_x, logits = b.calibrate_probes(x, probe_bits)
+        else:
+            e_w, e_x, logits = noise_lib.backend_layer_energies(
+                b, x, probe_bits)
+        e_w = np.asarray(e_w, np.float64)
+        e_x = np.asarray(e_x, np.float64)
+        adv_mean = float(jnp.mean(noise_lib.adversarial_noise_energy(logits)))
 
-        L = b.num_layers
-        s_w = np.zeros(L)
-        s_x = np.zeros(L)
-        rho = np.zeros(L)
         n_calib = x.shape[0]
-        for l in range(L):
-            noisy = b.with_layer_quantized(l, probe_bits)
-            d_w = (b.forward(x, params=noisy) - logits).astype(jnp.float32)
-            e_w = float(jnp.sum(jnp.square(d_w)))
-            aq = fake_quant(acts[l], probe_bits)
-            d = b.forward_from_layer(aq, l) - b.forward_from_layer(acts[l], l)
-            e_x = float(jnp.sum(jnp.square(d.astype(jnp.float32))))
-            s_w[l] = e_w / n_calib * 4.0 ** probe_bits
-            s_x[l] = e_x / n_calib * 4.0 ** probe_bits
-            # Eq. 22: mean quantization noise / mean adversarial noise
-            rho[l] = max((0.5 * (e_w + e_x) / n_calib) / adv_mean, 1e-12)
-        m.s_w, m.s_x, m.rho = s_w, s_x, rho
+        m.s_w = e_w / n_calib * 4.0 ** probe_bits
+        m.s_x = e_x / n_calib * 4.0 ** probe_bits
+        # Eq. 22: mean quantization noise / mean adversarial noise
+        m.rho = np.maximum((0.5 * (e_w + e_x) / n_calib) / adv_mean, 1e-12)
 
         m.delta_table, m.base_accuracy = noise_lib.calibrate_delta(
-            lambda p, a: b.forward(a, params=p), b.params, x, m.calib_y, rho,
-            targets=self.levels)
+            lambda p, a: b.forward(a, params=p), b.params, x, m.calib_y,
+            m.rho, targets=self.levels)
 
     def build_store(self, name: str, device: DeviceProfile, channel: Channel,
                     weights: ObjectiveWeights) -> ReferenceContext:
