@@ -30,7 +30,6 @@ perf trajectory starts at PR 3).
 from __future__ import annotations
 
 import dataclasses
-import json
 import pathlib
 import time
 
@@ -209,13 +208,8 @@ def serving(smoke: bool = False):
         # compile count O(1) in depth: identical trace counts across L
         counts = {r["compile_once_traces"] for r in rows}
         assert len(counts) == 1, f"compile-once traces grew with depth: {rows}"
-    OUT_PATH.write_text(json.dumps({
-        "schema": "qpart-serving-bench/v1",
-        "backend": jax.default_backend(),
-        "smoke": smoke,
-        "rows": rows,
-    }, indent=2) + "\n")
-    print(f"wrote {OUT_PATH}")
+    from benchmarks.common import update_bench_json
+    update_bench_json(OUT_PATH, "serving", {"smoke": smoke, "rows": rows})
     return rows
 
 

@@ -87,3 +87,28 @@ def timed(fn, *args, repeats: int = 3, **kw):
             isinstance(out, jax.Array) else None
     dt = (time.perf_counter() - t0) / repeats
     return out, dt * 1e6                  # us
+
+
+def update_bench_json(path, section: str, payload) -> None:
+    """Merge-write one section of the shared BENCH_serving.json artifact
+    so the serving bench (``serving`` section) and the fleet bench
+    (``fleet`` section) can refresh independently without clobbering each
+    other's trajectory."""
+    import json
+    import pathlib
+    path = pathlib.Path(path)
+    doc = {}
+    if path.exists():
+        try:
+            doc = json.loads(path.read_text())
+        except (json.JSONDecodeError, OSError):
+            doc = {}
+    # migrate a v1 file (top-level serving rows) so no stale keys survive
+    if "rows" in doc:
+        doc["serving"] = {"smoke": doc.pop("smoke", None),
+                          "rows": doc.pop("rows")}
+    doc["schema"] = "qpart-serving-bench/v2"
+    doc["backend"] = jax.default_backend()
+    doc[section] = payload
+    path.write_text(json.dumps(doc, indent=2) + "\n")
+    print(f"wrote {path} [{section}]")

@@ -1,0 +1,117 @@
+"""Fleet serving benchmark (the BENCH_serving.json "fleet" trajectory).
+
+A ≥1k-request Poisson-arrival trace over a ≥3-server fleet with
+heterogeneous devices (0.2–2 GHz), heterogeneous channels (1–10 Mbps),
+mixed accuracy budgets, per-request deadlines, and a population of
+repeat requesters (device_ids) whose segment caches the engine manages.
+Every admission policy prices the same trace, so the rows compare what
+the POLICY buys: deadline-miss rate, p50/p99 end-to-end latency, queue
+delay, server utilization — plus the engine's own planning throughput
+(requests planned per second of wall clock, the serving-control hot
+path).
+
+The QPART server is stub-calibrated (synthetic noise constants, real
+Alg. 1 store): the fleet engine exercises the pricing/queueing path
+only, so no model training or execution is needed and the bench stays
+CI-fast (it runs in --smoke at full size).
+
+  PYTHONPATH=src python -m benchmarks.run --only fleet
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+import numpy as np
+
+from benchmarks.common import update_bench_json
+from repro.configs.classifier import MNIST_MLP
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile)
+from repro.serving.engine import FleetEngine
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.testing import poisson_trace, stub_classifier_server
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+N_REQUESTS = 1200
+N_SERVERS = 3
+ARRIVAL_RATE = 700.0            # requests/s — ~0.85 fleet utilization
+# (mixed batch sizes mean ~2x MACs per request on average)
+EPOCH_S = 0.005                 # 5 ms decision epochs: ~12-request windows
+DEADLINES_S = (0.020, 0.035, 0.060)   # mixed SLOs — EDF ordering matters
+BATCHES = (1, 1, 4)             # mixed batch sizes — server demands
+# differ at zero load, so balanced (SJF) ordering differs from fcfs
+POLICIES = ("fcfs", "balanced", "edf", "least_loaded")
+
+# slow fleet + fast devices (incl. a 200 Mbps channel tier): under
+# congestion the Eq. 17 queue term pushes plans device-side, segments
+# really ship, and the engine's caches get hits
+DEVICES = [DeviceProfile(f_clock=f) for f in (4e8, 1e9, 2e9)]
+CHANNELS = [Channel(capacity_bps=c) for c in (2e6, 1e7, 2e8)]
+WEIGHTS = ObjectiveWeights()
+FLEET = [ServerProfile(f_clock=3e8)] * N_SERVERS
+
+
+def _stub_server() -> QPARTServer:
+    return stub_classifier_server([("mnist", MNIST_MLP)], server=FLEET[0],
+                                  device=DEVICES[0], channel=CHANNELS[1],
+                                  weights=WEIGHTS)
+
+
+def _trace(n: int = N_REQUESTS, rate: float = ARRIVAL_RATE, seed: int = 0):
+    # ~200 repeat requesters: the engine's segment caches amortize model
+    # shipments across a device's later requests
+    return poisson_trace("mnist", n, rate, DEVICES, CHANNELS, WEIGHTS,
+                         budgets=(0.004, 0.01, 0.02), deadlines=DEADLINES_S,
+                         batches=BATCHES, device_pool=200, seed=seed)
+
+
+def fleet():
+    srv = _stub_server()
+    trace = _trace()
+    rows = []
+    for policy in POLICIES:
+        engine = FleetEngine(srv, servers=FLEET, policy=policy,
+                             slo="degrade", epoch_interval=EPOCH_S)
+        t0 = time.perf_counter()
+        metrics = engine.run(trace)
+        wall = time.perf_counter() - t0
+        s = metrics.summary()
+        assert s["completed"] + s["rejected"] == len(trace)
+        done = metrics.completed()
+        cache_hits = sum(1 for r in done if r.deployment.plan.p > 0
+                         and r.deployment.payload_bits
+                         == r.deployment.plan.payload_x_bits)
+        rows.append({
+            "bench": "fleet_poisson",
+            "policy": policy,
+            "requests": s["requests"],
+            "servers": N_SERVERS,
+            "planned_rps_wall": round(len(trace) / wall, 1),
+            "p50_latency_ms": round(s["p50_latency_s"] * 1e3, 3),
+            "p99_latency_ms": round(s["p99_latency_s"] * 1e3, 3),
+            "deadline_miss_rate": s["deadline_miss_rate"],
+            "mean_queue_delay_ms": round(s["mean_queue_delay_s"] * 1e3, 3),
+            "mean_queue_depth": s["mean_queue_depth"],
+            "rejected": s["rejected"],
+            "degraded": s["degraded"],
+            "cache_hits": cache_hits,
+            "utilization": round(float(np.mean(s["server_utilization"])), 4),
+            "total_payload_Mbit": round(s["total_payload_bits"] / 1e6, 1),
+        })
+    assert rows[0]["requests"] >= 1000 and N_SERVERS >= 3
+    update_bench_json(OUT_PATH, "fleet", {
+        "requests": len(trace),
+        "servers": N_SERVERS,
+        "arrival_rate_rps": ARRIVAL_RATE,
+        "epoch_ms": EPOCH_S * 1e3,
+        "deadlines_ms": [d * 1e3 for d in DEADLINES_S],
+        "rows": rows,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in fleet():
+        print(row)

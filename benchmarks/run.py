@@ -21,8 +21,8 @@ BENCHES = {}
 
 
 def _register():
-    from benchmarks import (calibration_bench, kernel_bench, paper_tables,
-                            planner_bench, roofline_report)
+    from benchmarks import (calibration_bench, fleet_bench, kernel_bench,
+                            paper_tables, planner_bench, roofline_report)
     BENCHES.update({
         "fig3_payload": paper_tables.payload,
         "fig5_layerwise": paper_tables.layerwise_cost,
@@ -32,6 +32,7 @@ def _register():
         "kernels": kernel_bench.kernels,
         "planner": planner_bench.planner,
         "serving": calibration_bench.serving,
+        "fleet": fleet_bench.fleet,
         "roofline": roofline_report.roofline,
     })
 
@@ -41,7 +42,8 @@ def main(argv=None) -> int:
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--csv", default=None, help="also write rows to a file")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI subset: reduced-depth serving bench only")
+                    help="fast CI subset: reduced-depth serving bench + "
+                         "full-size fleet bench")
     args = ap.parse_args(argv)
     if args.smoke and args.only:
         ap.error("--smoke selects its own benchmark set; drop --only")
@@ -50,7 +52,10 @@ def main(argv=None) -> int:
         from benchmarks import calibration_bench
         BENCHES["serving"] = functools.partial(calibration_bench.serving,
                                                smoke=True)
-        names = ["serving"]
+        # the fleet bench is pricing-only and already CI-fast: --smoke
+        # runs it at FULL size (>=1k Poisson requests, >=3 servers) so
+        # the BENCH_serving.json fleet trajectory is always fresh
+        names = ["serving", "fleet"]
     else:
         names = args.only or list(BENCHES)
     all_rows = []

@@ -48,9 +48,14 @@ def _result(plan, specs, device, server, channel, weights,
     o1 = float(o[:plan.p].sum()) + extra_dev_macs
     o2 = float(o[plan.p:].sum()) + extra_srv_macs
     costs = cost_breakdown(o1, o2, plan.payload_bits, device, server, channel)
-    return ServingResult(plan=plan, costs=costs,
-                         objective=costs.objective(weights),
-                         payload_bits=plan.payload_bits)
+    res = ServingResult(plan=plan, costs=costs,
+                        objective=costs.objective(weights),
+                        payload_bits=plan.payload_bits)
+    # baselines are priced at zero load; make that explicit so they mix
+    # with scheduled/engine results in aggregations (scheduler
+    # .total_latency, fleet metrics) without a missing-key special case
+    res.extra["queue_delay"] = 0.0
+    return res
 
 
 def _measure(res: ServingResult, logits, test_y,

@@ -1,0 +1,13 @@
+"""Event-driven fleet serving engine (DESIGN.md §8): continuous-time
+arrivals, multi-server queues, device segment-cache state, pluggable
+admission policies, fleet metrics."""
+from repro.serving.engine.events import (Event, EventQueue,  # noqa: F401
+                                         StageTimeline)
+from repro.serving.engine.fleet import (FleetEngine,  # noqa: F401
+                                        ServerState)
+from repro.serving.engine.metrics import (FleetMetrics,  # noqa: F401
+                                          FleetRecord)
+from repro.serving.engine.policies import (POLICIES,  # noqa: F401
+                                           AdmissionPolicy, BalancedPolicy,
+                                           EDFPolicy, FCFSPolicy,
+                                           LeastLoadedPolicy, get_policy)

@@ -1,0 +1,86 @@
+"""Event taxonomy + queue of the fleet serving engine (DESIGN.md §8).
+
+The engine is a discrete-event simulator over a continuous clock. Four
+event kinds, processed in (time, kind, seq) order so simultaneous events
+resolve deterministically:
+
+  ARRIVAL        — a timestamped ``InferenceRequest`` enters the system
+                   and joins the pending set.
+  CACHE_INSTALL  — a model shipment finished downlinking: the device's
+                   segment cache now holds (model, level, p). Ordered
+                   before EPOCH at equal times so a repeat request
+                   admitted at the same instant already sees the cache.
+  EPOCH          — a decision epoch: every pending request is priced as
+                   one ``price_window`` matrix and admitted under the
+                   engine's ``AdmissionPolicy`` (policies.py).
+  COMPLETE       — a request's last stage finished; bookkeeping only
+                   (queue-depth sample, horizon).
+
+Admission computes the whole per-request stage timeline analytically
+(``StageTimeline``): plan → uplink (model shipment) → device segment →
+cut-activation transfer → server segment → complete. Servers reserve
+work in admission order, so a timeline never changes after admission and
+only CACHE_INSTALL / COMPLETE need to come back through the queue.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+
+ARRIVAL = 0
+CACHE_INSTALL = 1
+EPOCH = 2
+COMPLETE = 3
+
+KIND_NAMES = {ARRIVAL: "arrival", CACHE_INSTALL: "cache_install",
+              EPOCH: "epoch", COMPLETE: "complete"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    time: float
+    kind: int                     # ARRIVAL | CACHE_INSTALL | EPOCH | COMPLETE
+    payload: object = None        # kind-specific (request index, cache key…)
+
+
+class EventQueue:
+    """Min-heap of events ordered by (time, kind, insertion seq)."""
+
+    def __init__(self):
+        self._heap = []
+        self._seq = itertools.count()
+
+    def push(self, ev: Event) -> None:
+        heapq.heappush(self._heap, (ev.time, ev.kind, next(self._seq), ev))
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[-1]
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)
+
+
+@dataclasses.dataclass
+class StageTimeline:
+    """Wall-clock stage boundaries of one admitted request. Durations are
+    priced by the same cost model as the objective (core.cost_model); the
+    server stage starts when BOTH the cut activation has arrived and the
+    server's previously reserved work has drained."""
+    admit: float                  # decision-epoch time
+    ship_done: float              # model shipment (weight bits) downlinked
+    device_done: float            # device segment computed
+    transfer_done: float          # cut activation uplinked
+    server_start: float           # server segment starts (>= transfer_done)
+    finish: float                 # server segment done — request complete
+
+    @property
+    def server_wait(self) -> float:
+        """Actual seconds the cut activation sat in the server queue."""
+        return self.server_start - self.transfer_done
+
+    def latency_from(self, arrival: float) -> float:
+        return self.finish - arrival

@@ -1,0 +1,358 @@
+"""Event-driven fleet serving engine (DESIGN.md §8).
+
+Runs a discrete-event loop over timestamped ``InferenceRequest`` arrivals
+against a MULTI-SERVER fleet: plan → uplink (model shipment) → device
+segment → cut-activation transfer → server segment → complete. The
+engine generalizes the one-shot ``WorkloadBalancer.schedule`` window
+along three axes while keeping its vectorized hot path (every decision
+epoch prices all pending requests as ONE ``price_window`` matrix):
+
+  * time      — arrivals carry ``arrival_time``; requests admitted at a
+                later epoch see whatever backlog earlier admissions left.
+  * fleet     — N servers, each with its own ``ServerProfile``, work
+                backlog and wall-clock reservation horizon. The pricing
+                row of server s is the reference row plus a per-server
+                delta-coefficient correction and its own queue term, so
+                heterogeneous fleets cost one vector op per server.
+  * state     — per-device segment caches. When a request carries a
+                ``device_id`` the ENGINE decides which candidates ship
+                weights: a candidate whose quantized segment the device
+                already holds is priced at the activation-only payload
+                (``segment_cached`` set automatically, not trusted from
+                the caller). Shipments install into the cache when their
+                downlink completes, not at admission.
+
+Queue semantics: the objective's queue term is the PRICING view — the
+chosen server's reserved work backlog at admission (``max(0,
+work_until − now)``), exactly the paper's Eq. 17-under-load term the
+one-shot scheduler charged. The executed ``StageTimeline`` is the
+wall-clock truth: the server segment starts at ``max(server free, cut
+activation arrival)`` and servers serve reservations in admission order
+(FIFO, non-preemptive). With one server and all arrivals at t = 0 the
+two views coincide and the engine reproduces ``WorkloadBalancer
+.schedule`` plan-for-plan and objective-for-objective (regression-locked
+in tests/test_scheduler.py + tests/test_fleet.py).
+
+Deadline/SLO admission (``slo=``):
+  * "observe" — deadlines only tracked in metrics (default).
+  * "reject"  — a request whose estimated finish misses ``arrival +
+                deadline`` on every (server, candidate) is rejected.
+  * "degrade" — same check, but before rejecting, the accuracy budget is
+                relaxed level-by-level (cheaper payloads) until some
+                candidate meets the deadline; only then reject.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import (ServerProfile, cost_breakdown,
+                                   delta_coeff, eps_coeff)
+from repro.serving.deployment import Deployment, ReferenceContext
+from repro.serving.engine.events import (ARRIVAL, CACHE_INSTALL, COMPLETE,
+                                         EPOCH, Event, EventQueue,
+                                         StageTimeline)
+from repro.serving.engine.metrics import FleetMetrics, FleetRecord
+from repro.serving.engine.policies import AdmissionPolicy, get_policy
+from repro.serving.pricing import price_window
+from repro.serving.simulator import InferenceRequest, ServingResult
+
+SLO_MODES = ("observe", "reject", "degrade")
+
+
+@dataclasses.dataclass
+class ServerState:
+    """One fleet member: profile + the two queue views."""
+    profile: ServerProfile
+    work_until: float = 0.0     # pricing backlog: committed server seconds
+    free: float = 0.0           # wall clock: last reservation's finish
+    busy: float = 0.0           # total reserved work (utilization)
+
+
+@dataclasses.dataclass
+class _Pending:
+    index: int                  # position in the submitted trace
+    request: InferenceRequest
+    arrival: float
+
+
+class FleetEngine:
+    """Discrete-event serving over a fleet of QPART servers.
+
+    ``qpart_server`` supplies the registered models and offline stores;
+    ``servers`` the fleet profiles (default: the qpart_server's own
+    profile, a fleet of one); ``policy`` an ``AdmissionPolicy`` or its
+    name; ``epoch_interval`` batches arrivals into decision epochs (0 =
+    admit at each arrival instant; simultaneous arrivals always share
+    one epoch/window).
+    """
+
+    def __init__(self, qpart_server, servers: Optional[Sequence[ServerProfile]] = None,
+                 policy="fcfs", slo: str = "observe",
+                 epoch_interval: float = 0.0):
+        if slo not in SLO_MODES:
+            raise ValueError(f"slo must be one of {SLO_MODES}, got {slo!r}")
+        self.qs = qpart_server
+        profiles = list(servers) if servers is not None \
+            else [qpart_server.server]
+        if not profiles:
+            raise ValueError("fleet needs at least one server")
+        self._profiles = profiles
+        self.servers = [ServerState(p) for p in profiles]
+        self.policy: AdmissionPolicy = get_policy(policy)
+        self.slo = slo
+        self.epoch_interval = float(epoch_interval)
+        self.context: Optional[ReferenceContext] = None
+        # device_id -> set of (model, accuracy level, p) the device holds
+        self.caches: dict = {}
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[InferenceRequest],
+            context: Optional[ReferenceContext] = None) -> FleetMetrics:
+        """Run the trace to completion and return the fleet metrics
+        (``.records`` is in trace order, one entry per request). Each
+        run is an independent simulation: server queues and device
+        caches start empty (the engine is re-runnable, not resumable)."""
+        self.context = context
+        self.servers = [ServerState(p) for p in self._profiles]
+        self.caches = {}
+        records = [FleetRecord(i, r) for i, r in enumerate(requests)]
+        self._records = records
+        self._queue = EventQueue()
+        self._pending: List[_Pending] = []
+        self._epochs = set()
+        self._admit_rank = 0
+        self._in_flight = 0
+        self._samples: List[tuple] = []
+        self._horizon = 0.0
+        for i, r in enumerate(requests):
+            self._queue.push(Event(float(r.arrival_time), ARRIVAL, i))
+        while self._queue:
+            ev = self._queue.pop()
+            if ev.kind == ARRIVAL:
+                self._on_arrival(ev)
+            elif ev.kind == CACHE_INSTALL:
+                dev_id, key = ev.payload
+                self.caches.setdefault(dev_id, set()).add(key)
+            elif ev.kind == EPOCH:
+                self._on_epoch(ev.time)
+            elif ev.kind == COMPLETE:
+                self._in_flight -= 1
+                self._samples.append((ev.time, self._in_flight))
+        return FleetMetrics(records=records,
+                            server_busy=[s.busy for s in self.servers],
+                            queue_samples=self._samples,
+                            horizon=self._horizon)
+
+    # ------------------------------------------------------------------
+    def _on_arrival(self, ev: Event) -> None:
+        i = ev.payload
+        self._pending.append(_Pending(i, self._records[i].request, ev.time))
+        t = ev.time
+        if self.epoch_interval > 0:
+            k = math.ceil(round(t / self.epoch_interval, 9))
+            t = k * self.epoch_interval
+        if t not in self._epochs:
+            self._epochs.add(t)
+            self._queue.push(Event(t, EPOCH))
+
+    def _on_epoch(self, t: float) -> None:
+        self._epochs.discard(t)
+        pending, self._pending = self._pending, []
+        if not pending:
+            return
+        pricing = [self._pricing_request(p.request) for p in pending]
+        tab = price_window(self.qs.models, self.servers[0].profile, pricing,
+                           context=self.context)
+        ref = self.servers[0].profile
+        t_server_rows = [(row[-1] - row) * ref.gamma / ref.f_clock
+                         for row in tab.o1]
+        for j in self.policy.order(pending, tab, t_server_rows):
+            self._admit(t, pending[j], tab, j)
+
+    def _pricing_request(self, req: InferenceRequest) -> InferenceRequest:
+        """Engine-owned cache state: a request with a ``device_id`` is
+        priced from the full-payload row and the cached candidates are
+        re-priced individually; the caller's flag only survives for
+        anonymous requests (the one-shot degenerate case)."""
+        if req.device_id is not None and req.segment_cached:
+            return dataclasses.replace(req, segment_cached=False)
+        return req
+
+    # ------------------------------------------------------------------
+    def _cached_candidates(self, req: InferenceRequest,
+                           a_star: float) -> np.ndarray:
+        if req.device_id is None:
+            return np.zeros(0, dtype=int)
+        held = self.caches.get(req.device_id, ())
+        return np.array(sorted(p for (m, lv, p) in held
+                               if m == req.model and lv == a_star),
+                        dtype=int)
+
+    def _candidate_rows(self, req: InferenceRequest, tab, j, a_star: float):
+        """(base objective row, wire vector) with the device segment
+        cache applied: a cached candidate drops the weight-shipment share
+        of its wire term (Eq. 14 Z_w amortized to zero)."""
+        row = tab.obj[j]
+        wire = tab.wire[j]
+        cached = self._cached_candidates(req, a_star)
+        cached = cached[cached < len(wire)]
+        if len(cached):
+            ep = eps_coeff(req.weights, req.device, req.channel)
+            pb, px = tab.pb[j], tab.px[j]
+            adj = np.zeros_like(row)
+            adj[cached] = ep * (pb[cached] - px[cached])
+            row = row - adj
+            wire = wire.copy()
+            wire[cached] = px[cached]
+        return row, wire
+
+    def _finish_vec(self, req: InferenceRequest, t: float, o1_row, wire_vec,
+                    px_row, srv: ServerState) -> np.ndarray:
+        """Estimated wall-clock completion per candidate on ``srv`` under
+        the reservation semantics (exact: reservations never move)."""
+        d = req.device
+        r_cap = req.channel.capacity()
+        ship = np.maximum(wire_vec - px_row, 0.0)
+        o2 = o1_row[-1] - o1_row
+        ready = (t + ship / r_cap + o1_row * d.gamma / d.f_clock
+                 + px_row / r_cap)
+        start = np.where(o2 > 0, np.maximum(ready, srv.free), ready)
+        return start + o2 * srv.profile.gamma / srv.profile.f_clock
+
+    # ------------------------------------------------------------------
+    def _choose(self, t: float, req: InferenceRequest, arrival: float,
+                tab, j: int, a_star: float, enforce_slo: bool):
+        """Best (server, candidate) under the policy's server rule; None
+        when ``enforce_slo`` and no pair meets the deadline."""
+        row0, wire_vec = self._candidate_rows(req, tab, j, a_star)
+        o1_row = tab.o1[j]
+        o2_vec = o1_row[-1] - o1_row
+        uses_server = o2_vec > 0
+        ref = self.servers[0].profile
+        dl_ref = delta_coeff(req.weights, ref)
+        least_loaded = self.policy.server_rule == "least_loaded"
+        if least_loaded:
+            # load order; under an SLO the later servers are the
+            # fallback, so a request is only rejected when EVERY
+            # (server, candidate) pair misses the deadline
+            order = sorted(range(len(self.servers)),
+                           key=lambda s: (self.servers[s].work_until, s))
+            if not enforce_slo:
+                order = order[:1]
+        else:
+            order = range(len(self.servers))
+        best = None
+        for s in order:
+            srv = self.servers[s]
+            row = row0
+            if srv.profile is not ref:
+                row = row + (delta_coeff(req.weights, srv.profile)
+                             - dl_ref) * o2_vec
+            queue = max(0.0, srv.work_until - t)
+            row = row + req.weights.omega * queue * uses_server
+            if enforce_slo:
+                finish = self._finish_vec(req, t, o1_row, wire_vec,
+                                          tab.px[j], srv)
+                row = np.where(finish <= arrival + req.deadline + 1e-12,
+                               row, np.inf)
+                if not np.isfinite(row).any():
+                    continue
+            c = int(np.argmin(row))
+            if least_loaded:
+                # first feasible server in load order wins outright
+                return (row[c], s, c, queue, wire_vec)
+            if best is None or row[c] < best[0]:
+                best = (row[c], s, c, queue, wire_vec)
+        return best
+
+    # ------------------------------------------------------------------
+    def _admit(self, t: float, pnd: _Pending, tab, j: int) -> None:
+        req = pnd.request
+        store = self.qs.models[req.model].store(self.context)
+        a_star = store.level_for(req.accuracy_budget)
+        enforce = req.deadline is not None and self.slo != "observe"
+        choice = self._choose(t, req, pnd.arrival, tab, j, a_star, enforce)
+        degraded = None
+        if choice is None and self.slo == "degrade":
+            for lv in sorted(store.levels):
+                if lv <= a_star:
+                    continue
+                relaxed = dataclasses.replace(self._pricing_request(req),
+                                              accuracy_budget=lv)
+                tab_lv = price_window(self.qs.models,
+                                      self.servers[0].profile, [relaxed],
+                                      context=self.context)
+                choice = self._choose(t, req, pnd.arrival, tab_lv, 0, lv,
+                                      True)
+                if choice is not None:
+                    degraded, tab, j, a_star = lv, tab_lv, 0, lv
+                    break
+        rec = self._records[pnd.index]
+        if choice is None:
+            rec.rejected = True
+            return
+        _, s, c, queue, wire_vec = choice
+        self._commit(t, pnd, tab, j, s, c, queue, float(wire_vec[c]),
+                     a_star, degraded)
+
+    def _commit(self, t: float, pnd: _Pending, tab, j: int, s: int, c: int,
+                queue: float, wire: float, a_star: float,
+                degraded: Optional[float]) -> None:
+        req = pnd.request
+        srv = self.servers[s]
+        plan, o1, o2, _ = tab.select(j, c)
+        costs = cost_breakdown(o1, o2, wire, req.device, srv.profile,
+                               req.channel)
+        res = ServingResult(plan=plan, costs=costs,
+                            objective=costs.objective(req.weights)
+                            + req.weights.omega * (queue if o2 > 0 else 0.0),
+                            payload_bits=wire)
+        res.extra["queue_delay"] = queue if o2 > 0 else 0.0
+        res.extra["server"] = s
+        if degraded is not None:
+            res.extra["degraded_to"] = degraded
+        backend = self.qs.models[req.model].backend
+        dep = Deployment(req.model, backend, req, plan, res)
+
+        # stage timeline (events.py): ship → device segment → transfer →
+        # server segment, reserved FIFO on the chosen server
+        r_cap = req.channel.capacity()
+        ship = max(wire - plan.payload_x_bits, 0.0)
+        x_share = wire - ship
+        ship_done = t + ship / r_cap
+        device_done = ship_done + o1 * req.device.gamma / req.device.f_clock
+        transfer_done = device_done + x_share / r_cap
+        if o2 > 0:
+            server_start = max(srv.free, transfer_done)
+            finish = server_start + costs.t_server
+            srv.free = finish
+        else:
+            server_start = transfer_done
+            finish = server_start
+        srv.work_until = max(srv.work_until, t) + costs.t_server
+        srv.busy += costs.t_server
+        tl = StageTimeline(t, ship_done, device_done, transfer_done,
+                           server_start, finish)
+
+        rec = self._records[pnd.index]
+        rec.deployment = dep
+        rec.timeline = tl
+        rec.server = s
+        rec.start_order = self._admit_rank
+        rec.backlog_at_admission = queue
+        rec.queue_delay = res.extra["queue_delay"]
+        rec.degraded_to = degraded
+        self._admit_rank += 1
+
+        if (req.device_id is not None and plan.p and ship > 0):
+            self._queue.push(Event(ship_done, CACHE_INSTALL,
+                                   (req.device_id,
+                                    (req.model, a_star, plan.p))))
+        self._in_flight += 1
+        self._samples.append((t, self._in_flight))
+        self._queue.push(Event(finish, COMPLETE, pnd.index))
+        self._horizon = max(self._horizon, finish)

@@ -1,0 +1,131 @@
+"""Fleet-level serving metrics.
+
+The engine emits one ``FleetRecord`` per request (admitted or rejected);
+``FleetMetrics`` owns the records plus the engine's queue-depth samples
+and per-server busy totals, and aggregates the numbers a serving system
+is judged by: p50/p99 end-to-end latency, deadline-miss rate, server
+utilization, time-weighted queue depth, payload on the radio link.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.engine.events import StageTimeline
+from repro.serving.simulator import InferenceRequest
+
+
+@dataclasses.dataclass
+class FleetRecord:
+    """Everything the engine decided and observed for one request."""
+    index: int                          # arrival-order position in the trace
+    request: InferenceRequest
+    deployment: object = None           # serving.Deployment; None = rejected
+    timeline: Optional[StageTimeline] = None
+    server: int = -1                    # fleet index of the serving server
+    start_order: int = -1               # global admission rank
+    # pricing-side queue view (what entered the objective; the paper's
+    # Eq. 17 queue term = reference-server work backlog at admission)
+    backlog_at_admission: float = 0.0
+    queue_delay: float = 0.0            # backlog, zeroed when p = L (no
+    # server segment) — mirrors result.extra["queue_delay"]
+    degraded_to: Optional[float] = None  # accuracy level after SLO degrade
+    rejected: bool = False
+
+    @property
+    def arrival(self) -> float:
+        return self.request.arrival_time
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.timeline is None:
+            return None
+        return self.timeline.latency_from(self.arrival)
+
+    @property
+    def deadline_missed(self) -> Optional[bool]:
+        """None when the request has no deadline; a rejected request with
+        a deadline counts as missed."""
+        if self.request.deadline is None:
+            return None
+        if self.rejected:
+            return True
+        return self.latency > self.request.deadline + 1e-12
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    records: List[FleetRecord]
+    server_busy: List[float]            # per-server reserved work seconds
+    queue_samples: List[tuple]          # (time, total in-flight requests)
+    horizon: float                      # last completion time
+
+    # ------------------------------------------------------------------
+    def completed(self) -> List[FleetRecord]:
+        return [r for r in self.records if not r.rejected]
+
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency for r in self.completed()], np.float64)
+
+    def deadline_miss_rate(self) -> Optional[float]:
+        """Missed / carrying-a-deadline (rejections count as misses);
+        None when the trace has no deadlines at all."""
+        flags = [r.deadline_missed for r in self.records
+                 if r.deadline_missed is not None]
+        if not flags:
+            return None
+        return float(np.mean(flags))
+
+    def utilization(self) -> List[float]:
+        if self.horizon <= 0:
+            return [0.0] * len(self.server_busy)
+        return [min(b / self.horizon, 1.0) for b in self.server_busy]
+
+    def mean_queue_depth(self) -> float:
+        """Time-weighted mean of in-flight requests over the horizon."""
+        if len(self.queue_samples) < 2:
+            return 0.0
+        t = np.array([s[0] for s in self.queue_samples])
+        d = np.array([s[1] for s in self.queue_samples], np.float64)
+        dt = np.diff(t)
+        span = t[-1] - t[0]
+        if span <= 0:
+            return float(d.mean())
+        return float(np.sum(d[:-1] * dt) / span)
+
+    # ------------------------------------------------------------------
+    def summary(self) -> dict:
+        lat = self.latencies()
+        done = self.completed()
+        n = len(self.records)
+        queue_delays = [r.timeline.server_wait for r in done]
+        out = {
+            "requests": n,
+            "completed": len(done),
+            "rejected": sum(r.rejected for r in self.records),
+            "degraded": sum(r.degraded_to is not None for r in self.records),
+            "horizon_s": round(self.horizon, 6),
+            "throughput_rps": round(len(done) / self.horizon, 3)
+            if self.horizon > 0 else 0.0,
+            "p50_latency_s": round(float(np.percentile(lat, 50)), 6)
+            if len(lat) else None,
+            "p99_latency_s": round(float(np.percentile(lat, 99)), 6)
+            if len(lat) else None,
+            "mean_latency_s": round(float(lat.mean()), 6)
+            if len(lat) else None,
+            "deadline_miss_rate": self.deadline_miss_rate(),
+            "mean_queue_delay_s": round(float(np.mean(queue_delays)), 6)
+            if queue_delays else None,
+            "mean_queue_depth": round(self.mean_queue_depth(), 3),
+            "max_queue_depth": max((s[1] for s in self.queue_samples),
+                                   default=0),
+            "server_utilization": [round(u, 4) for u in self.utilization()],
+            "total_payload_bits": float(sum(
+                r.deployment.payload_bits for r in done)),
+        }
+        miss = out["deadline_miss_rate"]
+        if miss is not None:
+            out["deadline_miss_rate"] = round(miss, 4)
+        return out

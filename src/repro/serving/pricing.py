@@ -34,6 +34,11 @@ class WindowTable:
     wire: List[np.ndarray]          # per request: (P+1,) wire bits
     plans: List[list]               # per request: candidate plan list
     groups: list                    # [(request indices, (G, P+1) obj)]
+    # both payload rows per request — the fleet engine re-prices single
+    # candidates between them when its device cache holds a segment
+    # (wire[i] is the row the request's segment_cached flag selected)
+    pb: List[np.ndarray] = dataclasses.field(default_factory=list)
+    px: List[np.ndarray] = dataclasses.field(default_factory=list)
 
     def argmin_choices(self) -> np.ndarray:
         """Best partition point per request — one matrix argmin per
@@ -62,7 +67,8 @@ def price_window(models, server: ServerProfile,
 
     R = len(requests)
     tab = WindowTable(obj=[None] * R, o1=[None] * R, wire=[None] * R,
-                      plans=[None] * R, groups=[])
+                      plans=[None] * R, groups=[],
+                      pb=[None] * R, px=[None] * R)
     by_model = {}
     for i, r in enumerate(requests):
         by_model.setdefault(r.model, []).append(i)
@@ -77,20 +83,34 @@ def price_window(models, server: ServerProfile,
         dl = np.array([delta_coeff(r.weights, server) for r in group])
         ep = np.array([eps_coeff(r.weights, r.device, r.channel)
                        for r in group])
-        # prefix MACs per distinct batch size (windows share few)
-        o1_by_batch = {}
+        # rows cached per (accuracy level, batch, cached) — large windows
+        # with few distinct budgets reuse one (o1, plans, payloads,
+        # memory) tuple instead of rebuilding identical rows per request
+        rows_cache = {}
         plans, o1_rows, wire_rows, mem_rows = [], [], [], []
+        pb_rows, px_rows = [], []
+        o1_by_batch = {}
         for r in group:
-            if r.batch not in o1_by_batch:
-                specs = m.backend.layer_specs(batch=r.batch)
-                o1_by_batch[r.batch] = np.concatenate(
-                    [[0.0], np.cumsum([sp.o for sp in specs])])
-            o1_rows.append(o1_by_batch[r.batch])
-            a_star = store.level_for(r.accuracy_budget)
-            plans.append(store.level_plans(a_star))
-            pb, px = store.level_payload_rows(a_star)
-            wire_rows.append(px if r.segment_cached else pb)
-            mem_rows.append(store.level_memory_rows(a_star))
+            key = (store.level_for(r.accuracy_budget), r.batch,
+                   bool(r.segment_cached))
+            if key not in rows_cache:
+                a_star, batch, cached = key
+                if batch not in o1_by_batch:
+                    specs = m.backend.layer_specs(batch=batch)
+                    o1_by_batch[batch] = np.concatenate(
+                        [[0.0], np.cumsum([sp.o for sp in specs])])
+                pb, px = store.level_payload_rows(a_star)
+                rows_cache[key] = (o1_by_batch[batch],
+                                   store.level_plans(a_star),
+                                   px if cached else pb,
+                                   store.level_memory_rows(a_star), pb, px)
+            o1_r, plans_r, wire_r, mem_r, pb_r, px_r = rows_cache[key]
+            o1_rows.append(o1_r)
+            plans.append(plans_r)
+            wire_rows.append(wire_r)
+            mem_rows.append(mem_r)
+            pb_rows.append(pb_r)
+            px_rows.append(px_r)
         o1 = np.stack(o1_rows)                          # (G, P+1)
         wire = np.stack(wire_rows)
         obj = xi[:, None] * o1 + dl[:, None] * (o1[:, -1:] - o1) \
@@ -105,4 +125,5 @@ def price_window(models, server: ServerProfile,
         for j, i in enumerate(idxs):
             tab.obj[i], tab.o1[i] = obj[j], o1[j]
             tab.wire[i], tab.plans[i] = wire[j], plans[j]
+            tab.pb[i], tab.px[i] = pb_rows[j], px_rows[j]
     return tab

@@ -224,6 +224,20 @@ class QPARTServer:
         return out
 
     # ------------------------------------------------------------------
+    def fleet(self, servers=None, policy="fcfs", slo: str = "observe",
+              epoch_interval: float = 0.0):
+        """Event-driven fleet serving over this server's registered
+        models (serving.engine): ``srv.fleet(servers=[...],
+        policy="edf").run(requests)`` — continuous-time arrivals,
+        multi-server queues, engine-managed device segment caches,
+        deadline-aware admission. With the defaults (one server, plain
+        requests) it degenerates to the one-shot ``serve_batch``/
+        ``WorkloadBalancer`` behavior."""
+        from repro.serving.engine import FleetEngine
+        return FleetEngine(self, servers=servers, policy=policy, slo=slo,
+                           epoch_interval=epoch_interval)
+
+    # ------------------------------------------------------------------
     def execute_partitioned(self, name: str, plan, x, y) -> float:
         """Really run the two segments of an arbitrary stored plan:
         device side with quantized weights + quantized cut activation,

@@ -25,6 +25,16 @@ Two policies:
   * balanced  — same, but requests are admitted shortest-server-demand
                 first (SJF-flavoured), which provably reduces the mean
                 queueing term for the same total work.
+
+Since the event-driven engine landed (serving.engine, DESIGN.md §8) this
+module is the COMPATIBILITY SURFACE over it: ``schedule()`` runs the
+``FleetEngine`` in its degenerate configuration — one server, arrivals
+as given (all t=0 for plain requests) — which reproduces the historical
+one-shot behavior plan-for-plan and objective-for-objective. fcfs and
+balanced are two of the engine's pluggable ``AdmissionPolicy``
+implementations (see engine/policies.py for EDF and least-loaded). The
+scalar per-request re-pricing (``_serve_under_load``) stays here as the
+executable reference both paths are regression-locked against.
 """
 from __future__ import annotations
 
@@ -36,7 +46,7 @@ import numpy as np
 from repro.core.cost_model import (ServerProfile, cost_breakdown,
                                    delta_coeff, eps_coeff, xi_coeff)
 from repro.serving.deployment import Deployment, ReferenceContext
-from repro.serving.pricing import WindowTable, price_window
+from repro.serving.engine import FleetEngine
 from repro.serving.simulator import InferenceRequest, ServingResult
 
 
@@ -62,55 +72,17 @@ class WorkloadBalancer:
     def schedule(self, qpart_server, requests: Sequence[InferenceRequest],
                  context: Optional[ReferenceContext] = None,
                  ) -> List[ScheduledResult]:
+        """The event engine's degenerate configuration: one server, the
+        requests' own arrival times (0 by default, i.e. one simultaneous
+        window). Records come back in trace order, same as before."""
         if not len(requests):
             return []
-        tab = price_window(qpart_server.models, self.server, requests,
-                           context=context)
-        # per-candidate server seconds and server-use masks from the
-        # shared table's MAC columns
-        t_server = [(row[-1] - row) * self.server.gamma / self.server.f_clock
-                    for row in tab.o1]
-        uses_server = [row[-1] - row > 0 for row in tab.o1]
-        R = len(requests)
-        order = list(range(R))
-        if self.policy == "balanced":
-            # shortest-server-demand first, estimated at zero load
-            zero_choice = tab.argmin_choices()
-            demands = np.array([t_server[i][zero_choice[i]]
-                                for i in range(R)])
-            order = list(np.argsort(demands))
-        busy_until = 0.0
-        out = []
-        for rank, idx in enumerate(order):
-            req = requests[idx]
-            # queueing: the server term waits for the backlog — but only
-            # if the candidate uses the server at all
-            row = tab.obj[idx] \
-                + req.weights.omega * busy_until * uses_server[idx]
-            c = int(np.argmin(row))
-            dep = self._deployment_at(qpart_server, tab, idx, c, req,
-                                      busy_until)
-            out.append((idx, ScheduledResult(req, dep, busy_until, rank)))
-            busy_until += t_server[idx][c]
-        # restore arrival order by the carried original index (a
-        # requests.index() scan is O(n^2) and wrong for duplicates)
-        out.sort(key=lambda t: t[0])
-        return [sr for _, sr in out]
-
-    # ------------------------------------------------------------------
-    def _deployment_at(self, qpart_server, tab: WindowTable, idx: int,
-                       c: int, req: InferenceRequest,
-                       queue: float) -> Deployment:
-        plan, o1, o2, wire = tab.select(idx, c)
-        costs = cost_breakdown(o1, o2, wire, req.device, self.server,
-                               req.channel)
-        res = ServingResult(plan=plan, costs=costs,
-                            objective=costs.objective(req.weights)
-                            + req.weights.omega * (queue if o2 > 0 else 0.0),
-                            payload_bits=wire)
-        res.extra["queue_delay"] = queue if o2 > 0 else 0.0
-        backend = qpart_server.models[req.model].backend
-        return Deployment(req.model, backend, req, plan, res)
+        engine = FleetEngine(qpart_server, servers=[self.server],
+                             policy=self.policy)
+        records = engine.run(requests, context=context).records
+        return [ScheduledResult(rec.request, rec.deployment,
+                                rec.backlog_at_admission, rec.start_order)
+                for rec in records]
 
     # ------------------------------------------------------------------
     # Scalar reference path (kept for the benchmark's before/after and as
@@ -159,6 +131,10 @@ class WorkloadBalancer:
         return res
 
 
-def total_latency(results: List[ScheduledResult]) -> float:
-    return sum(sr.result.costs.t_total + sr.result.extra["queue_delay"]
-               for sr in results)
+def total_latency(results) -> float:
+    """Sum of per-request latency incl. queue delay. Accepts anything
+    with a ``.result`` view (``ScheduledResult`` or ``Deployment``) —
+    results from ``serve``/``serve_batch`` never saw a queue, so a
+    missing ``queue_delay`` reads as 0 instead of raising ``KeyError``."""
+    return sum(sr.result.costs.t_total
+               + sr.result.extra.get("queue_delay", 0.0) for sr in results)

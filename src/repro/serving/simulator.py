@@ -36,7 +36,19 @@ class InferenceRequest:
     # the cut activation Z_x is priced. This is where partitioning beats
     # p=0 full-offload (the Neurosurgeon regime) — a fresh request always
     # pays for the model shipment and usually prefers p=0.
+    #
+    # When the request carries a ``device_id`` the fleet engine OWNS this
+    # flag: the per-device segment cache decides which candidates ship
+    # weights, and the caller's value is ignored (engine/fleet.py).
     segment_cached: bool = False
+    # -- continuous-time fields (serving.engine). The one-shot paths
+    # (serve / serve_batch / WorkloadBalancer.schedule) ignore them, which
+    # is exactly the all-arrivals-at-t=0 degenerate case of the engine.
+    arrival_time: float = 0.0           # seconds on the fleet clock
+    deadline: Optional[float] = None    # SLO: max end-to-end seconds from
+    # arrival; None = best-effort
+    device_id: Optional[str] = None     # stable requester identity — keys
+    # the engine's segment cache
 
 
 @dataclasses.dataclass

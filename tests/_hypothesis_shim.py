@@ -30,9 +30,10 @@ except ModuleNotFoundError:
 
     def given(*args, **kwargs):
         def deco(fn):
-            # zero-arg replacement: pytest must not see the strategy
-            # parameters (it would demand fixtures for them)
-            def skipper():
+            # replacement without named parameters: pytest must not see
+            # the strategy parameters (it would demand fixtures for
+            # them); bare *args still receives `self` on test methods
+            def skipper(*a):
                 pytest.skip("hypothesis not installed")
             skipper.__name__ = fn.__name__
             skipper.__doc__ = fn.__doc__

@@ -1,0 +1,364 @@
+"""Event-driven fleet engine tests (serving.engine, DESIGN.md §8):
+degenerate-case lock against the one-shot scheduler, continuous-time
+queue dynamics, engine-managed device segment caches, deadline/SLO
+admission (reject + degrade), multi-server fleets, policy-ordering
+properties (hypothesis), and fleet metrics sanity."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.classifier import CIFAR_CNN, MNIST_MLP
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile)
+from repro.serving.engine import FleetEngine
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.scheduler import WorkloadBalancer, total_latency
+from repro.serving.simulator import InferenceRequest
+from repro.serving.testing import stub_classifier_server
+
+from tests._hypothesis_shim import given, settings, st
+
+DEV = DeviceProfile()
+CH = Channel(capacity_bps=2e6)
+W = ObjectiveWeights()
+
+
+def stub_server(configs=(("mnist", MNIST_MLP),), server=None,
+                device=DEV, channel=CH, weights=W) -> QPARTServer:
+    """Pricing-only QPART server (repro.serving.testing): synthetic
+    calibration constants, real offline store — the fleet engine never
+    executes models, so no training is needed."""
+    return stub_classifier_server(configs, server=server, device=device,
+                                  channel=channel, weights=weights)
+
+
+def req(budget=0.01, device=DEV, channel=CH, weights=W, **kw):
+    return InferenceRequest("mnist", budget, device, channel, weights, **kw)
+
+
+# ---------------------------------------------------------------------------
+class TestDegenerateLock:
+    """One server + simultaneous arrivals == the one-shot scheduler.
+
+    The genuine behavioral lock is against the INDEPENDENT scalar
+    reference (``_serve_under_load``) — here and in test_scheduler.py.
+    The first test only pins the schedule() ↔ engine delegation mapping
+    (record order and field wiring), since schedule() now runs the
+    engine itself."""
+
+    def test_engine_matches_workload_balancer(self):
+        srv = stub_server()
+        strong = dataclasses.replace(DEV, f_clock=2e9)
+        reqs = [req(0.01 if i % 2 else 0.004,
+                    device=strong if i % 3 == 0 else DEV,
+                    segment_cached=bool(i % 2)) for i in range(10)]
+        for policy in ("fcfs", "balanced"):
+            sched = WorkloadBalancer(ServerProfile(),
+                                     policy=policy).schedule(srv, reqs)
+            eng = FleetEngine(srv, servers=[ServerProfile()], policy=policy)
+            recs = eng.run(reqs).records
+            assert len(recs) == len(sched)
+            for rec, sr in zip(recs, sched):
+                assert rec.deployment.plan is sr.result.plan
+                assert rec.deployment.objective == sr.result.objective
+                assert rec.queue_delay == sr.result.extra["queue_delay"]
+                assert rec.start_order == sr.start_order
+
+    def test_scalar_reference_pricing(self):
+        """Engine admission == per-request Alg. 2 re-pricing, decision
+        for decision (the same lock test_scheduler runs, directly on the
+        engine API)."""
+        srv = stub_server()
+        bal = WorkloadBalancer(ServerProfile(), policy="fcfs")
+        reqs = [req(segment_cached=True) for _ in range(8)]
+        recs = FleetEngine(srv, servers=[ServerProfile()]).run(reqs).records
+        queue = 0.0
+        for rec in recs:
+            ref = bal._serve_under_load(srv, rec.request, queue)
+            assert rec.deployment.plan is ref.plan
+            assert rec.deployment.objective == pytest.approx(ref.objective,
+                                                             rel=1e-9)
+            queue += ref.costs.t_server
+
+
+# ---------------------------------------------------------------------------
+class TestContinuousTime:
+    def test_spread_arrivals_see_no_queue(self):
+        """Arrivals far apart in time drain the backlog between epochs;
+        simultaneous arrivals stack up."""
+        srv = stub_server()
+        burst = [req(segment_cached=True) for _ in range(16)]
+        m_burst = FleetEngine(srv).run(burst)
+        assert max(r.queue_delay for r in m_burst.records) > 0
+        spread = [dataclasses.replace(r, arrival_time=i * 10.0)
+                  for i, r in enumerate(burst)]
+        m_spread = FleetEngine(srv).run(spread)
+        assert max(r.queue_delay for r in m_spread.records) == 0.0
+        # identical requests at zero load: every epoch picks the same plan
+        ps = {r.deployment.plan.p for r in m_spread.records}
+        assert len(ps) == 1
+
+    def test_timeline_stage_order(self):
+        srv = stub_server()
+        recs = FleetEngine(srv).run([req() for _ in range(6)]).records
+        for r in recs:
+            tl = r.timeline
+            assert tl.admit <= tl.ship_done <= tl.device_done \
+                <= tl.transfer_done <= tl.server_start <= tl.finish
+            assert tl.server_wait >= 0
+
+    def test_epoch_interval_batches_arrivals(self):
+        """With a coarse decision epoch, staggered arrivals are priced as
+        one window at the epoch boundary."""
+        srv = stub_server()
+        reqs = [req(arrival_time=t, segment_cached=True)
+                for t in (0.1, 0.2, 0.3)]
+        recs = FleetEngine(srv, epoch_interval=1.0).run(reqs).records
+        assert all(r.timeline.admit == 1.0 for r in recs)
+        # one shared window: later admissions see the epoch's queue
+        assert recs[-1].queue_delay > 0
+
+
+# ---------------------------------------------------------------------------
+class TestSegmentCache:
+    # offloading unattractive (10 MHz server, fast channel): device-side
+    # plans (p > 0) win even for FRESH requests, so the model segment
+    # really ships and the cache has something to hold
+    def _slow_server(self):
+        return ServerProfile(f_clock=1e7)
+
+    def _stub(self):
+        return stub_server(server=self._slow_server(), channel=Channel())
+
+    def _req(self, **kw):
+        return req(channel=Channel(), **kw)
+
+    def test_repeat_requester_pays_activation_only(self):
+        srv = self._stub()
+        fleet = [self._slow_server()]
+        first = self._req(device_id="phone-1")
+        m1 = FleetEngine(srv, servers=fleet).run([first])
+        rec1 = m1.records[0]
+        assert rec1.deployment.plan.p > 0
+        assert rec1.deployment.payload_bits == rec1.deployment.plan.payload_bits
+        # repeat request AFTER the shipment finished downlinking
+        later = rec1.timeline.ship_done + 1.0
+        eng = FleetEngine(srv, servers=fleet)
+        recs = eng.run([first,
+                        dataclasses.replace(first, arrival_time=later),
+                        dataclasses.replace(first, arrival_time=later,
+                                            device_id="phone-2")]).records
+        cached = recs[1].deployment
+        fresh = recs[2].deployment
+        assert cached.plan.p > 0
+        assert cached.payload_bits == cached.plan.payload_x_bits
+        assert cached.payload_bits < rec1.deployment.payload_bits
+        # a different device has no cache: full payload again
+        assert fresh.payload_bits == fresh.plan.payload_bits
+
+    def test_caller_flag_ignored_with_device_id(self):
+        """segment_cached=True from the caller must not grant a fresh
+        device the activation-only price when the engine owns the cache."""
+        srv = self._stub()
+        r = self._req(device_id="phone-9", segment_cached=True)
+        rec = FleetEngine(srv, servers=[self._slow_server()]).run([r]).records[0]
+        assert rec.deployment.payload_bits == rec.deployment.plan.payload_bits
+
+    def test_cache_installs_at_ship_done_not_admission(self):
+        srv = self._stub()
+        fleet = [self._slow_server()]
+        first = self._req(device_id="phone-1")
+        tl = FleetEngine(srv, servers=fleet).run([first]).records[0].timeline
+        early = tl.ship_done * 0.5      # arrives mid-shipment
+        recs = FleetEngine(srv, servers=fleet).run(
+            [first, dataclasses.replace(first, arrival_time=early)]).records
+        assert recs[1].deployment.payload_bits == \
+            recs[1].deployment.plan.payload_bits
+
+
+# ---------------------------------------------------------------------------
+class TestSLOAdmission:
+    def test_reject_infeasible_deadline(self):
+        srv = stub_server()
+        good, bad = req(deadline=1e4), req(deadline=1e-9)
+        m = FleetEngine(srv, slo="reject").run([good, bad])
+        assert not m.records[0].rejected
+        assert m.records[1].rejected
+        assert m.records[1].deployment is None
+        assert m.records[1].deadline_missed is True
+        assert m.deadline_miss_rate() == 0.5
+
+    def test_observe_mode_never_rejects(self):
+        srv = stub_server()
+        m = FleetEngine(srv, slo="observe").run([req(deadline=1e-9)])
+        assert not m.records[0].rejected
+        assert m.records[0].deadline_missed is True
+
+    def test_degrade_relaxes_budget_to_meet_deadline(self):
+        srv = stub_server()
+        # latency at the strictest vs coarsest accuracy level: the wire
+        # payload shrinks with the budget, so coarser is faster
+        strict = FleetEngine(srv).run(
+            [req(min(srv.levels), segment_cached=True)]).records[0]
+        coarse = FleetEngine(srv).run(
+            [req(max(srv.levels), segment_cached=True)]).records[0]
+        assert coarse.latency < strict.latency
+        deadline = (coarse.latency + strict.latency) / 2
+        rec = FleetEngine(srv, slo="degrade").run(
+            [req(min(srv.levels), segment_cached=True,
+                 deadline=deadline)]).records[0]
+        assert not rec.rejected
+        assert rec.degraded_to is not None
+        assert rec.degraded_to > min(srv.levels)
+        assert rec.latency <= deadline
+        assert rec.deployment.extra["degraded_to"] == rec.degraded_to
+
+    def test_degrade_rejects_when_nothing_fits(self):
+        srv = stub_server()
+        rec = FleetEngine(srv, slo="degrade").run(
+            [req(deadline=1e-9)]).records[0]
+        assert rec.rejected
+
+    def test_least_loaded_falls_back_for_deadlines(self):
+        """Rejection must mean 'every (server, candidate) pair misses':
+        when the least-loaded server is too slow for the deadline, the
+        dispatcher falls back to a faster one instead of rejecting."""
+        srv = stub_server()
+        slow, fast = ServerProfile(f_clock=1e6), ServerProfile(f_clock=6e9)
+        r_slow = FleetEngine(srv, servers=[slow]).run([req()]).records[0]
+        r_fast = FleetEngine(srv, servers=[fast]).run([req()]).records[0]
+        deadline = (r_fast.latency + r_slow.latency) / 2
+        rec = FleetEngine(srv, servers=[slow, fast], policy="least_loaded",
+                          slo="reject").run(
+            [req(deadline=deadline)]).records[0]
+        assert not rec.rejected
+        assert rec.server == 1
+        assert rec.latency <= deadline
+
+
+# ---------------------------------------------------------------------------
+class TestFleet:
+    def test_more_servers_cut_tail_latency(self):
+        srv = stub_server()
+        burst = [req(segment_cached=True) for _ in range(32)]
+        one = FleetEngine(srv, servers=[ServerProfile()]).run(burst)
+        three = FleetEngine(srv, servers=[ServerProfile()] * 3,
+                            policy="least_loaded").run(burst)
+        assert float(np.percentile(three.latencies(), 99)) < \
+            float(np.percentile(one.latencies(), 99))
+        # the dispatcher really spreads load
+        assert len({r.server for r in three.records}) == 3
+
+    def test_heterogeneous_fleet_prefers_faster_server(self):
+        srv = stub_server()
+        fast, slow = ServerProfile(f_clock=6e9), ServerProfile(f_clock=1e8)
+        m = FleetEngine(srv, servers=[slow, fast]).run(
+            [req(segment_cached=True)])
+        assert m.records[0].server == 1
+
+    def test_metrics_sanity(self):
+        srv = stub_server()
+        burst = [req(segment_cached=True, deadline=1e4) for _ in range(20)]
+        m = FleetEngine(srv, servers=[ServerProfile()] * 2).run(burst)
+        s = m.summary()
+        assert s["requests"] == 20 and s["completed"] == 20
+        assert s["rejected"] == 0 and s["deadline_miss_rate"] == 0.0
+        assert s["p50_latency_s"] <= s["p99_latency_s"]
+        assert all(0.0 <= u <= 1.0 for u in s["server_utilization"])
+        assert s["max_queue_depth"] >= 1
+        assert s["total_payload_bits"] > 0
+        # every admitted request eventually completed: depth returns to 0
+        assert m.queue_samples[-1][1] == 0
+
+    def test_run_is_reentrant(self):
+        """Each run() is an independent simulation: server queues and
+        device caches must not leak from a previous trace."""
+        srv = stub_server()
+        eng = srv.fleet()
+        trace = [req(segment_cached=True) for _ in range(5)]
+        m1, m2 = eng.run(trace), eng.run(trace)
+        assert m1.server_busy == m2.server_busy
+        assert [r.deployment.objective for r in m1.records] == \
+            [r.deployment.objective for r in m2.records]
+        assert m1.records[0].queue_delay == m2.records[0].queue_delay == 0.0
+
+    def test_empty_fleet_rejected(self):
+        with pytest.raises(ValueError):
+            stub_server().fleet(servers=[])
+
+    def test_mixed_models_in_one_fleet_window(self):
+        srv = stub_server(configs=(("mnist", MNIST_MLP),
+                                   ("cifar", CIFAR_CNN)))
+        reqs = [InferenceRequest("mnist" if i % 2 else "cifar", 0.01,
+                                 DEV, CH, W, segment_cached=True)
+                for i in range(8)]
+        recs = FleetEngine(srv).run(reqs).records
+        assert [r.request for r in recs] == reqs
+        assert all(r.deployment is not None for r in recs)
+
+
+# ---------------------------------------------------------------------------
+class TestTotalLatency:
+    def test_accepts_serve_batch_results(self):
+        """Satellite fix: serve/serve_batch results carry no queue_delay
+        — total_latency must read it as 0, not raise KeyError."""
+        srv = stub_server()
+        deps = srv.serve_batch([req(segment_cached=True) for _ in range(4)])
+        t = total_latency(deps)
+        assert t == pytest.approx(sum(d.costs.t_total for d in deps))
+        assert all(d.queue_delay == 0.0 for d in deps)
+
+    def test_counts_queue_delay_when_present(self):
+        srv = stub_server()
+        out = WorkloadBalancer(ServerProfile()).schedule(
+            srv, [req(segment_cached=True) for _ in range(6)])
+        assert total_latency(out) > sum(sr.result.costs.t_total
+                                        for sr in out)
+
+
+# ---------------------------------------------------------------------------
+class TestPolicyOrdering:
+    """Property-style ordering guarantees (hypothesis; deterministic
+    shim skips when hypothesis is absent)."""
+
+    @given(st.lists(st.tuples(st.sampled_from([1.0, 2.0, 5.0, 10.0]),
+                              st.booleans()),
+                    min_size=2, max_size=10),
+           st.sampled_from([0.004, 0.01, 0.02]))
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    def test_balanced_never_worse_than_fcfs(self, speeds, budget):
+        srv = _PROPERTY_SERVER
+        reqs = [req(budget, device=dataclasses.replace(DEV,
+                                                       f_clock=DEV.f_clock * s),
+                    segment_cached=cached)
+                for s, cached in speeds]
+        t_f = total_latency(WorkloadBalancer(
+            ServerProfile(), policy="fcfs").schedule(srv, reqs))
+        t_b = total_latency(WorkloadBalancer(
+            ServerProfile(), policy="balanced").schedule(srv, reqs))
+        assert t_b <= t_f * (1 + 1e-9)
+
+    @given(st.lists(st.floats(min_value=0.01, max_value=10.0),
+                    min_size=2, max_size=12))
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    def test_edf_meets_whatever_fcfs_meets(self, deadlines):
+        """Jackson's rule on identical requests: whenever FCFS meets
+        every deadline of a trace, EDF meets them all too, and EDF's
+        worst lateness never exceeds FCFS's."""
+        srv = _PROPERTY_SERVER
+        reqs = [req(segment_cached=True, deadline=d) for d in deadlines]
+
+        def lateness(policy):
+            m = FleetEngine(srv, policy=policy).run(reqs)
+            return [r.latency - r.request.deadline for r in m.records]
+
+        late_f, late_e = lateness("fcfs"), lateness("edf")
+        assert max(late_e) <= max(late_f) + 1e-9
+        if max(late_f) <= 0:
+            assert max(late_e) <= 0
+
+
+# built once at import: hypothesis re-runs the test body many times and
+# the store is read-only under pricing
+_PROPERTY_SERVER = stub_server()
