@@ -1,0 +1,146 @@
+"""Cost-fidelity benchmark — the CostModel v2 headline number: how far
+each pricing provider's predicted serving time is from the WALL-CLOCK
+time the deployments actually take (``Deployment.execute``'s
+block_until_ready-fenced stage measurements).
+
+Protocol:
+  1. Train + calibrate the MNIST server (shared ``benchmarks.common``
+     setup), serve a CALIBRATION window spanning budgets × batch sizes,
+     execute every deployment twice (the first run pays XLA compiles)
+     and feed the second run's measured stage timings into the server's
+     ``CalibrationLedger``.
+  2. Fit → ``CalibratedCost`` (per-device/per-server least-squares term
+     rates).
+  3. Serve a HELD-OUT evaluation window (different budgets/batches),
+     execute, and score every provider by mean relative error of its
+     predicted compute time (device + server stage; the radio is not
+     measured) against the measured wall clock. ``CalibratedCost`` must
+     beat ``AnalyticCost`` strictly — asserted, not just reported.
+  4. A pricing-only PARTITION-FLIP scenario: a compute-rich but
+     memory-starved device (high f_clock, tiny mem_bw). The analytic
+     objective, blind to memory traffic, keeps the segment on-device;
+     the roofline objective prices the weight stream and flips the
+     choice toward the server. Both choices land in the bench record.
+
+  PYTHONPATH=src python -m benchmarks.run --only cost_fidelity
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import mnist_setup, update_bench_json
+from repro.configs.classifier import MNIST_MLP
+from repro.core.cost_model import (AnalyticCost, Channel, DeviceProfile,
+                                   ObjectiveWeights, RooflineCost,
+                                   plan_cost_terms)
+from repro.serving.pricing import price_window
+from repro.serving.simulator import InferenceRequest
+from repro.serving.testing import stub_classifier_server
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+CALIB_BUDGETS = (0.001, 0.005, 0.02)
+CALIB_BATCHES = (64, 256)
+EVAL_BUDGETS = (0.0025, 0.01)
+EVAL_BATCHES = (128, 512)
+
+
+def _deployments(srv, dev, ch, w, budgets, batches, x, y):
+    """serve → warm → execute(measure) one deployment per
+    (budget, batch); returns the executed deployments."""
+    deps = []
+    for budget in budgets:
+        for batch in batches:
+            req = InferenceRequest("mnist", budget, dev, ch, w, batch=batch)
+            dep = srv.serve(req)
+            tx, ty = jnp.asarray(x[:batch]), y[:batch]
+            dep.execute(tx, ty)          # warm: XLA compiles + caches
+            dep.execute(tx, ty)          # measured run
+            deps.append(dep)
+    return deps
+
+
+def _provider_error(provider, server, deps):
+    """Mean relative error of predicted vs measured compute seconds
+    (device + server stage) over executed deployments."""
+    errs = []
+    for dep in deps:
+        meas = dep.result.extra["measured"]
+        specs = dep.backend.layer_specs(batch=meas["batch"])
+        o1, o2, dev_b, srv_b = plan_cost_terms(dep.plan, specs)
+        pred = float(provider.device_seconds(dep.request.device, o1, dev_b)
+                     + provider.server_seconds(server, o2, srv_b))
+        measured = meas["t_device_s"] + meas["t_server_s"]
+        errs.append(abs(pred - measured) / max(measured, 1e-12))
+    return float(np.mean(errs))
+
+
+def _partition_flip():
+    """Memory-bound regime: analytic vs roofline pick different p."""
+    # compute-rich, memory-starved edge device (4 GHz but a 50 MB/s
+    # weight stream), cached segment, latency-only objective: analytic
+    # sees near-free device compute and keeps every layer on-device;
+    # roofline prices the quantized weight stream and offloads
+    dev = DeviceProfile(f_clock=4e9, mem_bw=5e7)
+    ch = Channel(capacity_bps=2e7)
+    w = ObjectiveWeights(tau=0.0)
+    srv = stub_classifier_server([("mnist", MNIST_MLP)], device=dev,
+                                 channel=ch, weights=w)
+    req = InferenceRequest("mnist", 0.01, dev, ch, w, segment_cached=True)
+    choices = {}
+    for provider in (AnalyticCost(), RooflineCost()):
+        tab = price_window(srv.models, srv.server, [req], provider=provider)
+        choices[provider.name] = int(tab.argmin_choices()[0])
+    return choices
+
+
+def cost_fidelity(smoke: bool = False):
+    srv, _params, data, _acc = mnist_setup()
+    _x_tr, _y_tr, x_te, y_te = data
+    dev, ch, w = DeviceProfile(), Channel(), ObjectiveWeights()
+
+    calib = _deployments(srv, dev, ch, w, CALIB_BUDGETS, CALIB_BATCHES,
+                         x_te, y_te)
+    for dep in calib:
+        srv.record_execution(dep)
+    calibrated = srv.calibrated_provider()
+
+    evald = _deployments(srv, dev, ch, w, EVAL_BUDGETS, EVAL_BATCHES,
+                         x_te, y_te)
+    providers = (AnalyticCost(), RooflineCost(), calibrated)
+    rows = []
+    for provider in providers:
+        err = _provider_error(provider, srv.server, evald)
+        rows.append({"bench": "cost_fidelity", "provider": provider.name,
+                     "eval_runs": len(evald),
+                     "ledger_samples": len(srv.ledger),
+                     "mean_rel_err": round(err, 4),
+                     "p_analytic": None, "p_roofline": None})
+    err_by = {r["provider"]: r["mean_rel_err"] for r in rows}
+    # the acceptance bar: calibration must demonstrably close the loop
+    assert err_by["calibrated"] < err_by["analytic"], err_by
+
+    flip = _partition_flip()
+    assert flip["roofline"] != flip["analytic"], flip
+    rows.append({"bench": "partition_flip", "provider": "analytic_vs_roofline",
+                 "eval_runs": 1, "ledger_samples": 0, "mean_rel_err": None,
+                 "p_analytic": flip["analytic"],
+                 "p_roofline": flip["roofline"]})
+
+    update_bench_json(OUT_PATH, "cost_fidelity", {
+        "calib_runs": len(calib),
+        "eval_runs": len(evald),
+        "mean_rel_err": err_by,
+        "partition_flip": flip,
+        "rows": rows,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in cost_fidelity():
+        print(row)

@@ -21,8 +21,9 @@ BENCHES = {}
 
 
 def _register():
-    from benchmarks import (calibration_bench, fleet_bench, kernel_bench,
-                            paper_tables, planner_bench, roofline_report)
+    from benchmarks import (calibration_bench, cost_fidelity_bench,
+                            fleet_bench, kernel_bench, paper_tables,
+                            planner_bench, roofline_report)
     BENCHES.update({
         "fig3_payload": paper_tables.payload,
         "fig5_layerwise": paper_tables.layerwise_cost,
@@ -33,6 +34,7 @@ def _register():
         "planner": planner_bench.planner,
         "serving": calibration_bench.serving,
         "fleet": fleet_bench.fleet,
+        "cost_fidelity": cost_fidelity_bench.cost_fidelity,
         "roofline": roofline_report.roofline,
     })
 
@@ -52,10 +54,15 @@ def main(argv=None) -> int:
         from benchmarks import calibration_bench
         BENCHES["serving"] = functools.partial(calibration_bench.serving,
                                                smoke=True)
+        from benchmarks import cost_fidelity_bench
+        BENCHES["cost_fidelity"] = functools.partial(
+            cost_fidelity_bench.cost_fidelity, smoke=True)
         # the fleet bench is pricing-only and already CI-fast: --smoke
         # runs it at FULL size (>=1k Poisson requests, >=3 servers) so
-        # the BENCH_serving.json fleet trajectory is always fresh
-        names = ["serving", "fleet"]
+        # the BENCH_serving.json fleet trajectory is always fresh; the
+        # cost-fidelity bench refreshes the predicted-vs-measured
+        # trajectory (its MNIST setup is shared/cached)
+        names = ["serving", "fleet", "cost_fidelity"]
     else:
         names = args.only or list(BENCHES)
     all_rows = []

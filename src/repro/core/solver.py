@@ -239,21 +239,41 @@ class PartitionPlan:
                                        # checked against at plan time
 
 
+def _byte_rows(layer_act_bytes, layer_w_bytes16):
+    """The canonical byte-term rows (``cost_model.byte_term_rows``) for
+    the optional memory-roofline objective terms — imported lazily so
+    this module keeps no import-time dependency on the cost model."""
+    from repro.core.cost_model import byte_term_rows
+    return byte_term_rows(layer_act_bytes, layer_w_bytes16)
+
+
 def plan_for_partition(p: int, layer_z_w, layer_z_x, layer_s_w, layer_s_x,
                        layer_rho, o_cum, o_total, xi, delta_cost, eps,
                        psi_budget, b_min=2.0, b_max=16.0,
-                       input_z: float = 0.0) -> PartitionPlan:
+                       input_z: float = 0.0,
+                       c_dev_bytes: float = 0.0, c_srv_bytes: float = 0.0,
+                       ab_cum=None, srv_byte_row=None) -> PartitionPlan:
     """Optimal bits for a fixed partition point p (1-indexed; p=0 means the
     whole model runs on the server: the device uploads the raw input at
-    full precision and nothing is quantized)."""
+    full precision and nothing is quantized). With nonzero
+    ``c_dev_bytes``/``c_srv_bytes`` (a roofline/calibrated provider's
+    offline coefficients) the objective additionally prices memory
+    traffic: the deployed quantized segment + activations on the device,
+    the bf16 tail on the server (rows from ``_byte_rows``)."""
+    price_bytes = (c_dev_bytes != 0.0 or c_srv_bytes != 0.0) \
+        and ab_cum is not None
     if p == 0:
         o1, o2 = 0.0, o_total
         obj = xi * o1 + delta_cost * o2 + eps * 32.0 * input_z
+        breakdown = {"compute_local": 0.0,
+                     "compute_server": delta_cost * o2,
+                     "payload": eps * 32.0 * input_z}
+        if price_bytes:
+            breakdown["memory_device"] = 0.0
+            breakdown["memory_server"] = c_srv_bytes * srv_byte_row[0]
+            obj = obj + breakdown["memory_server"]
         return PartitionPlan(0, np.zeros(0), 32.0, float(obj), 0.0,
-                             32.0 * input_z,
-                             {"compute_local": 0.0,
-                              "compute_server": delta_cost * o2,
-                              "payload": eps * 32.0 * input_z},
+                             32.0 * input_z, breakdown,
                              payload_w_bits=0.0,
                              payload_x_bits=32.0 * input_z)
     items = SegmentItems(
@@ -269,11 +289,16 @@ def plan_for_partition(p: int, layer_z_w, layer_z_x, layer_s_w, layer_s_x,
     obj = xi * o1 + delta_cost * o2 + eps * payload
     mem = float(np.sum(np.clip(np.ceil(sol.bits[:-1]), 2, 16)
                        * items.z[:-1]) / 8.0)
+    breakdown = {"compute_local": xi * o1, "compute_server": delta_cost * o2,
+                 "payload": eps * payload}
+    if price_bytes:
+        breakdown["memory_device"] = c_dev_bytes * (mem + ab_cum[p])
+        breakdown["memory_server"] = c_srv_bytes * srv_byte_row[p]
+        obj = obj + breakdown["memory_device"] + breakdown["memory_server"]
     return PartitionPlan(
         p=p, bits_w=sol.bits[:-1], bits_x=float(sol.bits[-1]),
         objective=float(obj), psi_total=sol.psi_total, payload_bits=payload,
-        breakdown={"compute_local": xi * o1, "compute_server": delta_cost * o2,
-                   "payload": eps * payload},
+        breakdown=breakdown,
         payload_w_bits=payload - payload_x, payload_x_bits=payload_x,
         device_memory_bytes=mem)
 
@@ -301,7 +326,9 @@ def _segment_matrices(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho):
 
 
 def _plans_from_rows(bits, psi, payload, layer_z_w, layer_z_x, o_cum,
-                     o_total, xi, delta_cost, eps) -> List[PartitionPlan]:
+                     o_total, xi, delta_cost, eps,
+                     c_dev_bytes: float = 0.0, c_srv_bytes: float = 0.0,
+                     ab_cum=None, srv_byte_row=None) -> List[PartitionPlan]:
     """Materialize PartitionPlans for p=1..L from one batched solution
     block (row r = partition p=r+1)."""
     L = bits.shape[0]
@@ -316,6 +343,13 @@ def _plans_from_rows(bits, psi, payload, layer_z_w, layer_z_x, o_cum,
     tril = np.tril(np.ones((L, L), bool))
     mem = np.where(tril, np.clip(np.ceil(bits[:, :L]), 2, 16) * z_w[None, :],
                    0.0).sum(axis=1) / 8.0
+    price_bytes = (c_dev_bytes != 0.0 or c_srv_bytes != 0.0) \
+        and ab_cum is not None
+    if price_bytes:
+        mem_dev = c_dev_bytes * (mem + ab_cum[1:])
+        mem_srv = c_srv_bytes * srv_byte_row[1:]
+        obj = obj + mem_dev + mem_srv
+        mem_dev_l, mem_srv_l = mem_dev.tolist(), mem_srv.tolist()
     # bulk scalar extraction (tolist) beats per-element numpy-scalar float()
     bits_x_l = bits[:, L].tolist()
     obj_l, psi_l, pay_l = obj.tolist(), psi.tolist(), payload.tolist()
@@ -326,13 +360,17 @@ def _plans_from_rows(bits, psi, payload, layer_z_w, layer_z_x, o_cum,
     plans = []
     for r in range(L):
         p = r + 1
+        breakdown = {"compute_local": loc_l[r],
+                     "compute_server": srv_l[r],
+                     "payload": eps_pay_l[r]}
+        if price_bytes:
+            breakdown["memory_device"] = mem_dev_l[r]
+            breakdown["memory_server"] = mem_srv_l[r]
         plans.append(PartitionPlan(
             p=p, bits_w=bits[r, :p].copy(), bits_x=bits_x_l[r],
             objective=obj_l[r], psi_total=psi_l[r],
             payload_bits=pay_l[r],
-            breakdown={"compute_local": loc_l[r],
-                       "compute_server": srv_l[r],
-                       "payload": eps_pay_l[r]},
+            breakdown=breakdown,
             payload_w_bits=pay_l[r] - pay_x_l[r],
             payload_x_bits=pay_x_l[r],
             device_memory_bytes=mem_l[r]))
@@ -342,7 +380,9 @@ def _plans_from_rows(bits, psi, payload, layer_z_w, layer_z_x, o_cum,
 def plan_all_partitions(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
                         o_cum, o_total, xi, delta_cost, eps, psi_budget,
                         b_min=2.0, b_max=16.0,
-                        input_z: float = 0.0) -> List[PartitionPlan]:
+                        input_z: float = 0.0,
+                        c_dev_bytes: float = 0.0, c_srv_bytes: float = 0.0,
+                        ab_cum=None, srv_byte_row=None) -> List[PartitionPlan]:
     """All partition points p=0..L of one accuracy level as a single
     vectorized solve — the hot path of Alg. 1 (DESIGN.md §2). Plan-for-plan
     equal to ``[plan_for_partition(p, ...) for p in 0..L]``."""
@@ -350,7 +390,9 @@ def plan_all_partitions(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
     plans = [plan_for_partition(0, layer_z_w, layer_z_x, layer_s_w,
                                 layer_s_x, layer_rho, o_cum, o_total, xi,
                                 delta_cost, eps, psi_budget, b_min, b_max,
-                                input_z=input_z)]
+                                input_z=input_z, c_dev_bytes=c_dev_bytes,
+                                c_srv_bytes=c_srv_bytes, ab_cum=ab_cum,
+                                srv_byte_row=srv_byte_row)]
     if L == 0:
         return plans
     z, s, rho, valid = _segment_matrices(layer_z_w, layer_z_x, layer_s_w,
@@ -358,7 +400,10 @@ def plan_all_partitions(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
     bits, _lam, psi, payload = waterfill_bits_batch(
         z, s, rho, valid, psi_budget, b_min, b_max)
     plans += _plans_from_rows(bits, psi, payload, layer_z_w, layer_z_x,
-                              o_cum, o_total, xi, delta_cost, eps)
+                              o_cum, o_total, xi, delta_cost, eps,
+                              c_dev_bytes=c_dev_bytes,
+                              c_srv_bytes=c_srv_bytes, ab_cum=ab_cum,
+                              srv_byte_row=srv_byte_row)
     return plans
 
 
@@ -366,17 +411,24 @@ def solve_joint(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
                 layer_o, xi, delta_cost, eps, psi_budget,
                 allow_full_offload: bool = True,
                 b_min=2.0, b_max=16.0, input_z: float = 0.0,
-                vectorized: bool = True):
+                vectorized: bool = True,
+                c_dev_bytes: float = 0.0, c_srv_bytes: float = 0.0,
+                layer_act_bytes=None, layer_w_bytes16=None):
     """Enumerate partition points (Alg. 2 step 2–5), closed-form bits at
     each, return (best plan, all plans)."""
     L = len(layer_o)
     o_cum = np.cumsum(layer_o)
     o_total = float(o_cum[-1])
+    ab_cum = srv_byte_row = None
+    if layer_act_bytes is not None and layer_w_bytes16 is not None:
+        ab_cum, srv_byte_row = _byte_rows(layer_act_bytes, layer_w_bytes16)
     if vectorized:
         plans = plan_all_partitions(
             layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho, o_cum,
             o_total, xi, delta_cost, eps, psi_budget, b_min, b_max,
-            input_z=input_z)
+            input_z=input_z, c_dev_bytes=c_dev_bytes,
+            c_srv_bytes=c_srv_bytes, ab_cum=ab_cum,
+            srv_byte_row=srv_byte_row)
         if not allow_full_offload:
             plans = plans[1:]
     else:
@@ -386,7 +438,9 @@ def solve_joint(layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
             plans.append(plan_for_partition(
                 p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
                 o_cum, o_total, xi, delta_cost, eps, psi_budget, b_min, b_max,
-                input_z=input_z))
+                input_z=input_z, c_dev_bytes=c_dev_bytes,
+                c_srv_bytes=c_srv_bytes, ab_cum=ab_cum,
+                srv_byte_row=srv_byte_row))
     best = min(plans, key=lambda pl: pl.objective)
     return best, plans
 
@@ -462,15 +516,27 @@ class OfflineStore:
 def build_offline_store(levels, budgets, layer_z_w, layer_z_x, layer_s_w,
                         layer_s_x, layer_rho, layer_o, xi, delta_cost, eps,
                         b_min=2.0, b_max=16.0, input_z: float = 0.0,
-                        vectorized: bool = True) -> OfflineStore:
+                        vectorized: bool = True,
+                        c_dev_bytes: float = 0.0, c_srv_bytes: float = 0.0,
+                        layer_act_bytes=None,
+                        layer_w_bytes16=None) -> OfflineStore:
     """Alg. 1 as ONE stacked array program: the (level, partition) grid
     becomes a (levels*L, L+1) batched water-filling solve — every level's
     item matrices are identical, only the budget row-vector differs
     (``vectorized=False`` keeps the O(levels × L) scalar reference the
-    equivalence tests and benchmarks compare against)."""
+    equivalence tests and benchmarks compare against). The optional
+    ``c_dev_bytes``/``c_srv_bytes`` coefficients (a provider's
+    ``offline_coeffs``) add the memory-traffic terms to the stored
+    objectives; the water-filling bits are unaffected (the noise budget
+    constraint does not price time)."""
     o_cum = np.cumsum(layer_o)
     o_total = float(o_cum[-1])
     L = len(layer_o)
+    ab_cum = srv_byte_row = None
+    if layer_act_bytes is not None and layer_w_bytes16 is not None:
+        ab_cum, srv_byte_row = _byte_rows(layer_act_bytes, layer_w_bytes16)
+    byte_kw = dict(c_dev_bytes=c_dev_bytes, c_srv_bytes=c_srv_bytes,
+                   ab_cum=ab_cum, srv_byte_row=srv_byte_row)
     plans = {}
     if vectorized and L > 0:
         z, s, rho, valid = _segment_matrices(layer_z_w, layer_z_x, layer_s_w,
@@ -483,11 +549,12 @@ def build_offline_store(levels, budgets, layer_z_w, layer_z_x, layer_s_w,
             plans[(a, 0)] = plan_for_partition(
                 0, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
                 o_cum, o_total, xi, delta_cost, eps, budgets[a],
-                b_min, b_max, input_z=input_z)
+                b_min, b_max, input_z=input_z, **byte_kw)
             rows = slice(i * L, (i + 1) * L)
             for p, plan in enumerate(_plans_from_rows(
                     bits[rows], psi[rows], payload[rows], layer_z_w,
-                    layer_z_x, o_cum, o_total, xi, delta_cost, eps), start=1):
+                    layer_z_x, o_cum, o_total, xi, delta_cost, eps,
+                    **byte_kw), start=1):
                 plans[(a, p)] = plan
     else:
         for a in levels:
@@ -495,5 +562,5 @@ def build_offline_store(levels, budgets, layer_z_w, layer_z_x, layer_s_w,
                 plans[(a, p)] = plan_for_partition(
                     p, layer_z_w, layer_z_x, layer_s_w, layer_s_x, layer_rho,
                     o_cum, o_total, xi, delta_cost, eps, budgets[a],
-                    b_min, b_max, input_z=input_z)
+                    b_min, b_max, input_z=input_z, **byte_kw)
     return OfflineStore(levels=list(levels), plans=plans, budgets=dict(budgets))

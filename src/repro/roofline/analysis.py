@@ -91,6 +91,67 @@ def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# CostModel v2 bridges (DESIGN.md §9): serving profiles built from the
+# mesh hardware constants, and per-layer cost columns re-derived from
+# compiled HLO instead of the analytic Table II math.
+
+def tpu_server_profile(chips: int = 1) -> "ServerProfile":
+    """A ``ServerProfile`` whose compute/memory rates are the TPU v5e
+    roofline denominators (``launch.mesh``): t_server = O2·gamma/f =
+    2·O2/PEAK (a MAC is 2 FLOPs), mem_bw the HBM stream. Feed it to
+    ``RooflineCost`` to price the deployment view of DESIGN.md §3."""
+    from repro.core.cost_model import ServerProfile
+    return ServerProfile(f_clock=PEAK_FLOPS_BF16 * chips / 2.0, gamma=1.0,
+                         mem_bw=HBM_BW * chips)
+
+
+def tpu_device_profile(flops_frac: float = 1.0,
+                       bw_frac: float = 1.0) -> "DeviceProfile":
+    """A single-chip accelerator ``DeviceProfile`` from the same mesh
+    constants; ``flops_frac``/``bw_frac`` derate it to an edge-class
+    part (an edge TPU is a fraction of a datacenter chip). ``kappa`` is
+    zeroed: the paper's CPU-clock energy model (J/cycle/Hz²) is
+    meaningless at accelerator f_clock values — it would charge ~0.3 J
+    per MAC and drown every time term. Accelerator energy is not
+    modeled; use ``ObjectiveWeights(tau=...)`` against a profile with a
+    physical kappa if energy matters."""
+    from repro.core.cost_model import DeviceProfile
+    return DeviceProfile(f_clock=PEAK_FLOPS_BF16 * flops_frac / 2.0,
+                         gamma=1.0, kappa=0.0, mem_bw=HBM_BW * bw_frac)
+
+
+def layer_costs_from_hlo(compiled_or_text, num_layers: int,
+                         layer_w_bytes=None,
+                         spread_residual: bool = True) -> list:
+    """Per-layer cost overrides for ``ModelBackend
+    .set_layer_cost_overrides`` from a compiled forward: each entry
+    ``{"o": MACs, "act_bytes": bytes}`` at the compiled batch (the
+    backend rescales per request batch). FLOPs halve into MACs; the
+    residual (embedding/head, outside the layer loop) is spread evenly
+    unless ``spread_residual`` is False.
+
+    The HLO byte count of a layer includes its WEIGHT-stream operand
+    reads, which are batch-invariant and already priced separately
+    (``LayerSpec.w_bytes16`` on the server tail, the deployed-bit
+    footprint on the device) — pass ``layer_w_bytes`` (per-layer bf16
+    weight bytes, e.g. ``[sp.w_bytes16 for sp in backend.layer_specs()]``)
+    to subtract them, leaving ``act_bytes`` the genuinely batch-scaled
+    activation traffic. Without it the weight stream would be double
+    counted AND mis-scaled by the request batch."""
+    from repro.roofline.hlo_cost import layer_attribution
+    text = compiled_or_text if isinstance(compiled_or_text, str) \
+        else compiled_or_text.as_text()
+    per_layer, residual = layer_attribution(text, num_layers)
+    rf = residual.flops / num_layers if spread_residual else 0.0
+    rb = residual.bytes / num_layers if spread_residual else 0.0
+    if layer_w_bytes is None:
+        layer_w_bytes = [0.0] * num_layers
+    return [{"o": (c.flops + rf) / 2.0,
+             "act_bytes": max(c.bytes + rb - float(wb), 0.0)}
+            for c, wb in zip(per_layer, layer_w_bytes)]
+
+
 def model_flops_for(cfg, shape) -> float:
     """MODEL_FLOPS: 6*N*D for training (fwd 2ND + bwd 4ND), 2*N*D
     forward-only, with N = active params (MoE top-k)."""

@@ -363,6 +363,50 @@ def analyze_text(hlo_text: str) -> CostSummary:
     return HloCostModel(hlo_text).cost()
 
 
+def layer_attribution(hlo_text: str,
+                      num_layers: int) -> tuple[List[CostSummary],
+                                                CostSummary]:
+    """Attribute a compiled model's cost to its ``num_layers``
+    partitionable layers (CostModel v2's optional re-derivation of the
+    per-layer FLOP/byte columns from real compiler output).
+
+    Our models scan over depth (``segment_forward``'s masked
+    ``lax.scan``), so the compiled module contains a while loop whose
+    recorded trip count equals the layer count; one trip of its body
+    (plus cond) IS one layer. Returns ``(per_layer, residual)``:
+    ``per_layer[l]`` the cost of layer ``l`` (identical across a scanned
+    stack — the loop body is shared) and ``residual`` everything outside
+    the layer loop (embedding/head, data movement). When no matching
+    loop exists (an unrolled/heterogeneous model), the total is split
+    evenly with a zero residual — still loop-aware in aggregate."""
+    model = HloCostModel(hlo_text)
+    total = model.cost()
+    best: Optional[CostSummary] = None
+    for ops in model.comps.values():
+        for op in ops:
+            if op.opcode != "while":
+                continue
+            m = _TRIP_RE.search(op.attrs)
+            if not m or int(m.group(1)) != num_layers:
+                continue
+            body = CostSummary()
+            for b in model._called(op.attrs, "body"):
+                body.add(model._comp_cost(b))
+            for cd in model._called(op.attrs, "condition"):
+                body.add(model._comp_cost(cd))
+            if best is None or body.flops > best.flops:
+                best = body
+    if best is None:
+        even = total.scaled(1.0 / max(num_layers, 1))
+        return [even] * num_layers, CostSummary()
+    residual = CostSummary(
+        max(total.flops - num_layers * best.flops, 0.0),
+        max(total.bytes - num_layers * best.bytes, 0.0),
+        {k: max(v - num_layers * best.collectives.get(k, 0.0), 0.0)
+         for k, v in total.collectives.items()})
+    return [best] * num_layers, residual
+
+
 def summarize(hlo_text: str) -> dict:
     c = analyze_text(hlo_text)
     return {"flops": c.flops, "bytes": c.bytes,

@@ -84,7 +84,54 @@ class ModelBackend(abc.ABC):
     @abc.abstractmethod
     def layer_specs(self, batch: int = 1,
                     seq_len: Optional[int] = None) -> List[LayerSpec]:
-        """(z_w, z_x, o) per partitionable layer for a request shape."""
+        """(z_w, z_x, o, byte columns) per partitionable layer for a
+        request shape. Implementations pass their analytic builder's
+        output through ``refine_specs`` so measured per-layer overrides
+        (``set_layer_cost_overrides``) apply uniformly."""
+
+    def set_layer_cost_overrides(self, per_layer,
+                                 batch: int = 1) -> None:
+        """Install measured per-layer cost columns (CostModel v2): a
+        list of ``{"o": MACs, "act_bytes": B, "w_bytes16": B}`` dicts —
+        e.g. from ``roofline.analysis.layer_costs_from_hlo`` on the
+        compiled forward — normalized here by ``batch`` (the shape they
+        were measured at) and re-scaled per request batch in
+        ``refine_specs``. ``None`` entries / missing keys keep the
+        analytic value. Pass ``per_layer=None`` to clear."""
+        if per_layer is None:
+            self.__dict__.pop("_spec_overrides", None)
+            return
+        if len(per_layer) != self.num_layers:
+            raise ValueError(
+                f"need {self.num_layers} per-layer overrides, "
+                f"got {len(per_layer)}")
+        norm = []
+        for ov in per_layer:
+            ov = dict(ov or {})
+            for k in ("o", "act_bytes"):        # batch-scaled columns
+                if k in ov:
+                    ov[k] = float(ov[k]) / batch
+            norm.append(ov)
+        self.__dict__["_spec_overrides"] = norm
+
+    def refine_specs(self, specs: List[LayerSpec],
+                     batch: int = 1) -> List[LayerSpec]:
+        """Apply installed per-layer cost overrides to an analytic spec
+        list (identity when none are installed)."""
+        overrides = self.__dict__.get("_spec_overrides")
+        if overrides is None:
+            return specs
+        out = []
+        for sp, ov in zip(specs, overrides):
+            kw = {}
+            if "o" in ov:
+                kw["o"] = ov["o"] * batch
+            if "act_bytes" in ov:
+                kw["act_bytes"] = ov["act_bytes"] * batch
+            if "w_bytes16" in ov:
+                kw["w_bytes16"] = float(ov["w_bytes16"])
+            out.append(dataclasses.replace(sp, **kw) if kw else sp)
+        return out
 
     @abc.abstractmethod
     def input_elements(self) -> float:

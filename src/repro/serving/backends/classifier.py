@@ -50,7 +50,9 @@ class ClassifierBackend(ModelBackend):
 
     def layer_specs(self, batch: int = 1,
                     seq_len: Optional[int] = None) -> List[LayerSpec]:
-        return classifier_layer_specs(self.cfg, batch=batch)
+        return self.refine_specs(classifier_layer_specs(self.cfg,
+                                                        batch=batch),
+                                 batch=batch)
 
     def input_elements(self) -> float:
         return float(np.prod(self.cfg.input_shape))

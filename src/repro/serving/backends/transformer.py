@@ -62,9 +62,10 @@ class TransformerBackend(ModelBackend):
 
     def layer_specs(self, batch: int = 1,
                     seq_len: Optional[int] = None) -> List[LayerSpec]:
-        return transformer_layer_specs(
+        specs = transformer_layer_specs(
             self.cfg, seq_len or self.seq_len, batch=batch,
             mode=self.mode)[1:]                      # drop the embed row
+        return self.refine_specs(specs, batch=batch)
 
     def input_elements(self) -> float:
         return float(self.seq_len)                   # token ids per example

@@ -11,8 +11,10 @@ partitioned, quantized model on a test set) an explicit separate step,
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights)
@@ -92,10 +94,37 @@ class Deployment:
         test_y): quantized device segment, quantized cut activation,
         full-precision server tail. Fills ``result.accuracy`` and
         ``result.accuracy_degradation`` (vs the full-precision model on
-        the SAME test set) and returns the result."""
-        executor = self.device_segment() if self.plan.p else None
-        logits = self.backend.execute_plan(self.plan, test_x,
-                                           executor=executor)
+        the SAME test set) and returns the result.
+
+        The two compute stages are wall-clock fenced
+        (``jax.block_until_ready`` between them) and recorded into
+        ``result.extra['measured']`` alongside the predicted breakdown
+        (``result.costs``), so predicted-vs-measured fidelity is
+        inspectable on every executed deployment — and feedable into
+        ``QPARTServer.record_execution`` / the calibration ledger
+        (DESIGN.md §9). First execution of a (p, shape) pays XLA
+        compilation; re-execute (the compile caches persist) before
+        trusting the timings."""
+        t0 = time.perf_counter()
+        if self.plan.p:
+            h = jax.block_until_ready(self.device_segment()(test_x))
+            t1 = time.perf_counter()
+            logits = jax.block_until_ready(
+                self.backend.forward_from_layer(h, self.plan.p))
+        else:
+            t1 = t0
+            logits = jax.block_until_ready(self.backend.forward(test_x))
+        t2 = time.perf_counter()
+        self.result.extra["measured"] = {
+            "batch": int(test_x.shape[0]),
+            "t_device_s": t1 - t0,
+            "t_server_s": t2 - t1,
+            "t_total_s": t2 - t0,
+            # the prediction the same stages were priced at (provider
+            # breakdown; radio time excluded — nothing is transmitted)
+            "t_device_pred_s": self.result.costs.t_local,
+            "t_server_pred_s": self.result.costs.t_server,
+        }
         acc = float(jnp.mean(jnp.argmax(logits, -1) == test_y))
         # memoized per test-set identity on the backend: a window of
         # deployments executing against one test set pays for the

@@ -82,5 +82,16 @@ class StageTimeline:
         """Actual seconds the cut activation sat in the server queue."""
         return self.server_start - self.transfer_done
 
+    @property
+    def stage_seconds(self) -> dict:
+        """Per-stage durations — the timeline as the cost model priced
+        it (provider stage times; CostModel v2 fidelity checks compare
+        these against ``Deployment.execute``'s measured dict)."""
+        return {"ship": self.ship_done - self.admit,
+                "device": self.device_done - self.ship_done,
+                "transfer": self.transfer_done - self.device_done,
+                "server_wait": self.server_wait,
+                "server": self.finish - self.server_start}
+
     def latency_from(self, arrival: float) -> float:
         return self.finish - arrival

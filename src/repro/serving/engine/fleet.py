@@ -49,8 +49,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import (ServerProfile, cost_breakdown,
-                                   delta_coeff, eps_coeff)
+from repro.core.cost_model import CostProvider, ServerProfile
 from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.engine.events import (ARRIVAL, CACHE_INSTALL, COMPLETE,
                                          EPOCH, Event, EventQueue,
@@ -92,7 +91,8 @@ class FleetEngine:
 
     def __init__(self, qpart_server, servers: Optional[Sequence[ServerProfile]] = None,
                  policy="fcfs", slo: str = "observe",
-                 epoch_interval: float = 0.0):
+                 epoch_interval: float = 0.0,
+                 provider: Optional[CostProvider] = None):
         if slo not in SLO_MODES:
             raise ValueError(f"slo must be one of {SLO_MODES}, got {slo!r}")
         self.qs = qpart_server
@@ -106,6 +106,16 @@ class FleetEngine:
         self.slo = slo
         self.epoch_interval = float(epoch_interval)
         self.context: Optional[ReferenceContext] = None
+        # CostModel v2: pricing, SLO finish estimates, reservations and
+        # breakdowns all run through the provider (default: the
+        # qpart_server's — AnalyticCost unless overridden, e.g. with a
+        # CalibratedCost to re-price reservations from measured rates)
+        if provider is None:
+            provider = getattr(qpart_server, "provider", None)
+        if provider is None:
+            from repro.core.cost_model import ANALYTIC
+            provider = ANALYTIC
+        self.provider: CostProvider = provider
         # device_id -> set of (model, accuracy level, p) the device holds
         self.caches: dict = {}
 
@@ -166,10 +176,11 @@ class FleetEngine:
             return
         pricing = [self._pricing_request(p.request) for p in pending]
         tab = price_window(self.qs.models, self.servers[0].profile, pricing,
-                           context=self.context)
+                           context=self.context, provider=self.provider)
         ref = self.servers[0].profile
-        t_server_rows = [(row[-1] - row) * ref.gamma / ref.f_clock
-                         for row in tab.o1]
+        t_server_rows = [self.provider.server_seconds(ref, rows.o2,
+                                                      rows.srv_bytes)
+                         for rows in tab.rows]
         for j in self.policy.order(pending, tab, t_server_rows):
             self._admit(t, pending[j], tab, j)
 
@@ -201,7 +212,8 @@ class FleetEngine:
         cached = self._cached_candidates(req, a_star)
         cached = cached[cached < len(wire)]
         if len(cached):
-            ep = eps_coeff(req.weights, req.device, req.channel)
+            ep = self.provider.wire_coeff(req.weights, req.device,
+                                          req.channel)
             pb, px = tab.pb[j], tab.px[j]
             adj = np.zeros_like(row)
             adj[cached] = ep * (pb[cached] - px[cached])
@@ -210,18 +222,22 @@ class FleetEngine:
             wire[cached] = px[cached]
         return row, wire
 
-    def _finish_vec(self, req: InferenceRequest, t: float, o1_row, wire_vec,
+    def _finish_vec(self, req: InferenceRequest, t: float, rows, wire_vec,
                     px_row, srv: ServerState) -> np.ndarray:
         """Estimated wall-clock completion per candidate on ``srv`` under
-        the reservation semantics (exact: reservations never move)."""
-        d = req.device
+        the reservation semantics (exact: reservations never move). Stage
+        durations come from the provider, so a calibrated/roofline
+        provider's SLO admission sees its own clock."""
         r_cap = req.channel.capacity()
         ship = np.maximum(wire_vec - px_row, 0.0)
-        o2 = o1_row[-1] - o1_row
-        ready = (t + ship / r_cap + o1_row * d.gamma / d.f_clock
+        o2 = rows.o2
+        ready = (t + ship / r_cap
+                 + self.provider.device_seconds(req.device, rows.o1,
+                                                rows.dev_bytes)
                  + px_row / r_cap)
         start = np.where(o2 > 0, np.maximum(ready, srv.free), ready)
-        return start + o2 * srv.profile.gamma / srv.profile.f_clock
+        return start + self.provider.server_seconds(srv.profile, o2,
+                                                    rows.srv_bytes)
 
     # ------------------------------------------------------------------
     def _choose(self, t: float, req: InferenceRequest, arrival: float,
@@ -229,11 +245,10 @@ class FleetEngine:
         """Best (server, candidate) under the policy's server rule; None
         when ``enforce_slo`` and no pair meets the deadline."""
         row0, wire_vec = self._candidate_rows(req, tab, j, a_star)
-        o1_row = tab.o1[j]
-        o2_vec = o1_row[-1] - o1_row
+        rows = tab.rows[j]
+        o2_vec = rows.o2
         uses_server = o2_vec > 0
         ref = self.servers[0].profile
-        dl_ref = delta_coeff(req.weights, ref)
         least_loaded = self.policy.server_rule == "least_loaded"
         if least_loaded:
             # load order; under an SLO the later servers are the
@@ -250,12 +265,12 @@ class FleetEngine:
             srv = self.servers[s]
             row = row0
             if srv.profile is not ref:
-                row = row + (delta_coeff(req.weights, srv.profile)
-                             - dl_ref) * o2_vec
+                row = row + self.provider.server_correction(
+                    req.weights, ref, srv.profile, rows)
             queue = max(0.0, srv.work_until - t)
             row = row + req.weights.omega * queue * uses_server
             if enforce_slo:
-                finish = self._finish_vec(req, t, o1_row, wire_vec,
+                finish = self._finish_vec(req, t, rows, wire_vec,
                                           tab.px[j], srv)
                 row = np.where(finish <= arrival + req.deadline + 1e-12,
                                row, np.inf)
@@ -285,7 +300,8 @@ class FleetEngine:
                                               accuracy_budget=lv)
                 tab_lv = price_window(self.qs.models,
                                       self.servers[0].profile, [relaxed],
-                                      context=self.context)
+                                      context=self.context,
+                                      provider=self.provider)
                 choice = self._choose(t, req, pnd.arrival, tab_lv, 0, lv,
                                       True)
                 if choice is not None:
@@ -305,8 +321,10 @@ class FleetEngine:
         req = pnd.request
         srv = self.servers[s]
         plan, o1, o2, _ = tab.select(j, c)
-        costs = cost_breakdown(o1, o2, wire, req.device, srv.profile,
-                               req.channel)
+        dev_b, srv_b = tab.rows[j].bytes_at(c)
+        costs = self.provider.breakdown(o1, o2, wire, req.device,
+                                        srv.profile, req.channel,
+                                        dev_bytes=dev_b, srv_bytes=srv_b)
         res = ServingResult(plan=plan, costs=costs,
                             objective=costs.objective(req.weights)
                             + req.weights.omega * (queue if o2 > 0 else 0.0),
@@ -324,7 +342,10 @@ class FleetEngine:
         ship = max(wire - plan.payload_x_bits, 0.0)
         x_share = wire - ship
         ship_done = t + ship / r_cap
-        device_done = ship_done + o1 * req.device.gamma / req.device.f_clock
+        # the executed device stage is the provider's t_local — identical
+        # to o1·gamma/f under the analytic default, memory-/measurement-
+        # aware under the roofline/calibrated providers
+        device_done = ship_done + costs.t_local
         transfer_done = device_done + x_share / r_cap
         if o2 > 0:
             server_start = max(srv.free, transfer_done)

@@ -95,6 +95,18 @@ class FleetMetrics:
             return float(d.mean())
         return float(np.sum(d[:-1] * dt) / span)
 
+    def mean_stage_seconds(self) -> dict:
+        """Mean per-stage seconds over completed requests (the priced
+        ``StageTimeline`` view) — where fleet time actually goes."""
+        done = self.completed()
+        if not done:
+            return {}
+        acc: dict = {}
+        for r in done:
+            for k, v in r.timeline.stage_seconds.items():
+                acc[k] = acc.get(k, 0.0) + v
+        return {k: v / len(done) for k, v in acc.items()}
+
     # ------------------------------------------------------------------
     def summary(self) -> dict:
         lat = self.latencies()
@@ -124,6 +136,8 @@ class FleetMetrics:
             "server_utilization": [round(u, 4) for u in self.utilization()],
             "total_payload_bits": float(sum(
                 r.deployment.payload_bits for r in done)),
+            "mean_stage_s": {k: round(v, 6)
+                             for k, v in self.mean_stage_seconds().items()},
         }
         miss = out["deadline_miss_rate"]
         if miss is not None:

@@ -1,27 +1,37 @@
 """Shared window pricing: Alg. 2's objective for every (request,
 partition point) pair of a request window, as one matrix op per model
-group (DESIGN.md §5).
+group (DESIGN.md §5, generalized by the provider layer of §9):
 
-    obj[r, p] = xi_r · O1[p] + delta_r · (O_total − O1[p]) + eps_r · wire[r, p]
+    obj[r, p] = sum_k  c_k[r] · T_k[p]
+
+with ``c_k`` the provider's per-request coefficients and ``T_k`` the
+per-candidate term vectors (``CandidateRows``). The analytic default is
+the paper's K=3 instance — xi·O1 + delta·O2 + eps·wire — accumulated in
+the same association order as the pre-provider code, so its objective
+matrices are bit-identical (locked in tests/test_cost_model.py).
 
 This is the single implementation both batched online paths build on:
 ``QPARTServer.serve_batch`` (argmin per row → Deployment) and
-``WorkloadBalancer`` (adds the queue term per admission step). Partition
-candidates whose deployed quantized segment exceeds the request device's
-``memory_bytes`` are masked to +inf before any argmin — the matrix form
-of the scalar path's ``OfflineStore.lookup`` feasibility filter.
+``WorkloadBalancer``/``FleetEngine`` (adds queue/server terms per
+admission step). Partition candidates whose deployed quantized segment
+exceeds the request device's ``memory_bytes`` are masked to +inf before
+any argmin — the matrix form of the scalar path's ``OfflineStore.lookup``
+feasibility filter.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import TYPE_CHECKING, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import (ServerProfile, delta_coeff, eps_coeff,
-                                   xi_coeff)
-from repro.serving.deployment import ReferenceContext
+from repro.core.cost_model import (ANALYTIC, CandidateRows, CostProvider,
+                                   ServerProfile, act_bytes_row,
+                                   candidate_byte_rows)
 from repro.serving.simulator import InferenceRequest
+
+if TYPE_CHECKING:                        # pricing stays JAX-import-free
+    from repro.serving.deployment import ReferenceContext
 
 
 @dataclasses.dataclass
@@ -39,6 +49,9 @@ class WindowTable:
     # (wire[i] is the row the request's segment_cached flag selected)
     pb: List[np.ndarray] = dataclasses.field(default_factory=list)
     px: List[np.ndarray] = dataclasses.field(default_factory=list)
+    # per-request CandidateRows — the provider term vectors the fleet
+    # engine's server corrections / stage estimates / breakdowns consume
+    rows: List[CandidateRows] = dataclasses.field(default_factory=list)
 
     def argmin_choices(self) -> np.ndarray:
         """Best partition point per request — one matrix argmin per
@@ -57,18 +70,48 @@ class WindowTable:
         return plan, o1, o2, float(self.wire[i][c])
 
 
+def _assemble_rows(specs, store, a_star: float, cached: bool,
+                   need_bytes: bool, o1: np.ndarray,
+                   ab_cum) -> CandidateRows:
+    """THE CandidateRows assembly (single implementation): ``o1`` and
+    ``ab_cum`` come precomputed so ``price_window`` can share them
+    across keys of one batch size."""
+    pb, px = store.level_payload_rows(a_star)
+    dev_b = srv_b = None
+    if need_bytes:
+        dev_b, srv_b = candidate_byte_rows(
+            specs, store.level_memory_rows(a_star), ab_cum)
+    return CandidateRows(o1=o1, o2=o1[-1] - o1, wire=px if cached else pb,
+                         dev_bytes=dev_b, srv_bytes=srv_b)
+
+
+def candidate_rows_for(backend, store, a_star: float, batch: int,
+                       cached: bool, need_bytes: bool) -> CandidateRows:
+    """The per-candidate term vectors of one (model, level, batch,
+    cached) pricing profile — the scalar ``serve`` path's entry into
+    the same ``_assemble_rows`` the window path uses."""
+    specs = backend.layer_specs(batch=batch)
+    o1 = np.concatenate([[0.0], np.cumsum([sp.o for sp in specs])])
+    ab_cum = act_bytes_row(specs) if need_bytes else None
+    return _assemble_rows(specs, store, a_star, cached, need_bytes, o1,
+                          ab_cum)
+
+
 def price_window(models, server: ServerProfile,
                  requests: Sequence[InferenceRequest],
-                 context: Optional[ReferenceContext] = None) -> WindowTable:
+                 context: Optional["ReferenceContext"] = None,
+                 provider: Optional[CostProvider] = None) -> WindowTable:
     """``models``: name -> ModelState (raises ``UnknownModelError`` /
     ``NotCalibratedError`` through ``ModelState.store`` when a request
     names an unregistered or un-calibrated model)."""
     from repro.serving.errors import UnknownModelError
 
+    provider = ANALYTIC if provider is None else provider
+    need_bytes = provider.uses_bytes
     R = len(requests)
     tab = WindowTable(obj=[None] * R, o1=[None] * R, wire=[None] * R,
                       plans=[None] * R, groups=[],
-                      pb=[None] * R, px=[None] * R)
+                      pb=[None] * R, px=[None] * R, rows=[None] * R)
     by_model = {}
     for i, r in enumerate(requests):
         by_model.setdefault(r.model, []).append(i)
@@ -78,43 +121,51 @@ def price_window(models, server: ServerProfile,
         m = models[name]
         store = m.store(context)
         group = [requests[i] for i in idxs]
-        # per-request reduced coefficients (Eq. 24–26)
-        xi = np.array([xi_coeff(r.weights, r.device) for r in group])
-        dl = np.array([delta_coeff(r.weights, server) for r in group])
-        ep = np.array([eps_coeff(r.weights, r.device, r.channel)
-                       for r in group])
+        # per-request coefficient vectors — ONE cached lookup per
+        # distinct (weights, device, channel) profile instead of three
+        # list-comprehension recomputes per window
+        coeff = np.stack([provider.coeffs_cached(r.weights, r.device,
+                                                 r.channel, server)
+                          for r in group])                   # (G, K)
         # rows cached per (accuracy level, batch, cached) — large windows
-        # with few distinct budgets reuse one (o1, plans, payloads,
+        # with few distinct budgets reuse one (terms, plans, payloads,
         # memory) tuple instead of rebuilding identical rows per request
         rows_cache = {}
-        plans, o1_rows, wire_rows, mem_rows = [], [], [], []
-        pb_rows, px_rows = [], []
-        o1_by_batch = {}
+        plans, mem_rows = [], []
+        row_objs, pb_rows, px_rows = [], [], []
+        by_batch = {}          # batch -> (specs, o1 row, ab_cum row)
         for r in group:
             key = (store.level_for(r.accuracy_budget), r.batch,
                    bool(r.segment_cached))
             if key not in rows_cache:
                 a_star, batch, cached = key
-                if batch not in o1_by_batch:
+                if batch not in by_batch:
                     specs = m.backend.layer_specs(batch=batch)
-                    o1_by_batch[batch] = np.concatenate(
+                    o1_r = np.concatenate(
                         [[0.0], np.cumsum([sp.o for sp in specs])])
+                    by_batch[batch] = (specs, o1_r,
+                                       act_bytes_row(specs)
+                                       if need_bytes else None)
+                specs, o1_r, ab_cum = by_batch[batch]
+                crow = _assemble_rows(specs, store, a_star, cached,
+                                      need_bytes, o1_r, ab_cum)
                 pb, px = store.level_payload_rows(a_star)
-                rows_cache[key] = (o1_by_batch[batch],
-                                   store.level_plans(a_star),
-                                   px if cached else pb,
+                rows_cache[key] = (crow, store.level_plans(a_star),
                                    store.level_memory_rows(a_star), pb, px)
-            o1_r, plans_r, wire_r, mem_r, pb_r, px_r = rows_cache[key]
-            o1_rows.append(o1_r)
+            crow, plans_r, mem_r, pb_r, px_r = rows_cache[key]
+            row_objs.append(crow)
             plans.append(plans_r)
-            wire_rows.append(wire_r)
             mem_rows.append(mem_r)
             pb_rows.append(pb_r)
             px_rows.append(px_r)
-        o1 = np.stack(o1_rows)                          # (G, P+1)
-        wire = np.stack(wire_rows)
-        obj = xi[:, None] * o1 + dl[:, None] * (o1[:, -1:] - o1) \
-            + ep[:, None] * wire
+        # obj = sum_k c_k[:, None] · T_k — accumulated in term order, so
+        # the analytic provider reproduces the historical
+        # xi·O1 + delta·O2 + eps·wire float-for-float
+        term_stacks = [np.stack(ts) for ts in zip(
+            *(provider.terms(cr) for cr in row_objs))]       # K × (G, P+1)
+        obj = coeff[:, 0, None] * term_stacks[0]
+        for k in range(1, len(term_stacks)):
+            obj = obj + coeff[:, k, None] * term_stacks[k]
         # device-memory admission (plan-time): infeasible candidates can
         # never win the argmin. p=0 holds no device weights, so a finite
         # column always remains.
@@ -123,7 +174,8 @@ def price_window(models, server: ServerProfile,
         obj = np.where(mem > dev_mem[:, None], np.inf, obj)
         tab.groups.append((idxs, obj))
         for j, i in enumerate(idxs):
-            tab.obj[i], tab.o1[i] = obj[j], o1[j]
-            tab.wire[i], tab.plans[i] = wire[j], plans[j]
+            tab.obj[i], tab.o1[i] = obj[j], row_objs[j].o1
+            tab.wire[i], tab.plans[i] = row_objs[j].wire, plans[j]
             tab.pb[i], tab.px[i] = pb_rows[j], px_rows[j]
+            tab.rows[i] = row_objs[j]
     return tab

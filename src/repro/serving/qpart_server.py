@@ -25,17 +25,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import noise as noise_lib
-from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
-                                   ServerProfile, cost_breakdown, delta_coeff,
-                                   eps_coeff, xi_coeff)
+from repro.core.cost_model import (CalibratedCost, CalibrationLedger, Channel,
+                                   CostProvider, DeviceProfile,
+                                   ObjectiveWeights, ServerProfile)
 from repro.core.quantizer import round_bits
 from repro.core.solver import OfflineStore, build_offline_store
 from repro.serving.backends.base import ModelBackend
 from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.errors import (NotCalibratedError, PlanInfeasibleError,
                                   StoreMissingError, UnknownModelError)
-from repro.serving.pricing import price_window
-from repro.serving.simulator import InferenceRequest, ServingResult, simulate_plan
+from repro.serving.pricing import candidate_rows_for, price_window
+from repro.serving.simulator import InferenceRequest, ServingResult
 
 DEFAULT_ACCURACY_LEVELS = (0.001, 0.0025, 0.005, 0.01, 0.02)
 
@@ -74,10 +74,18 @@ class ModelState:
 
 class QPARTServer:
     def __init__(self, server_profile: Optional[ServerProfile] = None,
-                 levels: Sequence[float] = DEFAULT_ACCURACY_LEVELS):
+                 levels: Sequence[float] = DEFAULT_ACCURACY_LEVELS,
+                 provider: Optional[CostProvider] = None):
+        from repro.core.cost_model import AnalyticCost
         self.server = server_profile or ServerProfile()
         self.levels = tuple(levels)
         self.models: Dict[str, ModelState] = {}
+        # CostModel v2 (DESIGN.md §9): every online decision prices
+        # through the provider. AnalyticCost is the bit-exact default.
+        self.provider: CostProvider = provider or AnalyticCost()
+        # measurement ledger closing the predict → measure loop
+        # (``record_execution`` after ``Deployment.execute``)
+        self.ledger = CalibrationLedger()
 
     # ------------------------------------------------------------------
     def register(self, name: str, backend: ModelBackend,
@@ -139,15 +147,26 @@ class QPARTServer:
                 "before build_store()")
         specs = m.backend.layer_specs()
         ctx = ReferenceContext(device, channel, weights)
+        # offline objective coefficients come from the provider: the
+        # analytic default prices xi/delta/eps only; roofline/calibrated
+        # providers add the memory-traffic coefficients (byte rows from
+        # the LayerSpec columns)
+        oc = self.provider.offline_coeffs(weights, device, channel,
+                                          self.server)
+        price_bytes = oc["c_dev_bytes"] != 0.0 or oc["c_srv_bytes"] != 0.0
         m.stores[ctx] = build_offline_store(
             levels=self.levels, budgets=m.delta_table,
             layer_z_w=[sp.z_w for sp in specs],
             layer_z_x=[sp.z_x for sp in specs],
             layer_s_w=m.s_w, layer_s_x=m.s_x, layer_rho=m.rho,
             layer_o=[sp.o for sp in specs],
-            xi=xi_coeff(weights, device), delta_cost=delta_coeff(weights, self.server),
-            eps=eps_coeff(weights, device, channel),
-            input_z=m.backend.input_elements())
+            xi=oc["xi"], delta_cost=oc["delta"], eps=oc["eps"],
+            input_z=m.backend.input_elements(),
+            c_dev_bytes=oc["c_dev_bytes"], c_srv_bytes=oc["c_srv_bytes"],
+            layer_act_bytes=[sp.act_bytes for sp in specs]
+            if price_bytes else None,
+            layer_w_bytes16=[sp.w_bytes16 for sp in specs]
+            if price_bytes else None)
         m.default_context = ctx
         return ctx
 
@@ -157,18 +176,23 @@ class QPARTServer:
               context: Optional[ReferenceContext] = None) -> Deployment:
         m = self._model(req.model)
         store = m.store(context)
-        specs = m.backend.layer_specs(batch=req.batch)
-        xi = xi_coeff(req.weights, req.device)
-        dl = delta_coeff(req.weights, self.server)
-        ep = eps_coeff(req.weights, req.device, req.channel)
-        o = np.array([sp.o for sp in specs])
-        o_cum = np.cumsum(o)
+        provider = self.provider
+        rows = candidate_rows_for(
+            m.backend, store, store.level_for(req.accuracy_budget),
+            req.batch, bool(req.segment_cached), provider.uses_bytes)
+        coeff = provider.coeffs_cached(req.weights, req.device, req.channel,
+                                       self.server)
+        terms = provider.terms(rows)
 
         def runtime_objective(plan):
-            o1 = o_cum[plan.p - 1] if plan.p else 0.0
-            wire = plan.payload_x_bits if req.segment_cached \
-                else plan.payload_bits
-            return xi * o1 + dl * (o_cum[-1] - o1) + ep * wire
+            # candidate index == partition point (level_plans is ordered
+            # by p); the generalized obj = sum_k c_k·T_k accumulated in
+            # term order, matching the window path float-for-float
+            c = plan.p
+            obj = coeff[0] * terms[0][c]
+            for k in range(1, len(terms)):
+                obj = obj + coeff[k] * terms[k][c]
+            return obj
 
         try:
             plan = store.lookup(
@@ -179,9 +203,16 @@ class QPARTServer:
             raise PlanInfeasibleError(
                 f"no stored pattern fits device memory "
                 f"{req.device.memory_bytes:.0f} B for model {req.model!r}")
-        wire = plan.payload_x_bits if req.segment_cached else plan.payload_bits
-        result = simulate_plan(plan, specs, req.device, self.server,
-                               req.channel, req.weights, payload_bits=wire)
+        wire = float(rows.wire[plan.p])
+        o1 = float(rows.o1[plan.p])
+        o2 = float(rows.o1[-1] - rows.o1[plan.p])
+        dev_b, srv_b = rows.bytes_at(plan.p)
+        costs = provider.breakdown(o1, o2, wire, req.device, self.server,
+                                   req.channel, dev_bytes=dev_b,
+                                   srv_bytes=srv_b)
+        result = ServingResult(plan=plan, costs=costs,
+                               objective=costs.objective(req.weights),
+                               payload_bits=wire)
         result.extra["bits_w"] = np.asarray(round_bits(plan.bits_w)) if plan.p else []
         result.extra["bits_x"] = plan.bits_x
         return Deployment(req.model, m.backend, req, plan, result)
@@ -195,16 +226,20 @@ class QPARTServer:
         (serving.pricing, shared with WorkloadBalancer) instead of the
         per-request Python loop in ``serve``. Result-for-result identical
         to ``[self.serve(r) for r in requests]``."""
-        tab = price_window(self.models, self.server, requests, context=context)
+        tab = price_window(self.models, self.server, requests,
+                           context=context, provider=self.provider)
         choices = tab.argmin_choices()
         bits_cache: Dict[int, np.ndarray] = {}   # windows share few plans
         out: List[Deployment] = []
         for i, r in enumerate(requests):
-            plan, o1, o2, wire = tab.select(i, int(choices[i]))
+            c = int(choices[i])
+            plan, o1, o2, wire = tab.select(i, c)
+            dev_b, srv_b = tab.rows[i].bytes_at(c)
             # cost of the CHOSEN plan only — one scalar call per request
-            # keeps Eq. 5–8 in a single place (cost_model)
-            costs = cost_breakdown(o1, o2, wire, r.device, self.server,
-                                   r.channel)
+            # keeps Eq. 5–8 in a single place (the provider's breakdown)
+            costs = self.provider.breakdown(o1, o2, wire, r.device,
+                                            self.server, r.channel,
+                                            dev_bytes=dev_b, srv_bytes=srv_b)
             res = ServingResult(plan=plan, costs=costs,
                                 objective=costs.objective(r.weights),
                                 payload_bits=wire)
@@ -225,7 +260,8 @@ class QPARTServer:
 
     # ------------------------------------------------------------------
     def fleet(self, servers=None, policy="fcfs", slo: str = "observe",
-              epoch_interval: float = 0.0):
+              epoch_interval: float = 0.0,
+              provider: Optional[CostProvider] = None):
         """Event-driven fleet serving over this server's registered
         models (serving.engine): ``srv.fleet(servers=[...],
         policy="edf").run(requests)`` — continuous-time arrivals,
@@ -235,7 +271,22 @@ class QPARTServer:
         ``WorkloadBalancer`` behavior."""
         from repro.serving.engine import FleetEngine
         return FleetEngine(self, servers=servers, policy=policy, slo=slo,
-                           epoch_interval=epoch_interval)
+                           epoch_interval=epoch_interval, provider=provider)
+
+    # ------------------------------------------------------------------
+    # CostModel v2 measurement loop (DESIGN.md §9)
+    def record_execution(self, deployment: Deployment) -> None:
+        """Feed one executed deployment's wall-clock-fenced stage
+        timings (``Deployment.execute`` fills
+        ``result.extra['measured']``) into the calibration ledger."""
+        self.ledger.record(deployment, self.server)
+
+    def calibrated_provider(self) -> CalibratedCost:
+        """Least-squares fit of the ledger → the measurement-calibrated
+        provider. Install it (``srv.provider = srv.calibrated_provider()``
+        or ``FleetEngine(srv, provider=...)``) to re-price planning and
+        fleet reservations from measured rates."""
+        return self.ledger.fit()
 
     # ------------------------------------------------------------------
     def execute_partitioned(self, name: str, plan, x, y) -> float:

@@ -65,9 +65,12 @@ class ScheduledResult:
 
 @dataclasses.dataclass
 class WorkloadBalancer:
-    """Prices a window of requests against one shared server."""
+    """Prices a window of requests against one shared server.
+    ``provider`` overrides the cost provider (default: the
+    qpart_server's — AnalyticCost unless configured otherwise)."""
     server: ServerProfile
     policy: str = "balanced"        # fcfs | balanced
+    provider: Optional[object] = None   # CostProvider
 
     def schedule(self, qpart_server, requests: Sequence[InferenceRequest],
                  context: Optional[ReferenceContext] = None,
@@ -78,7 +81,7 @@ class WorkloadBalancer:
         if not len(requests):
             return []
         engine = FleetEngine(qpart_server, servers=[self.server],
-                             policy=self.policy)
+                             policy=self.policy, provider=self.provider)
         records = engine.run(requests, context=context).records
         return [ScheduledResult(rec.request, rec.deployment,
                                 rec.backlog_at_admission, rec.start_order)

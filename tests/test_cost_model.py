@@ -1,0 +1,384 @@
+"""CostModel v2 provider-layer tests (DESIGN.md §9) — pure NumPy logic
+(no model execution, no training; part of the CI smoke subset):
+
+  * AnalyticCost is regression-locked BIT-EXACTLY: its breakdown equals
+    ``cost_breakdown`` field-for-field and ``price_window``'s objective
+    matrices equal the pre-refactor xi·O1 + delta·O2 + eps·wire
+    arithmetic float-for-float on random mixed-model windows.
+  * Objective monotonicity: non-increasing in channel capacity and in
+    the server clock rate.
+  * RooflineCost stage times are lower-bounded by their compute-only
+    (analytic) terms.
+  * The calibration ledger's least-squares fit recovers planted stage
+    rates and its provider predicts with them.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import (AnalyticCost, CalibrationLedger, Channel,
+                                   CostProvider, DeviceProfile, LayerSpec,
+                                   ObjectiveWeights, RooflineCost,
+                                   ServerProfile, StageRates,
+                                   candidate_byte_rows, act_bytes_row,
+                                   cost_breakdown, delta_coeff, eps_coeff,
+                                   plan_cost_terms, xi_coeff)
+from repro.core.solver import build_offline_store
+from repro.serving.pricing import price_window
+from repro.serving.simulator import InferenceRequest
+
+from tests._hypothesis_shim import given, settings, st
+
+LEVELS = (0.001, 0.0025, 0.005, 0.01, 0.02)
+
+
+# ---------------------------------------------------------------------------
+# Pricing-only fixtures: synthetic layer profiles behind the minimal
+# model/backend surface ``price_window`` needs — no JAX, no training.
+
+class _SpecBackend:
+    def __init__(self, seed: int, L: int):
+        rng = np.random.default_rng(seed)
+        self.z_w = rng.integers(200, 5000, L).astype(float)
+        self.z_x = rng.integers(16, 400, L).astype(float)
+        self.o = rng.integers(10_000, 800_000, L).astype(float)
+        self.L = L
+
+    def layer_specs(self, batch: int = 1, seq_len=None):
+        return [LayerSpec(f"l{i}", self.z_w[i], self.z_x[i] * batch,
+                          self.o[i] * batch) for i in range(self.L)]
+
+    def input_elements(self) -> float:
+        return 784.0
+
+
+class _Model:
+    def __init__(self, backend, store):
+        self.backend = backend
+        self._store = store
+
+    def store(self, context=None):
+        return self._store
+
+
+def _stub_models(device, channel, weights, server,
+                 layer_counts=(4, 7), provider=None):
+    provider = provider or AnalyticCost()
+    models = {}
+    for i, L in enumerate(layer_counts):
+        b = _SpecBackend(seed=11 * i + 3, L=L)
+        specs = b.layer_specs()
+        oc = provider.offline_coeffs(weights, device, channel, server)
+        store = build_offline_store(
+            levels=LEVELS, budgets={a: a * 50 for a in LEVELS},
+            layer_z_w=[sp.z_w for sp in specs],
+            layer_z_x=[sp.z_x for sp in specs],
+            layer_s_w=np.ones(L), layer_s_x=np.ones(L),
+            layer_rho=np.full(L, 0.1),
+            layer_o=[sp.o for sp in specs],
+            xi=oc["xi"], delta_cost=oc["delta"], eps=oc["eps"],
+            input_z=b.input_elements(),
+            c_dev_bytes=oc["c_dev_bytes"], c_srv_bytes=oc["c_srv_bytes"],
+            layer_act_bytes=[sp.act_bytes for sp in specs],
+            layer_w_bytes16=[sp.w_bytes16 for sp in specs])
+        models[f"m{i}"] = _Model(b, store)
+    return models
+
+
+def _random_window(models, rng, n, device, channel, weights):
+    names = sorted(models)
+    reqs = []
+    for i in range(n):
+        dev = dataclasses.replace(
+            device, f_clock=float(rng.choice([2e8, 1e9, 2e9])),
+            memory_bytes=float(rng.choice([64e3, 512e6])))
+        ch = dataclasses.replace(
+            channel, capacity_bps=float(rng.choice([2e6, 2e7, 2e8])))
+        reqs.append(InferenceRequest(
+            names[int(rng.integers(len(names)))],
+            float(rng.choice([0.0012, 0.004, 0.01, 0.03])),
+            dev, ch, weights, batch=int(rng.choice([1, 4])),
+            segment_cached=bool(rng.integers(2))))
+    return reqs
+
+
+def _prerefactor_objectives(models, server, requests):
+    """The pre-provider ``price_window`` arithmetic, verbatim: stacked
+    per-group matrices, xi·O1 + delta·(O_tot − O1) + eps·wire, memory
+    mask to +inf."""
+    by_model = {}
+    for i, r in enumerate(requests):
+        by_model.setdefault(r.model, []).append(i)
+    out = [None] * len(requests)
+    for name, idxs in by_model.items():
+        m = models[name]
+        store = m.store(None)
+        group = [requests[i] for i in idxs]
+        xi = np.array([xi_coeff(r.weights, r.device) for r in group])
+        dl = np.array([delta_coeff(r.weights, server) for r in group])
+        ep = np.array([eps_coeff(r.weights, r.device, r.channel)
+                       for r in group])
+        o1_rows, wire_rows, mem_rows = [], [], []
+        for r in group:
+            a_star = store.level_for(r.accuracy_budget)
+            specs = m.backend.layer_specs(batch=r.batch)
+            o1_rows.append(np.concatenate(
+                [[0.0], np.cumsum([sp.o for sp in specs])]))
+            pb, px = store.level_payload_rows(a_star)
+            wire_rows.append(px if r.segment_cached else pb)
+            mem_rows.append(store.level_memory_rows(a_star))
+        o1 = np.stack(o1_rows)
+        wire = np.stack(wire_rows)
+        obj = xi[:, None] * o1 + dl[:, None] * (o1[:, -1:] - o1) \
+            + ep[:, None] * wire
+        mem = np.stack(mem_rows)
+        dev_mem = np.array([r.device.memory_bytes for r in group])
+        obj = np.where(mem > dev_mem[:, None], np.inf, obj)
+        for j, i in enumerate(idxs):
+            out[i] = obj[j]
+    return out
+
+
+DEV = DeviceProfile()
+CH = Channel(capacity_bps=2e6)
+W = ObjectiveWeights()
+SRV = ServerProfile()
+
+
+# ---------------------------------------------------------------------------
+class TestAnalyticLock:
+    def test_breakdown_bit_exact_vs_cost_breakdown(self):
+        rng = np.random.default_rng(0)
+        provider = AnalyticCost()
+        for _ in range(50):
+            o1, o2 = float(rng.uniform(0, 1e8)), float(rng.uniform(0, 1e9))
+            wire = float(rng.uniform(0, 1e7))
+            ref = cost_breakdown(o1, o2, wire, DEV, SRV, CH)
+            got = provider.breakdown(o1, o2, wire, DEV, SRV, CH,
+                                     dev_bytes=123.0, srv_bytes=456.0)
+            assert dataclasses.astuple(got) == dataclasses.astuple(ref)
+
+    def test_price_window_bit_identical_prerefactor_mixed_window(self):
+        """The acceptance lock: post-refactor ``price_window`` objective
+        matrices are BIT-identical to the pre-refactor arithmetic on a
+        random mixed-model window (two models, different layer counts,
+        heterogeneous devices/channels/budgets/batches/cache flags)."""
+        models = _stub_models(DEV, CH, W, SRV)
+        rng = np.random.default_rng(7)
+        for trial in range(5):
+            reqs = _random_window(models, rng, 40, DEV, CH, W)
+            tab = price_window(models, SRV, reqs)
+            ref = _prerefactor_objectives(models, SRV, reqs)
+            for i in range(len(reqs)):
+                np.testing.assert_array_equal(tab.obj[i], ref[i])
+            # and therefore the chosen candidates agree
+            choices = tab.argmin_choices()
+            for i in range(len(reqs)):
+                assert choices[i] == int(np.argmin(ref[i]))
+
+    def test_objective_rows_association_order(self):
+        """obj accumulates c_0·T_0 + c_1·T_1 + ... left-to-right — the
+        association the bit-exactness above relies on."""
+        c = np.array([0.3, 0.7, 1.1])
+        t = [np.array([1.0, 2.0]), np.array([3.0, 4.0]),
+             np.array([5.0, 6.0])]
+        got = CostProvider.objective_rows(c, t)
+        exact = (c[0] * t[0] + c[1] * t[1]) + c[2] * t[2]
+        np.testing.assert_array_equal(got, exact)
+
+
+# ---------------------------------------------------------------------------
+class TestMonotonicity:
+    @given(st.floats(min_value=1e5, max_value=1e9),
+           st.floats(min_value=1.01, max_value=100.0))
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    def test_objective_non_increasing_in_channel_capacity(self, cap, k):
+        """A faster channel can only cheapen every candidate (eps is the
+        only capacity-dependent coefficient and wire bits are >= 0)."""
+        rows_o1 = np.array([0.0, 1e5, 3e5])
+        for provider in (AnalyticCost(), RooflineCost()):
+            ch1 = Channel(capacity_bps=cap)
+            ch2 = Channel(capacity_bps=cap * k)
+            c1 = provider.coeffs(W, DEV, ch1, SRV)
+            c2 = provider.coeffs(W, DEV, ch2, SRV)
+            terms = [rows_o1, rows_o1[-1] - rows_o1,
+                     np.array([1e6, 5e5, 1e4]),          # wire
+                     np.array([0.0, 1e4, 1e5]),          # dev bytes
+                     np.array([1e6, 5e5, 0.0])][:len(c1)]
+            obj1 = provider.objective_rows(c1, terms)
+            obj2 = provider.objective_rows(c2, terms)
+            assert np.all(obj2 <= obj1 + 1e-15), provider.name
+
+    @given(st.floats(min_value=1e8, max_value=1e10),
+           st.floats(min_value=1.01, max_value=50.0))
+    @settings(max_examples=25, deadline=None, derandomize=True)
+    def test_objective_non_increasing_in_server_clock(self, f, k):
+        for provider in (AnalyticCost(), RooflineCost()):
+            s1 = ServerProfile(f_clock=f)
+            s2 = ServerProfile(f_clock=f * k)
+            c1 = provider.coeffs(W, DEV, CH, s1)
+            c2 = provider.coeffs(W, DEV, CH, s2)
+            terms = [np.array([0.0, 1e5, 3e5]),
+                     np.array([3e5, 2e5, 0.0]),
+                     np.array([1e6, 5e5, 1e4]),
+                     np.array([0.0, 1e4, 1e5]),
+                     np.array([1e6, 5e5, 0.0])][:len(c1)]
+            obj1 = provider.objective_rows(c1, terms)
+            obj2 = provider.objective_rows(c2, terms)
+            assert np.all(obj2 <= obj1 + 1e-15), provider.name
+
+
+# ---------------------------------------------------------------------------
+class TestRoofline:
+    def test_stage_times_lower_bounded_by_compute(self):
+        rng = np.random.default_rng(1)
+        roof, ana = RooflineCost(), AnalyticCost()
+        o1 = rng.uniform(0, 1e8, 16)
+        nbytes = rng.uniform(0, 1e9, 16)
+        assert np.all(roof.device_seconds(DEV, o1, nbytes)
+                      >= ana.device_seconds(DEV, o1))
+        assert np.all(roof.server_seconds(SRV, o1, nbytes)
+                      >= ana.server_seconds(SRV, o1))
+        # zero traffic: exactly the compute term
+        np.testing.assert_array_equal(roof.device_seconds(DEV, o1, 0.0),
+                                      ana.device_seconds(DEV, o1))
+
+    def test_coeffs_extend_analytic(self):
+        """Roofline's first three coefficients ARE the analytic ones —
+        the memory terms are additive, never a re-weighting."""
+        c_roof = RooflineCost().coeffs(W, DEV, CH, SRV)
+        c_ana = AnalyticCost().coeffs(W, DEV, CH, SRV)
+        np.testing.assert_array_equal(c_roof[:3], c_ana)
+        assert c_roof[3] > 0 and c_roof[4] > 0
+
+    def test_offline_store_prices_memory_terms(self):
+        """With roofline offline coefficients every stored plan's
+        objective gains non-negative memory terms; the water-filled bit
+        patterns are untouched (budget math does not price time)."""
+        models_a = _stub_models(DEV, CH, W, SRV, layer_counts=(5,))
+        models_r = _stub_models(DEV, CH, W, SRV, layer_counts=(5,),
+                                provider=RooflineCost())
+        sa = models_a["m0"].store()
+        sr = models_r["m0"].store()
+        for key, plan_a in sa.plans.items():
+            plan_r = sr.plans[key]
+            np.testing.assert_array_equal(plan_a.bits_w, plan_r.bits_w)
+            assert plan_r.objective >= plan_a.objective
+            extra = plan_r.breakdown["memory_device"] \
+                + plan_r.breakdown["memory_server"]
+            assert plan_r.objective == pytest.approx(
+                plan_a.objective + extra, rel=1e-12)
+
+    def test_candidate_byte_rows_match_plan_terms(self):
+        """The window path's byte rows agree with the scalar
+        ``plan_cost_terms`` at every candidate."""
+        models = _stub_models(DEV, CH, W, SRV, layer_counts=(6,))
+        m = models["m0"]
+        store = m.store()
+        specs = m.backend.layer_specs(batch=3)
+        a = store.level_for(0.01)
+        dev_row, srv_row = candidate_byte_rows(
+            specs, store.level_memory_rows(a), act_bytes_row(specs))
+        for p in range(len(specs) + 1):
+            plan = store.plans[(a, p)]
+            _o1, _o2, dev_b, srv_b = plan_cost_terms(plan, specs)
+            assert dev_row[p] == pytest.approx(dev_b, rel=1e-12)
+            assert srv_row[p] == pytest.approx(srv_b, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+class TestCalibrated:
+    def _planted_ledger(self, rng, dev, srv, r_dev, r_srv, n=24):
+        led = CalibrationLedger()
+        for _ in range(n):
+            o1, o2 = rng.uniform(1e4, 1e7), rng.uniform(1e4, 1e7)
+            db, sb = rng.uniform(1e3, 1e6), rng.uniform(1e3, 1e6)
+            led.add(dev, srv, o1, o2, db, sb,
+                    float(r_dev.seconds(o1, db)),
+                    float(r_srv.seconds(o2, sb)))
+        return led
+
+    def test_fit_recovers_planted_rates(self):
+        rng = np.random.default_rng(3)
+        r_dev = StageRates(2e-9, 3e-10, 1e-4)
+        r_srv = StageRates(5e-10, 1e-10, 2e-4)
+        led = self._planted_ledger(rng, DEV, SRV, r_dev, r_srv)
+        cal = led.fit()
+        for o1, db in ((1e5, 2e4), (5e6, 8e5)):
+            assert float(cal.device_seconds(DEV, o1, db)) == pytest.approx(
+                float(r_dev.seconds(o1, db)), rel=1e-6)
+            assert float(cal.server_seconds(SRV, o1, db)) == pytest.approx(
+                float(r_srv.seconds(o1, db)), rel=1e-6)
+
+    def test_unseen_profiles_fall_back_to_global_fit(self):
+        rng = np.random.default_rng(4)
+        r_dev = StageRates(1e-9, 0.0, 0.0)
+        r_srv = StageRates(1e-10, 0.0, 0.0)
+        cal = self._planted_ledger(rng, DEV, SRV, r_dev, r_srv).fit()
+        other_dev = dataclasses.replace(DEV, f_clock=9e9)
+        other_srv = dataclasses.replace(SRV, f_clock=9e9)
+        assert float(cal.device_seconds(other_dev, 1e6, 0.0)) == \
+            pytest.approx(float(cal.device_seconds(DEV, 1e6, 0.0)))
+        assert float(cal.server_seconds(other_srv, 1e6, 0.0)) == \
+            pytest.approx(float(cal.server_seconds(SRV, 1e6, 0.0)))
+
+    def test_calibrated_argmin_tracks_measured_regime(self):
+        """Plant device-much-slower-than-analytic rates: the calibrated
+        window argmin shifts toward offload relative to analytic."""
+        models = _stub_models(DEV, CH, W, SRV, layer_counts=(6,))
+        rng = np.random.default_rng(5)
+        slow_dev = StageRates(1e-3, 0.0, 0.0)       # 1 ms per MAC (!)
+        fast_srv = StageRates(1e-12, 0.0, 0.0)
+        cal = self._planted_ledger(rng, DEV, SRV, slow_dev, fast_srv).fit()
+        req = InferenceRequest("m0", 0.01, DEV, Channel(), W,
+                               segment_cached=True)
+        p_cal = int(price_window(models, SRV, [req],
+                                 provider=cal).argmin_choices()[0])
+        p_ana = int(price_window(models, SRV, [req]).argmin_choices()[0])
+        assert p_cal == 0 and p_cal <= p_ana
+
+    def test_empty_ledger_raises(self):
+        with pytest.raises(ValueError):
+            CalibrationLedger().fit()
+
+    def test_offline_coeffs_follow_online_coeffs(self):
+        """Every provider's offline (Alg. 1) coefficients derive from
+        the SAME coeffs vector the online paths use — including the
+        calibrated provider's byte terms (stores built under it price
+        memory traffic, not the analytic defaults)."""
+        rng = np.random.default_rng(6)
+        cal = self._planted_ledger(rng, DEV, SRV,
+                                   StageRates(2e-9, 3e-10, 0.0),
+                                   StageRates(5e-10, 1e-10, 0.0)).fit()
+        for provider in (AnalyticCost(), RooflineCost(), cal):
+            c = provider.coeffs(W, DEV, CH, SRV)
+            oc = provider.offline_coeffs(W, DEV, CH, SRV)
+            assert oc["xi"] == float(c[0])
+            assert oc["delta"] == float(c[1])
+            assert oc["eps"] == float(c[2])
+            if provider.uses_bytes:
+                assert oc["c_dev_bytes"] == float(c[3]) > 0
+                assert oc["c_srv_bytes"] == float(c[4]) > 0
+            else:
+                assert oc["c_dev_bytes"] == oc["c_srv_bytes"] == 0.0
+
+
+# ---------------------------------------------------------------------------
+class TestChannelMemo:
+    def test_snr_capacity_matches_formula_and_survives_replace(self):
+        ch = Channel(bandwidth_hz=40e6, snr_db=20.0)
+        expect = 40e6 * math.log2(1.0 + 10 ** 2.0)
+        assert ch.capacity() == expect
+        ch2 = dataclasses.replace(ch, snr_db=10.0)
+        assert ch2.capacity() == 40e6 * math.log2(1.0 + 10 ** 1.0)
+        assert Channel(capacity_bps=3e6).capacity() == 3e6
+
+    def test_coeff_cache_one_entry_per_profile(self):
+        provider = AnalyticCost()
+        for _ in range(100):
+            provider.coeffs_cached(W, DEV, CH, SRV)
+        assert len(provider.__dict__["_coeff_cache"]) == 1
+        provider.coeffs_cached(W, DEV, Channel(capacity_bps=5e6), SRV)
+        assert len(provider.__dict__["_coeff_cache"]) == 2

@@ -299,6 +299,56 @@ class TestFleet:
 
 
 # ---------------------------------------------------------------------------
+class TestProviderFleet:
+    """CostModel v2 in the engine: a non-default provider re-prices
+    admission AND the wall-clock reservation timelines."""
+
+    def test_roofline_provider_prices_memory_into_stages(self):
+        from repro.core.cost_model import (AnalyticCost, RooflineCost,
+                                           plan_cost_terms)
+        srv = stub_server()
+        recs = FleetEngine(srv, provider=RooflineCost()).run(
+            [req(segment_cached=True) for _ in range(4)]).records
+        ana = AnalyticCost()
+        for r in recs:
+            dep = r.deployment
+            assert dep is not None
+            specs = dep.backend.layer_specs(batch=dep.request.batch)
+            o1, o2, _db, _sb = plan_cost_terms(dep.plan, specs)
+            # stage times are the roofline ones: compute + memory
+            assert dep.costs.t_local >= float(
+                ana.device_seconds(dep.request.device, o1)) - 1e-18
+            assert dep.costs.t_server >= float(
+                ana.server_seconds(srv.server, o2)) - 1e-18
+
+    def test_calibrated_provider_reprices_reservations(self):
+        """The second simultaneous request's priced backlog must be the
+        FIRST deployment's server seconds AT THE CALIBRATED RATE — the
+        reservation timeline runs on the provider's clock."""
+        from repro.core.cost_model import (CalibratedCost, StageRates,
+                                           plan_cost_terms)
+        srv = stub_server()
+        cal = CalibratedCost({}, {}, StageRates(1e-7, 0.0, 0.0),
+                             StageRates(1e-6, 0.0, 0.0))
+        recs = FleetEngine(srv, provider=cal).run(
+            [req(segment_cached=True), req(segment_cached=True)]).records
+        first = recs[0].deployment
+        specs = first.backend.layer_specs(batch=first.request.batch)
+        _o1, o2, _db, sb = plan_cost_terms(first.plan, specs)
+        expect = float(cal.server_seconds(srv.server, o2, sb))
+        assert first.costs.t_server == pytest.approx(expect, rel=1e-12)
+        if o2 > 0:
+            assert recs[1].backlog_at_admission == pytest.approx(
+                expect, rel=1e-12)
+
+    def test_engine_inherits_server_provider(self):
+        from repro.core.cost_model import RooflineCost
+        srv = stub_server()
+        srv.provider = RooflineCost()
+        assert FleetEngine(srv).provider is srv.provider
+
+
+# ---------------------------------------------------------------------------
 class TestTotalLatency:
     def test_accepts_serve_batch_results(self):
         """Satellite fix: serve/serve_batch results carry no queue_delay

@@ -126,6 +126,81 @@ ENTRY %main (a: f32[32]) -> f32[32] {
         assert s.collectives.get("all-gather") == 9 * 32 * 4
 
 
+class TestLayerAttribution:
+    def test_scan_body_attributed_per_layer(self):
+        """A depth-scanned stack attributes one loop-body cost per
+        layer; the residual is everything outside the layer loop."""
+        from repro.roofline.hlo_cost import layer_attribution
+        a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+        def f(x, w):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+
+        c = _compile(f, a, a)
+        per_layer, residual = layer_attribution(c.as_text(), 7)
+        assert len(per_layer) == 7
+        expect = 2 * 128 ** 3
+        assert abs(per_layer[0].flops - expect) / expect < 0.05
+        total = analyze_text(c.as_text())
+        assert 7 * per_layer[0].flops + residual.flops == \
+            pytest.approx(total.flops)
+        assert per_layer[0].bytes > 0
+
+    def test_layer_costs_subtract_weight_stream(self):
+        """``layer_w_bytes`` removes the batch-invariant weight-stream
+        reads from the batch-scaled act_bytes column (it is priced
+        separately by the byte-term rows)."""
+        from repro.roofline.analysis import layer_costs_from_hlo
+        a = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+        def f(x, w):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            out, _ = jax.lax.scan(body, x, None, length=7)
+            return out
+
+        c = _compile(f, a, a)
+        w_bytes = 128 * 128 * 4
+        base = layer_costs_from_hlo(c.as_text(), 7)
+        sub = layer_costs_from_hlo(c.as_text(), 7,
+                                   layer_w_bytes=[w_bytes] * 7)
+        assert sub[0]["act_bytes"] == pytest.approx(
+            base[0]["act_bytes"] - w_bytes)
+        assert sub[0]["o"] == base[0]["o"]
+
+    def test_no_matching_loop_splits_evenly(self):
+        from repro.roofline.hlo_cost import layer_attribution
+        a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        c = _compile(lambda x: x @ x, a)
+        per_layer, residual = layer_attribution(c.as_text(), 3)
+        total = analyze_text(c.as_text())
+        assert per_layer[0].flops == pytest.approx(total.flops / 3)
+        assert residual.flops == 0.0
+
+    def test_backend_spec_overrides_rescale_by_batch(self):
+        """layer_costs_from_hlo → set_layer_cost_overrides replaces the
+        analytic o/act_bytes columns, normalized to the measured batch
+        and re-scaled per request batch."""
+        from repro.serving.backends import ClassifierBackend
+        from repro.configs.classifier import MNIST_MLP
+        b = ClassifierBackend(MNIST_MLP, None)
+        L = b.num_layers
+        per_layer = [{"o": 1000.0 * (i + 1), "act_bytes": 64.0 * (i + 1)}
+                     for i in range(L)]
+        b.set_layer_cost_overrides(per_layer, batch=4)
+        specs1 = b.layer_specs(batch=4)
+        assert [sp.o for sp in specs1] == [o["o"] for o in per_layer]
+        specs2 = b.layer_specs(batch=8)
+        assert specs2[0].o == pytest.approx(2 * specs1[0].o)
+        # z_w / payload math untouched
+        assert specs2[0].z_w == specs1[0].z_w
+        b.set_layer_cost_overrides(None)
+        assert b.layer_specs(batch=4)[0].o != specs1[0].o
+
+
 class TestStructure:
     def test_parse_computations_finds_entry(self):
         def f(x):

@@ -212,6 +212,77 @@ class TestServeBatch:
             assert lv <= a or lv == min(srv.levels)
 
 
+class TestMeasuredTimings:
+    """CostModel v2 satellites: wall-clock-fenced stage timings on
+    execute, the calibration ledger, and the calibrated provider."""
+
+    def test_execute_records_measured_stages(self, served):
+        srv, (dev, ch, w), (x_te, y_te) = served
+        dep = srv.serve(InferenceRequest("mnist", 0.01, dev, ch, w))
+        dep.execute(jnp.asarray(x_te[:64]), y_te[:64])
+        m = dep.result.extra["measured"]
+        assert m["batch"] == 64
+        assert m["t_device_s"] >= 0 and m["t_server_s"] >= 0
+        assert m["t_total_s"] == pytest.approx(
+            m["t_device_s"] + m["t_server_s"])
+        # the predicted breakdown rides alongside
+        assert m["t_device_pred_s"] == dep.costs.t_local
+        assert m["t_server_pred_s"] == dep.costs.t_server
+
+    def test_ledger_fit_and_calibrated_serving(self, served):
+        srv, (dev, ch, w), (x_te, y_te) = served
+        for budget in (0.005, 0.02):
+            for batch in (32, 128):
+                dep = srv.serve(InferenceRequest("mnist", budget, dev, ch, w,
+                                                 batch=batch))
+                tx, ty = jnp.asarray(x_te[:batch]), y_te[:batch]
+                dep.execute(tx, ty)          # warm (compiles)
+                dep.execute(tx, ty)
+                srv.record_execution(dep)
+        assert len(srv.ledger) == 4
+        cal = srv.calibrated_provider()
+        # calibrated prediction is in the ballpark of the measured wall
+        # clock (same fit data, generous 10x bound); the analytic
+        # prediction is orders of magnitude off the host
+        from repro.core.cost_model import plan_cost_terms
+        dep = srv.serve(InferenceRequest("mnist", 0.01, dev, ch, w, batch=64))
+        dep.execute(jnp.asarray(x_te[:64]), y_te[:64])
+        dep.execute(jnp.asarray(x_te[:64]), y_te[:64])
+        meas = dep.result.extra["measured"]
+        o1, o2, db, sb = plan_cost_terms(dep.plan,
+                                         dep.backend.layer_specs(batch=64))
+        pred = float(cal.device_seconds(dev, o1, db)
+                     + cal.server_seconds(srv.server, o2, sb))
+        measured = meas["t_device_s"] + meas["t_server_s"]
+        assert pred == pytest.approx(measured, rel=10.0)
+        # a calibrated server still serves (plans stay feasible)
+        srv2_dep = srv.serve(InferenceRequest("mnist", 0.01, dev, ch, w))
+        assert srv2_dep.plan is not None
+
+    def test_serve_with_roofline_provider(self, served):
+        """A provider swap re-prices the online path without touching
+        the stores: roofline objectives are analytic + memory terms."""
+        from repro.core.cost_model import RooflineCost
+        srv, (dev, ch, w), _ = served
+        old = srv.provider
+        try:
+            srv.provider = RooflineCost()
+            dep = srv.serve(InferenceRequest("mnist", 0.01, dev, ch, w))
+            ana = srv.models["mnist"].backend  # same stores, new pricing
+            assert dep.plan is not None and dep.costs.t_total > 0
+            # roofline stage time is lower-bounded by the analytic
+            # compute-only term (the memory term is additive)
+            from repro.core.cost_model import AnalyticCost, plan_cost_terms
+            specs = ana.layer_specs(batch=1)
+            o1, o2, _db, _sb = plan_cost_terms(dep.plan, specs)
+            assert dep.costs.t_local >= \
+                AnalyticCost().device_seconds(dev, o1) - 1e-18
+            assert dep.costs.t_server >= \
+                AnalyticCost().server_seconds(srv.server, o2) - 1e-18
+        finally:
+            srv.provider = old
+
+
 class TestBaselines:
     def test_no_opt_keeps_base_accuracy(self, trained_mnist, backend):
         params, (x_tr, y_tr, x_te, y_te) = trained_mnist
