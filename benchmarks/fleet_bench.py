@@ -1,21 +1,30 @@
-"""Fleet serving benchmark (the BENCH_serving.json "fleet" trajectory).
+"""Fleet serving benchmark (the BENCH_serving.json "fleet" +
+"fleet_chaos" trajectories).
 
-A ≥1k-request Poisson-arrival trace over a ≥3-server fleet with
-heterogeneous devices (0.2–2 GHz), heterogeneous channels (1–10 Mbps),
-mixed accuracy budgets, per-request deadlines, and a population of
-repeat requesters (device_ids) whose segment caches the engine manages.
-Every admission policy prices the same trace, so the rows compare what
-the POLICY buys: deadline-miss rate, p50/p99 end-to-end latency, queue
-delay, server utilization — plus the engine's own planning throughput
-(requests planned per second of wall clock, the serving-control hot
-path).
+``fleet``: a ≥1k-request Poisson-arrival trace over a ≥3-server fleet
+with heterogeneous devices (0.2–2 GHz), heterogeneous channels (1–10
+Mbps), mixed accuracy budgets, per-request deadlines, and a population
+of repeat requesters (device_ids) whose segment caches the engine
+manages. Every admission policy prices the same trace, so the rows
+compare what the POLICY buys: deadline-miss rate, p50/p99 end-to-end
+latency, queue delay, server utilization — plus the engine's own
+planning throughput (requests planned per second of wall clock, the
+serving-control hot path).
+
+``fleet_chaos``: the same fleet under operational chaos (DESIGN.md
+§10): bursty MMPP arrivals, seeded device churn (disconnect/reconnect
+renewal processes over the requester population) and channel-quality
+drift, with retry-with-degraded-budget recovery. Rows report goodput,
+retry rate, dead-letter rate and p99 against the fault-free baseline on
+the identical trace; every run is asserted terminally accounted for and
+the fcfs run is replayed from its journal as a determinism check.
 
 The QPART server is stub-calibrated (synthetic noise constants, real
 Alg. 1 store): the fleet engine exercises the pricing/queueing path
 only, so no model training or execution is needed and the bench stays
-CI-fast (it runs in --smoke at full size).
+CI-fast (both sections run in --smoke at full size).
 
-  PYTHONPATH=src python -m benchmarks.run --only fleet
+  PYTHONPATH=src python -m benchmarks.run --only fleet fleet_chaos
 """
 from __future__ import annotations
 
@@ -28,7 +37,10 @@ from benchmarks.common import update_bench_json
 from repro.configs.classifier import MNIST_MLP
 from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
                                    ServerProfile)
-from repro.serving.engine import FleetEngine
+from repro.serving.engine import (DISCONNECT, RECONNECT, FaultEvent,
+                                  FaultInjector, FleetEngine, RetryPolicy,
+                                  churn_trace, degrade_trace, materialize,
+                                  mmpp_arrivals)
 from repro.serving.qpart_server import QPARTServer
 from repro.serving.testing import poisson_trace, stub_classifier_server
 
@@ -112,6 +124,119 @@ def fleet():
     return rows
 
 
+def _chaos_trace(n: int = N_REQUESTS, seed: int = 0):
+    """Bursty MMPP arrivals (calm 200 rps / burst 1400 rps) decorated
+    with the same device/channel/budget/deadline mix as the Poisson
+    trace."""
+    arrivals = mmpp_arrivals(n, rates=(200.0, 1400.0),
+                             mean_dwell=(0.5, 0.1), seed=seed)
+    return materialize("mnist", arrivals, DEVICES, CHANNELS, WEIGHTS,
+                       budgets=(0.004, 0.01, 0.02), deadlines=DEADLINES_S,
+                       batches=BATCHES, device_pool=200, seed=seed)
+
+
+def _chaos_faults(horizon: float, device_pool: int = 200, seed: int = 0):
+    """Seeded churn + channel drift + permanent loss over the requester
+    population: a quarter of the devices flap (up ~0.35 s / down
+    ~0.12 s), a quarter sees capacity-degradation episodes (× 0.1–0.5),
+    and a handful die mid-trace and never reconnect — their surviving
+    requests drain to the dead-letter queue as disconnect_abandoned."""
+    flappy = [f"dev-{i}" for i in range(0, device_pool, 4)]
+    drifty = [f"dev-{i}" for i in range(1, device_pool, 4)]
+    doomed = [f"dev-{i}" for i in range(2, device_pool, 16)]
+    rng = np.random.default_rng(seed + 2)
+    deaths = FaultInjector([
+        FaultEvent(float(rng.uniform(0.3 * horizon, 0.9 * horizon)),
+                   DISCONNECT, d) for d in doomed])
+    return (churn_trace(flappy, horizon, mean_uptime=0.35,
+                        mean_downtime=0.12, seed=seed)
+            + degrade_trace(drifty, horizon, mean_interval=1.0,
+                            mean_duration=0.15, seed=seed + 1)
+            + deaths)
+
+
+def _targeted_cuts(baseline, n_cuts: int = 150, downtime: float = 0.03,
+                   seed: int = 0) -> FaultInjector:
+    """Disconnect/reconnect pairs aimed mid-window at the baseline run's
+    longest in-flight radio transfers (the chaos-engineering staple:
+    random micro-outages almost never intersect millisecond transfers,
+    targeted ones guarantee the cancel -> retry path is exercised)."""
+    done = [r for r in baseline.completed()
+            if r.request.device_id is not None
+            and r.timeline.transfer_done > r.timeline.admit]
+    done.sort(key=lambda r: r.timeline.transfer_done - r.timeline.admit,
+              reverse=True)
+    rng = np.random.default_rng(seed)
+    events = []
+    for r in done[:n_cuts]:
+        t0, t1 = r.timeline.admit, r.timeline.transfer_done
+        cut = float(t0 + rng.uniform(0.25, 0.75) * (t1 - t0))
+        events.append(FaultEvent(cut, DISCONNECT, r.request.device_id))
+        events.append(FaultEvent(cut + downtime, RECONNECT,
+                                 r.request.device_id))
+    return FaultInjector(events)
+
+
+def fleet_chaos():
+    srv = _stub_server()
+    trace = _chaos_trace()
+    horizon = trace[-1].arrival_time + 0.5
+    ambient = _chaos_faults(horizon)
+    retry = RetryPolicy(max_attempts=3, base_backoff_s=0.01,
+                        max_backoff_s=0.1, degrade_on_retry=True)
+    rows = []
+    for policy in POLICIES:
+        base = FleetEngine(srv, servers=FLEET, policy=policy,
+                           slo="degrade", epoch_interval=EPOCH_S)
+        baseline = base.run(trace)
+        s0 = baseline.summary()
+        # ambient churn/drift plus cuts aimed at THIS policy's own
+        # baseline schedule — each policy gets an equally hostile trace
+        faults = ambient + _targeted_cuts(baseline)
+        engine = FleetEngine(srv, servers=FLEET, policy=policy,
+                             slo="degrade", epoch_interval=EPOCH_S,
+                             retry=retry, faults=faults)
+        t0 = time.perf_counter()
+        metrics = engine.run(trace)
+        wall = time.perf_counter() - t0
+        metrics.assert_terminal()       # no lost requests, ever
+        s = metrics.summary()
+        if policy == "fcfs":            # determinism: replay the journal
+            metrics.journal.verify_replay(srv, trace, servers=FLEET)
+        rows.append({
+            "bench": "fleet_chaos",
+            "policy": policy,
+            "requests": s["requests"],
+            "fault_events": len(faults),
+            "planned_rps_wall": round(len(trace) / wall, 1),
+            "goodput_rps": s["goodput_rps"],
+            "baseline_goodput_rps": s0["goodput_rps"],
+            "retry_rate": round(metrics.retry_rate(), 4),
+            "disrupted": s["disrupted"],
+            "dead_letter_rate": round(s["dead_lettered"] / s["requests"], 4),
+            "p99_latency_ms": round(s["p99_latency_s"] * 1e3, 3),
+            "baseline_p99_ms": round(s0["p99_latency_s"] * 1e3, 3),
+            "deadline_miss_rate": s["deadline_miss_rate"],
+            "degraded": s["degraded"],
+            "drop_reasons": s["drop_reasons"],
+        })
+    assert rows[0]["requests"] >= 1000
+    update_bench_json(OUT_PATH, "fleet_chaos", {
+        "requests": len(trace),
+        "servers": N_SERVERS,
+        "arrivals": "mmpp(200/1400 rps, dwell 0.5/0.1 s)",
+        "ambient_fault_events": len(ambient),
+        "targeted_cuts": 150,
+        "retry": {"max_attempts": retry.max_attempts,
+                  "base_backoff_s": retry.base_backoff_s,
+                  "degrade_on_retry": retry.degrade_on_retry},
+        "rows": rows,
+    })
+    return rows
+
+
 if __name__ == "__main__":
     for row in fleet():
+        print(row)
+    for row in fleet_chaos():
         print(row)

@@ -34,6 +34,7 @@ def _register():
         "planner": planner_bench.planner,
         "serving": calibration_bench.serving,
         "fleet": fleet_bench.fleet,
+        "fleet_chaos": fleet_bench.fleet_chaos,
         "cost_fidelity": cost_fidelity_bench.cost_fidelity,
         "roofline": roofline_report.roofline,
     })
@@ -57,12 +58,14 @@ def main(argv=None) -> int:
         from benchmarks import cost_fidelity_bench
         BENCHES["cost_fidelity"] = functools.partial(
             cost_fidelity_bench.cost_fidelity, smoke=True)
-        # the fleet bench is pricing-only and already CI-fast: --smoke
-        # runs it at FULL size (>=1k Poisson requests, >=3 servers) so
-        # the BENCH_serving.json fleet trajectory is always fresh; the
-        # cost-fidelity bench refreshes the predicted-vs-measured
-        # trajectory (its MNIST setup is shared/cached)
-        names = ["serving", "fleet", "cost_fidelity"]
+        # the fleet benches are pricing-only and already CI-fast: --smoke
+        # runs them at FULL size (>=1k requests, >=3 servers) so the
+        # BENCH_serving.json fleet + fleet_chaos (MMPP arrivals, seeded
+        # churn, retry/dead-letter accounting, journal-replay check)
+        # trajectories are always fresh; the cost-fidelity bench
+        # refreshes the predicted-vs-measured trajectory (its MNIST
+        # setup is shared/cached)
+        names = ["serving", "fleet", "fleet_chaos", "cost_fidelity"]
     else:
         names = args.only or list(BENCHES)
     all_rows = []

@@ -1,13 +1,26 @@
-"""Event-driven fleet serving engine (DESIGN.md §8): continuous-time
+"""Event-driven fleet serving engine (DESIGN.md §8/§10): continuous-time
 arrivals, multi-server queues, device segment-cache state, pluggable
-admission policies, fleet metrics."""
+admission policies, fleet metrics — plus the operational-resilience
+layer: fault injection (device churn, channel degradation), retry with
+dead-letter queue, replayable event journal, MMPP/diurnal traces."""
 from repro.serving.engine.events import (Event, EventQueue,  # noqa: F401
                                          StageTimeline)
+from repro.serving.engine.faults import (DEGRADE,  # noqa: F401
+                                         DISCONNECT, RECONNECT, FaultEvent,
+                                         FaultInjector, churn_trace,
+                                         degrade_trace)
 from repro.serving.engine.fleet import (FleetEngine,  # noqa: F401
                                         ServerState)
+from repro.serving.engine.journal import (EventJournal,  # noqa: F401
+                                          JournalEntry)
 from repro.serving.engine.metrics import (FleetMetrics,  # noqa: F401
                                           FleetRecord)
 from repro.serving.engine.policies import (POLICIES,  # noqa: F401
                                            AdmissionPolicy, BalancedPolicy,
                                            EDFPolicy, FCFSPolicy,
                                            LeastLoadedPolicy, get_policy)
+from repro.serving.engine.retry import (DROP_REASONS,  # noqa: F401
+                                        REASON_ABANDONED, REASON_EXHAUSTED,
+                                        REASON_SLO, DeadLetter, RetryPolicy)
+from repro.serving.engine.traces import (diurnal_arrivals,  # noqa: F401
+                                         materialize, mmpp_arrivals)

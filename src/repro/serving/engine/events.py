@@ -1,11 +1,18 @@
-"""Event taxonomy + queue of the fleet serving engine (DESIGN.md §8).
+"""Event taxonomy + queue of the fleet serving engine (DESIGN.md §8/§10).
 
-The engine is a discrete-event simulator over a continuous clock. Four
+The engine is a discrete-event simulator over a continuous clock. Six
 event kinds, processed in (time, kind, seq) order so simultaneous events
 resolve deterministically:
 
+  FAULT          — a ``FaultEvent`` (engine/faults.py) fires: device
+                   disconnect/reconnect or channel degradation. First at
+                   equal times, so an arrival / epoch / cache install at
+                   the same instant already sees the new world.
   ARRIVAL        — a timestamped ``InferenceRequest`` enters the system
                    and joins the pending set.
+  RETRY          — a fault-cancelled request's backoff expired; it
+                   rejoins the pending set (engine/retry.py). Before
+                   EPOCH at equal times so the epoch's window sees it.
   CACHE_INSTALL  — a model shipment finished downlinking: the device's
                    segment cache now holds (model, level, p). Ordered
                    before EPOCH at equal times so a repeat request
@@ -14,13 +21,16 @@ resolve deterministically:
                    one ``price_window`` matrix and admitted under the
                    engine's ``AdmissionPolicy`` (policies.py).
   COMPLETE       — a request's last stage finished; bookkeeping only
-                   (queue-depth sample, horizon).
+                   (queue-depth sample, horizon). Carries the admission
+                   token: a cancelled attempt's COMPLETE is stale and
+                   skipped.
 
 Admission computes the whole per-request stage timeline analytically
 (``StageTimeline``): plan → uplink (model shipment) → device segment →
 cut-activation transfer → server segment → complete. Servers reserve
-work in admission order, so a timeline never changes after admission and
-only CACHE_INSTALL / COMPLETE need to come back through the queue.
+work in admission order, so a timeline never changes after admission —
+the ONLY thing that can undo a reservation is a fault cancelling the
+attempt (the reservation is released, never moved; DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -28,13 +38,16 @@ import dataclasses
 import heapq
 import itertools
 
-ARRIVAL = 0
-CACHE_INSTALL = 1
-EPOCH = 2
-COMPLETE = 3
+FAULT = 0
+ARRIVAL = 1
+RETRY = 2
+CACHE_INSTALL = 3
+EPOCH = 4
+COMPLETE = 5
 
-KIND_NAMES = {ARRIVAL: "arrival", CACHE_INSTALL: "cache_install",
-              EPOCH: "epoch", COMPLETE: "complete"}
+KIND_NAMES = {FAULT: "fault", ARRIVAL: "arrival", RETRY: "retry",
+              CACHE_INSTALL: "cache_install", EPOCH: "epoch",
+              COMPLETE: "complete"}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,4 +1,4 @@
-"""Event-driven fleet serving engine (DESIGN.md §8).
+"""Event-driven fleet serving engine (DESIGN.md §8, resilience §10).
 
 Runs a discrete-event loop over timestamped ``InferenceRequest`` arrivals
 against a MULTI-SERVER fleet: plan → uplink (model shipment) → device
@@ -40,6 +40,20 @@ Deadline/SLO admission (``slo=``):
   * "degrade" — same check, but before rejecting, the accuracy budget is
                 relaxed level-by-level (cheaper payloads) until some
                 candidate meets the deadline; only then reject.
+
+Fault tolerance (DESIGN.md §10): a ``FaultInjector`` merges seeded
+DISCONNECT / RECONNECT / DEGRADE events into the queue. A disconnect
+CANCELS every in-flight attempt of that device still in its
+ship/device/transfer stage — the server reservation is released (the
+backlog refund future admissions price against; committed later
+timelines never move), a pending CACHE_INSTALL is invalidated, and the
+request goes to the ``RetryPolicy`` (capped exponential backoff,
+per-request attempt budget, optional accuracy degradation per retry,
+terminal dead-letter queue). Arrivals on a down device PARK — no
+attempt burned — until reconnect, and park forever becomes the
+``disconnect_abandoned`` dead letter when the trace drains. Every event
+processed lands in a replayable ``EventJournal``; with no faults
+injected the engine is bit-for-bit the sunny-day engine of §8.
 """
 from __future__ import annotations
 
@@ -49,13 +63,18 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.cost_model import CostProvider, ServerProfile
+from repro.core.cost_model import Channel, CostProvider, ServerProfile
 from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.engine.events import (ARRIVAL, CACHE_INSTALL, COMPLETE,
-                                         EPOCH, Event, EventQueue,
-                                         StageTimeline)
+                                         EPOCH, FAULT, RETRY, Event,
+                                         EventQueue, StageTimeline)
+from repro.serving.engine.faults import (DEGRADE, DISCONNECT, RECONNECT,
+                                         FaultInjector)
+from repro.serving.engine.journal import EventJournal
 from repro.serving.engine.metrics import FleetMetrics, FleetRecord
 from repro.serving.engine.policies import AdmissionPolicy, get_policy
+from repro.serving.engine.retry import (REASON_ABANDONED, REASON_EXHAUSTED,
+                                        REASON_SLO, DeadLetter, RetryPolicy)
 from repro.serving.pricing import price_window
 from repro.serving.simulator import InferenceRequest, ServingResult
 
@@ -64,11 +83,14 @@ SLO_MODES = ("observe", "reject", "degrade")
 
 @dataclasses.dataclass
 class ServerState:
-    """One fleet member: profile + the two queue views."""
+    """One fleet member: profile + the two queue views + the active
+    reservation ledger (token -> committed finish time) that fault
+    cancellation rolls back."""
     profile: ServerProfile
     work_until: float = 0.0     # pricing backlog: committed server seconds
     free: float = 0.0           # wall clock: last reservation's finish
     busy: float = 0.0           # total reserved work (utilization)
+    reservations: dict = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass
@@ -76,6 +98,16 @@ class _Pending:
     index: int                  # position in the submitted trace
     request: InferenceRequest
     arrival: float
+
+
+@dataclasses.dataclass
+class _Flight:
+    """One in-flight admission attempt (between commit and COMPLETE)."""
+    token: tuple                # (request index, attempt) — unique
+    device_id: Optional[str]
+    server: int
+    t_server: float             # reserved server seconds (the refund)
+    timeline: StageTimeline
 
 
 class FleetEngine:
@@ -86,13 +118,17 @@ class FleetEngine:
     profile, a fleet of one); ``policy`` an ``AdmissionPolicy`` or its
     name; ``epoch_interval`` batches arrivals into decision epochs (0 =
     admit at each arrival instant; simultaneous arrivals always share
-    one epoch/window).
+    one epoch/window); ``retry`` the fault-recovery ``RetryPolicy``
+    (default ``RetryPolicy()`` — inert without faults); ``faults`` a
+    ``FaultInjector`` or plain ``FaultEvent`` sequence.
     """
 
     def __init__(self, qpart_server, servers: Optional[Sequence[ServerProfile]] = None,
                  policy="fcfs", slo: str = "observe",
                  epoch_interval: float = 0.0,
-                 provider: Optional[CostProvider] = None):
+                 provider: Optional[CostProvider] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 faults: Optional[FaultInjector] = None):
         if slo not in SLO_MODES:
             raise ValueError(f"slo must be one of {SLO_MODES}, got {slo!r}")
         self.qs = qpart_server
@@ -116,16 +152,25 @@ class FleetEngine:
             from repro.core.cost_model import ANALYTIC
             provider = ANALYTIC
         self.provider: CostProvider = provider
+        self.retry: RetryPolicy = retry if retry is not None else RetryPolicy()
+        if faults is None:
+            faults = FaultInjector()
+        elif not isinstance(faults, FaultInjector):
+            faults = FaultInjector(faults)
+        self.faults: FaultInjector = faults
         # device_id -> set of (model, accuracy level, p) the device holds
         self.caches: dict = {}
+        self.dead_letters: List[DeadLetter] = []
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[InferenceRequest],
             context: Optional[ReferenceContext] = None) -> FleetMetrics:
         """Run the trace to completion and return the fleet metrics
         (``.records`` is in trace order, one entry per request). Each
-        run is an independent simulation: server queues and device
-        caches start empty (the engine is re-runnable, not resumable)."""
+        run is an independent simulation: server queues, device caches
+        and fault state start empty (the engine is re-runnable, not
+        resumable). Every request ends terminal: completed, rejected,
+        or dead-lettered with a reason."""
         self.context = context
         self.servers = [ServerState(p) for p in self._profiles]
         self.caches = {}
@@ -138,41 +183,262 @@ class FleetEngine:
         self._in_flight = 0
         self._samples: List[tuple] = []
         self._horizon = 0.0
+        # fault-tolerance state (all per-run)
+        self._down: set = set()              # disconnected device_ids
+        self._parked: dict = {}              # device_id -> [indices]
+        self._channel_factor: dict = {}      # device_id -> capacity factor
+        self._eff_channels: dict = {}        # (channel, factor) -> Channel
+        self._attempts: dict = {}            # index -> admissions consumed
+        self._inflight: dict = {}            # index -> _Flight
+        self._live: set = set()              # valid admission tokens
+        self.dead_letters = []
+        self._journal = EventJournal(header={
+            "policy": self.policy.name, "slo": self.slo,
+            "epoch_interval": self.epoch_interval,
+            "servers": len(self.servers),
+            "retry": dataclasses.asdict(self.retry),
+            "requests": len(records), "faults": len(self.faults)})
         for i, r in enumerate(requests):
             self._queue.push(Event(float(r.arrival_time), ARRIVAL, i))
+        for f in self.faults.events:
+            self._queue.push(Event(float(f.time), FAULT, f))
         while self._queue:
             ev = self._queue.pop()
             if ev.kind == ARRIVAL:
                 self._on_arrival(ev)
+            elif ev.kind == RETRY:
+                self._on_retry(ev)
+            elif ev.kind == FAULT:
+                self._on_fault(ev)
             elif ev.kind == CACHE_INSTALL:
-                dev_id, key = ev.payload
-                self.caches.setdefault(dev_id, set()).add(key)
+                dev_id, key, token = ev.payload
+                applied = token in self._live
+                if applied:
+                    self.caches.setdefault(dev_id, set()).add(key)
+                self._journal.record(ev.time, CACHE_INSTALL, device=dev_id,
+                                     model=key[0], level=key[1], p=key[2],
+                                     applied=applied)
             elif ev.kind == EPOCH:
                 self._on_epoch(ev.time)
             elif ev.kind == COMPLETE:
-                self._in_flight -= 1
-                self._samples.append((ev.time, self._in_flight))
+                self._on_complete(ev)
+        # trace drained: whoever is still parked never saw a reconnect
+        for dev in sorted(self._parked):
+            for i in self._parked[dev]:
+                self._dead_letter(i, REASON_ABANDONED, self._horizon)
+        self._parked = {}
         return FleetMetrics(records=records,
                             server_busy=[s.busy for s in self.servers],
                             queue_samples=self._samples,
-                            horizon=self._horizon)
+                            horizon=self._horizon,
+                            dead_letters=list(self.dead_letters),
+                            journal=self._journal)
 
     # ------------------------------------------------------------------
-    def _on_arrival(self, ev: Event) -> None:
-        i = ev.payload
-        self._pending.append(_Pending(i, self._records[i].request, ev.time))
-        t = ev.time
+    def _schedule_epoch(self, t: float) -> None:
+        """Queue the decision epoch covering instant ``t``. Epoch
+        bucketing is EXACT: the smallest k with k·interval >= t, decided
+        by comparing actual float products — ``ceil(t / interval)``
+        alone drifts for non-dyadic intervals (an on-boundary arrival
+        lands in the NEXT epoch, or a just-past-boundary arrival gets an
+        epoch scheduled in its past; locked in tests/test_faults.py)."""
         if self.epoch_interval > 0:
-            k = math.ceil(round(t / self.epoch_interval, 9))
-            t = k * self.epoch_interval
+            iv = self.epoch_interval
+            k = math.ceil(t / iv)
+            while (k - 1) * iv >= t:
+                k -= 1
+            while k * iv < t:
+                k += 1
+            t = k * iv
         if t not in self._epochs:
             self._epochs.add(t)
             self._queue.push(Event(t, EPOCH))
 
+    def _on_arrival(self, ev: Event) -> None:
+        i = ev.payload
+        req = self._records[i].request
+        parked = req.device_id is not None and req.device_id in self._down
+        if parked:
+            self._parked.setdefault(req.device_id, []).append(i)
+            self._records[i].parked += 1
+        else:
+            self._pending.append(_Pending(i, req, ev.time))
+            self._schedule_epoch(ev.time)
+        self._journal.record(ev.time, ARRIVAL, index=i, parked=parked)
+
+    def _on_retry(self, ev: Event) -> None:
+        i, attempt = ev.payload
+        req = self._records[i].request
+        parked = req.device_id is not None and req.device_id in self._down
+        if parked:
+            self._parked.setdefault(req.device_id, []).append(i)
+            self._records[i].parked += 1
+        else:
+            # deadline stays absolute: the pending entry keeps the
+            # ORIGINAL arrival, so EDF/SLO see arrival + deadline
+            self._pending.append(_Pending(i, req, req.arrival_time))
+            self._schedule_epoch(ev.time)
+        self._journal.record(ev.time, RETRY, index=i, attempt=attempt,
+                             parked=parked)
+
+    def _on_complete(self, ev: Event) -> None:
+        i, token = ev.payload
+        if token not in self._live:
+            # a fault cancelled this attempt after its COMPLETE was
+            # queued — a non-event, but journaled so replay sees it
+            self._journal.record(ev.time, COMPLETE, index=i, stale=True)
+            return
+        self._live.discard(token)
+        fl = self._inflight.pop(i)
+        self.servers[fl.server].reservations.pop(token, None)
+        self._in_flight -= 1
+        self._samples.append((ev.time, self._in_flight))
+        self._horizon = max(self._horizon, ev.time)
+        self._journal.record(ev.time, COMPLETE, index=i, stale=False)
+
+    # -- faults --------------------------------------------------------
+    def _on_fault(self, ev: Event) -> None:
+        f, t = ev.payload, ev.time
+        if f.kind == DEGRADE:
+            if f.factor == 1.0:
+                self._channel_factor.pop(f.device_id, None)
+            else:
+                self._channel_factor[f.device_id] = f.factor
+            self._journal.record(t, FAULT, fault=DEGRADE,
+                                 device=f.device_id, factor=f.factor)
+        elif f.kind == DISCONNECT:
+            self._down.add(f.device_id)
+            cancelled = self._cancel_device(f.device_id, t)
+            self._journal.record(t, FAULT, fault=DISCONNECT,
+                                 device=f.device_id, cancelled=cancelled)
+        elif f.kind == RECONNECT:
+            self._down.discard(f.device_id)
+            released = self._parked.pop(f.device_id, [])
+            for i in released:
+                self._pending.append(
+                    _Pending(i, self._records[i].request,
+                             self._records[i].request.arrival_time))
+            if released:
+                self._schedule_epoch(t)
+            self._journal.record(t, FAULT, fault=RECONNECT,
+                                 device=f.device_id, released=list(released))
+
+    def _cancel_device(self, dev: str, t: float) -> list:
+        """Cancel every in-flight attempt of ``dev`` still in its
+        ship/device/transfer stage (an attempt whose cut activation
+        already reached the server — t >= transfer_done — completes
+        server-side as committed). Cancellation releases the server
+        reservation and hands the request to the retry policy."""
+        cancelled = []
+        for i in sorted(self._inflight):
+            fl = self._inflight[i]
+            if fl.device_id != dev or t >= fl.timeline.transfer_done:
+                continue
+            del self._inflight[i]
+            self._live.discard(fl.token)
+            self._release(fl)
+            self._in_flight -= 1
+            self._samples.append((t, self._in_flight))
+            rec = self._records[i]
+            rec.faults += 1
+            # the failed attempt's deployment is void — reset the
+            # per-attempt fields; a successful retry repopulates them
+            rec.deployment = None
+            rec.timeline = None
+            rec.server = -1
+            rec.start_order = -1
+            rec.backlog_at_admission = 0.0
+            rec.queue_delay = 0.0
+            rec.degraded_to = None
+            cancelled.append(i)
+            self._retry_or_dead_letter(i, t)
+        return cancelled
+
+    def _release(self, fl: _Flight) -> None:
+        """Roll back a cancelled attempt's server commitment: refund the
+        pricing backlog (``work_until``/``busy``) and, if this was the
+        tail reservation, the wall-clock ``free`` horizon. Committed
+        LATER timelines never move (reservations are immutable): a
+        mid-ledger hole is idle time, deliberately non-work-conserving."""
+        srv = self.servers[fl.server]
+        if srv.reservations.pop(fl.token, None) is not None:
+            srv.free = max(srv.reservations.values(), default=0.0)
+        srv.work_until -= fl.t_server
+        srv.busy -= fl.t_server
+
+    def _retry_or_dead_letter(self, i: int, t: float) -> None:
+        rec = self._records[i]
+        used = self._attempts.get(i, 0)
+        if used >= self.retry.budget_for(rec.request):
+            self._dead_letter(i, REASON_EXHAUSTED, t)
+        else:
+            self._queue.push(Event(t + self.retry.backoff(used + 1),
+                                   RETRY, (i, used + 1)))
+
+    def _dead_letter(self, i: int, reason: str, t: float) -> None:
+        rec = self._records[i]
+        rec.rejected = True
+        rec.drop_reason = reason
+        rec.attempts = self._attempts.get(i, 0)
+        self.dead_letters.append(DeadLetter(i, reason, t, rec.attempts,
+                                            rec.request.device_id))
+
+    # -- pricing views -------------------------------------------------
+    def _effective_channel(self, req: InferenceRequest) -> Channel:
+        """The request's channel with any active degradation applied
+        (memoized per (channel, factor) so provider coefficient caches
+        stay hot)."""
+        factor = self._channel_factor.get(req.device_id) \
+            if req.device_id is not None else None
+        if not factor or factor == 1.0:
+            return req.channel
+        key = (req.channel, factor)
+        ch = self._eff_channels.get(key)
+        if ch is None:
+            ch = Channel(bandwidth_hz=req.channel.bandwidth_hz,
+                         capacity_bps=req.channel.capacity() * factor)
+            self._eff_channels[key] = ch
+        return ch
+
+    def _effective_request(self, req: InferenceRequest) -> InferenceRequest:
+        """The request as admission sees it: degraded channel applied,
+        caller's cache flag preserved (identity when no fault state —
+        the zero-fault path stays bit-for-bit)."""
+        ch = self._effective_channel(req)
+        if ch is req.channel:
+            return req
+        return dataclasses.replace(req, channel=ch)
+
+    def _pricing_request(self, req: InferenceRequest) -> InferenceRequest:
+        """Engine-owned cache state: a request with a ``device_id`` is
+        priced from the full-payload row and the cached candidates are
+        re-priced individually; the caller's flag only survives for
+        anonymous requests (the one-shot degenerate case). Channel
+        degradation folds in here too."""
+        eff = self._effective_request(req)
+        if req.device_id is not None and req.segment_cached:
+            eff = dataclasses.replace(eff, segment_cached=False)
+        return eff
+
     def _on_epoch(self, t: float) -> None:
         self._epochs.discard(t)
         pending, self._pending = self._pending, []
+        # a device that went down between arrival and epoch parks here
+        parked = []
+        if self._down:
+            keep = []
+            for p in pending:
+                dev = p.request.device_id
+                if dev is not None and dev in self._down:
+                    self._parked.setdefault(dev, []).append(p.index)
+                    self._records[p.index].parked += 1
+                    parked.append(p.index)
+                else:
+                    keep.append(p)
+            pending = keep
         if not pending:
+            if parked:
+                self._journal.record(t, EPOCH, admitted=[], parked=parked)
             return
         pricing = [self._pricing_request(p.request) for p in pending]
         tab = price_window(self.qs.models, self.servers[0].profile, pricing,
@@ -181,17 +447,10 @@ class FleetEngine:
         t_server_rows = [self.provider.server_seconds(ref, rows.o2,
                                                       rows.srv_bytes)
                          for rows in tab.rows]
+        admitted = []
         for j in self.policy.order(pending, tab, t_server_rows):
-            self._admit(t, pending[j], tab, j)
-
-    def _pricing_request(self, req: InferenceRequest) -> InferenceRequest:
-        """Engine-owned cache state: a request with a ``device_id`` is
-        priced from the full-payload row and the cached candidates are
-        re-priced individually; the caller's flag only survives for
-        anonymous requests (the one-shot degenerate case)."""
-        if req.device_id is not None and req.segment_cached:
-            return dataclasses.replace(req, segment_cached=False)
-        return req
+            admitted.append(self._admit(t, pending[j], tab, j))
+        self._journal.record(t, EPOCH, admitted=admitted, parked=parked)
 
     # ------------------------------------------------------------------
     def _cached_candidates(self, req: InferenceRequest,
@@ -284,24 +543,43 @@ class FleetEngine:
                 best = (row[c], s, c, queue, wire_vec)
         return best
 
+    def _reprice_single(self, req: InferenceRequest, level: float):
+        """One-row window at a relaxed accuracy level — the degrade
+        ladder's re-pricing step (SLO degrade and retry degrade share
+        it). ``req`` must be the ORIGINAL request: ``_pricing_request``
+        applies the degraded channel itself (applying it to an already
+        effective request would compound the factor)."""
+        relaxed = dataclasses.replace(self._pricing_request(req),
+                                      accuracy_budget=level)
+        return price_window(self.qs.models, self.servers[0].profile,
+                            [relaxed], context=self.context,
+                            provider=self.provider)
+
     # ------------------------------------------------------------------
-    def _admit(self, t: float, pnd: _Pending, tab, j: int) -> None:
-        req = pnd.request
+    def _admit(self, t: float, pnd: _Pending, tab, j: int) -> list:
+        """Admit (or drop) one pending request; returns the journal's
+        ``[index, server]`` outcome pair (server -1 = dropped)."""
+        req = self._effective_request(pnd.request)
         store = self.qs.models[req.model].store(self.context)
         a_star = store.level_for(req.accuracy_budget)
+        attempt = self._attempts.get(pnd.index, 0) + 1
+        degraded = None
+        if attempt > 1 and self.retry.degrade_on_retry:
+            # retry-with-degraded-budget: coarsen one store level per
+            # retry (same ladder SLO degrade walks), floor at coarsest
+            ladder = sorted(store.levels)
+            k = min(ladder.index(a_star) + attempt - 1, len(ladder) - 1)
+            if ladder[k] != a_star:
+                a_star = ladder[k]
+                tab, j = self._reprice_single(pnd.request, a_star), 0
+                degraded = a_star
         enforce = req.deadline is not None and self.slo != "observe"
         choice = self._choose(t, req, pnd.arrival, tab, j, a_star, enforce)
-        degraded = None
         if choice is None and self.slo == "degrade":
             for lv in sorted(store.levels):
                 if lv <= a_star:
                     continue
-                relaxed = dataclasses.replace(self._pricing_request(req),
-                                              accuracy_budget=lv)
-                tab_lv = price_window(self.qs.models,
-                                      self.servers[0].profile, [relaxed],
-                                      context=self.context,
-                                      provider=self.provider)
+                tab_lv = self._reprice_single(pnd.request, lv)
                 choice = self._choose(t, req, pnd.arrival, tab_lv, 0, lv,
                                       True)
                 if choice is not None:
@@ -310,15 +588,18 @@ class FleetEngine:
         rec = self._records[pnd.index]
         if choice is None:
             rec.rejected = True
-            return
+            rec.drop_reason = REASON_SLO
+            rec.attempts = attempt - 1
+            return [pnd.index, -1]
         _, s, c, queue, wire_vec = choice
         self._commit(t, pnd, tab, j, s, c, queue, float(wire_vec[c]),
-                     a_star, degraded)
+                     a_star, degraded, attempt, req)
+        return [pnd.index, s]
 
     def _commit(self, t: float, pnd: _Pending, tab, j: int, s: int, c: int,
                 queue: float, wire: float, a_star: float,
-                degraded: Optional[float]) -> None:
-        req = pnd.request
+                degraded: Optional[float], attempt: int,
+                req: InferenceRequest) -> None:
         srv = self.servers[s]
         plan, o1, o2, _ = tab.select(j, c)
         dev_b, srv_b = tab.rows[j].bytes_at(c)
@@ -328,7 +609,7 @@ class FleetEngine:
         res = ServingResult(plan=plan, costs=costs,
                             objective=costs.objective(req.weights)
                             + req.weights.omega * (queue if o2 > 0 else 0.0),
-                            payload_bits=wire)
+                            payload_bits=wire, attempt=attempt)
         res.extra["queue_delay"] = queue if o2 > 0 else 0.0
         res.extra["server"] = s
         if degraded is not None:
@@ -347,10 +628,12 @@ class FleetEngine:
         # aware under the roofline/calibrated providers
         device_done = ship_done + costs.t_local
         transfer_done = device_done + x_share / r_cap
+        token = (pnd.index, attempt)
         if o2 > 0:
             server_start = max(srv.free, transfer_done)
             finish = server_start + costs.t_server
             srv.free = finish
+            srv.reservations[token] = finish
         else:
             server_start = transfer_done
             finish = server_start
@@ -367,13 +650,17 @@ class FleetEngine:
         rec.backlog_at_admission = queue
         rec.queue_delay = res.extra["queue_delay"]
         rec.degraded_to = degraded
+        rec.attempts = attempt
         self._admit_rank += 1
+        self._attempts[pnd.index] = attempt
+        self._live.add(token)
+        self._inflight[pnd.index] = _Flight(token, req.device_id, s,
+                                            costs.t_server, tl)
 
         if (req.device_id is not None and plan.p and ship > 0):
             self._queue.push(Event(ship_done, CACHE_INSTALL,
                                    (req.device_id,
-                                    (req.model, a_star, plan.p))))
+                                    (req.model, a_star, plan.p), token)))
         self._in_flight += 1
         self._samples.append((t, self._in_flight))
-        self._queue.push(Event(finish, COMPLETE, pnd.index))
-        self._horizon = max(self._horizon, finish)
+        self._queue.push(Event(finish, COMPLETE, (pnd.index, token)))

@@ -1,0 +1,136 @@
+"""Replayable event journal of a fleet-engine run (DESIGN.md §10).
+
+``FleetEngine.run`` appends one ``JournalEntry`` per event it PROCESSES
+— in processing order, with the outcome facts the handler decided
+(admitted indices, stale-completion flags, whether a cache install
+applied) — plus a header naming the engine configuration. Because the
+engine is a deterministic DES, the journal is a total account of a run:
+
+  * ``replay(qs, requests)`` re-executes the run from scratch — the
+    fault schedule is reconstructed FROM the journal's fault entries and
+    the engine config from its header — and returns the fresh metrics;
+    ``verify_replay`` additionally asserts the replayed journal is
+    entry-for-entry identical (the determinism check the chaos tests
+    lean on).
+  * ``to_jsonl``/``from_jsonl`` give the journal a stable on-disk form
+    (one JSON object per line, header first) for offline debugging of a
+    faulted run.
+
+The journal records event *processing*, not queue pushes: a cancelled
+attempt's COMPLETE still pops and is journaled as ``stale`` — replay
+must reproduce even the non-events.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import List, Optional
+
+from repro.serving.engine.events import KIND_NAMES
+from repro.serving.engine.faults import FaultEvent, FaultInjector
+
+
+@dataclasses.dataclass(frozen=True)
+class JournalEntry:
+    """One processed event: (seq, time, kind, outcome data)."""
+    seq: int
+    time: float
+    kind: str                      # KIND_NAMES value
+    data: tuple                    # sorted (key, value) outcome facts
+
+    def to_dict(self) -> dict:
+        return {"seq": self.seq, "time": self.time, "kind": self.kind,
+                **dict(self.data)}
+
+
+class EventJournal:
+    """Ordered record of every event a ``FleetEngine.run`` processed."""
+
+    def __init__(self, header: Optional[dict] = None):
+        self.header: dict = dict(header or {})
+        self.entries: List[JournalEntry] = []
+
+    # -- recording (engine-side) ---------------------------------------
+    def record(self, time: float, kind: int, **data) -> None:
+        self.entries.append(JournalEntry(
+            len(self.entries), float(time), KIND_NAMES[kind],
+            tuple(sorted(data.items()))))
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, EventJournal)
+                and self.header == other.header
+                and self.entries == other.entries)
+
+    def diff(self, other: "EventJournal") -> Optional[str]:
+        """First divergence between two journals, human-readable; None
+        when identical."""
+        if self.header != other.header:
+            return f"headers differ: {self.header} != {other.header}"
+        for a, b in zip(self.entries, other.entries):
+            if a != b:
+                return f"entry {a.seq}: {a.to_dict()} != {b.to_dict()}"
+        if len(self.entries) != len(other.entries):
+            return (f"lengths differ: {len(self.entries)} != "
+                    f"{len(other.entries)}")
+        return None
+
+    # -- fault-schedule reconstruction ---------------------------------
+    def fault_trace(self) -> List[FaultEvent]:
+        """The run's fault schedule, reconstructed from the journaled
+        FAULT entries (what ``replay`` injects)."""
+        out = []
+        for e in self.entries:
+            if e.kind == "fault":
+                d = dict(e.data)
+                out.append(FaultEvent(e.time, d["fault"], d["device"],
+                                      float(d.get("factor", 1.0))))
+        return out
+
+    # -- replay --------------------------------------------------------
+    def replay(self, qs, requests, servers=None, provider=None):
+        """Re-execute the journaled run: fresh engine, same config (from
+        the header), same requests, fault schedule reconstructed from
+        the journal. Returns the replayed ``FleetMetrics`` (carrying its
+        own journal)."""
+        from repro.serving.engine.fleet import FleetEngine
+        from repro.serving.engine.retry import RetryPolicy
+        h = self.header
+        retry = RetryPolicy(**h["retry"]) if h.get("retry") else None
+        eng = FleetEngine(qs, servers=servers, policy=h.get("policy", "fcfs"),
+                          slo=h.get("slo", "observe"),
+                          epoch_interval=h.get("epoch_interval", 0.0),
+                          provider=provider,
+                          retry=retry,
+                          faults=FaultInjector(self.fault_trace()))
+        return eng.run(requests)
+
+    def verify_replay(self, qs, requests, servers=None, provider=None):
+        """Replay and assert the journals match entry-for-entry; returns
+        the replayed metrics. Raises ``AssertionError`` naming the first
+        divergence — the determinism contract of DESIGN.md §10."""
+        metrics = self.replay(qs, requests, servers=servers,
+                              provider=provider)
+        delta = self.diff(metrics.journal)
+        assert delta is None, f"journal replay diverged: {delta}"
+        return metrics
+
+    # -- serialization -------------------------------------------------
+    def to_jsonl(self) -> str:
+        lines = [json.dumps({"header": self.header}, sort_keys=True)]
+        lines += [json.dumps(e.to_dict(), sort_keys=True)
+                  for e in self.entries]
+        return "\n".join(lines) + "\n"
+
+    @classmethod
+    def from_jsonl(cls, text: str) -> "EventJournal":
+        lines = [ln for ln in text.splitlines() if ln.strip()]
+        jr = cls(json.loads(lines[0])["header"])
+        for ln in lines[1:]:
+            d = json.loads(ln)
+            seq, time, kind = d.pop("seq"), d.pop("time"), d.pop("kind")
+            jr.entries.append(JournalEntry(seq, time, kind,
+                                           tuple(sorted(d.items()))))
+        return jr

@@ -1,10 +1,14 @@
 """Fleet-level serving metrics.
 
-The engine emits one ``FleetRecord`` per request (admitted or rejected);
-``FleetMetrics`` owns the records plus the engine's queue-depth samples
-and per-server busy totals, and aggregates the numbers a serving system
-is judged by: p50/p99 end-to-end latency, deadline-miss rate, server
-utilization, time-weighted queue depth, payload on the radio link.
+The engine emits one ``FleetRecord`` per request (admitted, rejected, or
+dead-lettered); ``FleetMetrics`` owns the records plus the engine's
+queue-depth samples, per-server busy totals, dead-letter queue and event
+journal, and aggregates the numbers a serving system is judged by:
+p50/p99 end-to-end latency, deadline-miss rate, server utilization,
+time-weighted queue depth, payload on the radio link — and, under fault
+injection, goodput, retry rate, and per-reason drop counts. Terminal
+accounting is an invariant, not a hope: ``assert_terminal()`` checks
+every request either completed or carries a structured drop reason.
 """
 from __future__ import annotations
 
@@ -14,6 +18,7 @@ from typing import List, Optional
 import numpy as np
 
 from repro.serving.engine.events import StageTimeline
+from repro.serving.engine.retry import DeadLetter
 from repro.serving.simulator import InferenceRequest
 
 
@@ -22,7 +27,7 @@ class FleetRecord:
     """Everything the engine decided and observed for one request."""
     index: int                          # arrival-order position in the trace
     request: InferenceRequest
-    deployment: object = None           # serving.Deployment; None = rejected
+    deployment: object = None           # serving.Deployment; None = dropped
     timeline: Optional[StageTimeline] = None
     server: int = -1                    # fleet index of the serving server
     start_order: int = -1               # global admission rank
@@ -32,11 +37,30 @@ class FleetRecord:
     queue_delay: float = 0.0            # backlog, zeroed when p = L (no
     # server segment) — mirrors result.extra["queue_delay"]
     degraded_to: Optional[float] = None  # accuracy level after SLO degrade
-    rejected: bool = False
+    # or retry-with-degraded-budget (engine/retry.py)
+    rejected: bool = False              # True for EVERY non-completed
+    # terminal state; drop_reason says WHY (retry.DROP_REASONS)
+    drop_reason: Optional[str] = None
+    attempts: int = 0                   # admission attempts consumed
+    # (0 = never admitted; > 1 = fault-driven re-admissions)
+    faults: int = 0                     # in-flight cancellations suffered
+    parked: int = 0                     # times held for a down device
 
     @property
     def arrival(self) -> float:
         return self.request.arrival_time
+
+    @property
+    def completed(self) -> bool:
+        return not self.rejected
+
+    @property
+    def dead_lettered(self) -> bool:
+        """Terminally failed under fault recovery (as opposed to an SLO
+        admission reject)."""
+        from repro.serving.engine.retry import REASON_SLO
+        return self.rejected and self.drop_reason is not None \
+            and self.drop_reason != REASON_SLO
 
     @property
     def latency(self) -> Optional[float]:
@@ -46,7 +70,7 @@ class FleetRecord:
 
     @property
     def deadline_missed(self) -> Optional[bool]:
-        """None when the request has no deadline; a rejected request with
+        """None when the request has no deadline; a dropped request with
         a deadline counts as missed."""
         if self.request.deadline is None:
             return None
@@ -61,6 +85,8 @@ class FleetMetrics:
     server_busy: List[float]            # per-server reserved work seconds
     queue_samples: List[tuple]          # (time, total in-flight requests)
     horizon: float                      # last completion time
+    dead_letters: List[DeadLetter] = dataclasses.field(default_factory=list)
+    journal: object = None              # engine.EventJournal of the run
 
     # ------------------------------------------------------------------
     def completed(self) -> List[FleetRecord]:
@@ -70,8 +96,8 @@ class FleetMetrics:
         return np.array([r.latency for r in self.completed()], np.float64)
 
     def deadline_miss_rate(self) -> Optional[float]:
-        """Missed / carrying-a-deadline (rejections count as misses);
-        None when the trace has no deadlines at all."""
+        """Missed / carrying-a-deadline (drops count as misses); None
+        when the trace has no deadlines at all."""
         flags = [r.deadline_missed for r in self.records
                  if r.deadline_missed is not None]
         if not flags:
@@ -107,6 +133,56 @@ class FleetMetrics:
                 acc[k] = acc.get(k, 0.0) + v
         return {k: v / len(done) for k, v in acc.items()}
 
+    # -- resilience aggregates (DESIGN.md §10) -------------------------
+    def drop_reasons(self) -> dict:
+        """Structured drop-reason counts — SLO rejects, retry
+        exhaustion and disconnect abandonment are distinguishable."""
+        counts: dict = {}
+        for r in self.records:
+            if r.rejected:
+                key = r.drop_reason or "unknown"
+                counts[key] = counts.get(key, 0) + 1
+        return counts
+
+    def retried(self) -> int:
+        """Requests that needed more than one admission attempt."""
+        return sum(1 for r in self.records if r.attempts > 1)
+
+    def disrupted(self) -> int:
+        """Requests a fault touched at all: cancelled in flight or
+        parked behind a disconnected device."""
+        return sum(1 for r in self.records if r.faults or r.parked)
+
+    def retry_rate(self) -> float:
+        if not self.records:
+            return 0.0
+        return self.retried() / len(self.records)
+
+    def goodput_rps(self) -> float:
+        """USEFUL completions per second of horizon: completed AND (when
+        a deadline was attached) inside it — the number fault tolerance
+        is supposed to protect."""
+        if self.horizon <= 0:
+            return 0.0
+        good = sum(1 for r in self.completed()
+                   if r.deadline_missed is not True)
+        return good / self.horizon
+
+    def assert_terminal(self) -> None:
+        """Every request is terminally accounted for: completed with a
+        timeline, or dropped with a structured reason (no lost
+        requests). The chaos acceptance invariant."""
+        for r in self.records:
+            if r.rejected:
+                assert r.deployment is None and r.drop_reason, \
+                    f"request {r.index} dropped without a reason"
+            else:
+                assert r.deployment is not None and r.timeline is not None, \
+                    f"request {r.index} neither completed nor dropped"
+        n_dead = sum(1 for r in self.records if r.dead_lettered)
+        assert n_dead == len(self.dead_letters), \
+            f"{n_dead} dead-lettered records vs {len(self.dead_letters)} DLQ"
+
     # ------------------------------------------------------------------
     def summary(self) -> dict:
         lat = self.latencies()
@@ -118,9 +194,14 @@ class FleetMetrics:
             "completed": len(done),
             "rejected": sum(r.rejected for r in self.records),
             "degraded": sum(r.degraded_to is not None for r in self.records),
+            "dead_lettered": len(self.dead_letters),
+            "retried": self.retried(),
+            "disrupted": self.disrupted(),
+            "drop_reasons": self.drop_reasons(),
             "horizon_s": round(self.horizon, 6),
             "throughput_rps": round(len(done) / self.horizon, 3)
             if self.horizon > 0 else 0.0,
+            "goodput_rps": round(self.goodput_rps(), 3),
             "p50_latency_s": round(float(np.percentile(lat, 50)), 6)
             if len(lat) else None,
             "p99_latency_s": round(float(np.percentile(lat, 99)), 6)

@@ -37,3 +37,10 @@ class StoreMissingError(ServingError):
 class PlanInfeasibleError(ServingError):
     """No stored partition candidate satisfies the request's device
     constraints (e.g. every quantized segment exceeds the device memory)."""
+
+
+class FaultConfigError(ServingError, ValueError):
+    """Invalid fault-injection or retry configuration (unknown fault
+    kind, non-positive dwell times, attempt budget < 1, ...) — raised at
+    construction so a chaos run never discovers a bad schedule
+    mid-simulation."""

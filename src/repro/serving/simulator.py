@@ -48,7 +48,9 @@ class InferenceRequest:
     deadline: Optional[float] = None    # SLO: max end-to-end seconds from
     # arrival; None = best-effort
     device_id: Optional[str] = None     # stable requester identity — keys
-    # the engine's segment cache
+    # the engine's segment cache AND fault injection (engine/faults.py)
+    attempt_budget: Optional[int] = None  # per-request cap on admission
+    # attempts under fault recovery; None = the RetryPolicy default
 
 
 @dataclasses.dataclass
@@ -59,6 +61,8 @@ class ServingResult:
     payload_bits: float
     accuracy: Optional[float] = None    # measured, when a test set is given
     accuracy_degradation: Optional[float] = None
+    attempt: int = 1                    # which admission attempt produced
+    # this result (> 1 after fault-driven re-admissions, engine/retry.py)
     extra: dict = dataclasses.field(default_factory=dict)
 
 

@@ -31,6 +31,8 @@ from repro.serving.simulator import InferenceRequest
 
 from tests._hypothesis_shim import given, settings, st
 
+pytestmark = pytest.mark.smoke
+
 LEVELS = (0.001, 0.0025, 0.005, 0.01, 0.02)
 
 

@@ -1,0 +1,486 @@
+"""Fault-tolerance tests (serving.engine resilience layer, DESIGN.md
+§10): fault injection and trace generators, disconnect recovery
+(reservation release, cache invalidation, parking), retry with degraded
+budget, dead-letter accounting, the exact epoch-boundary fix, the
+replayable event journal, and the ≥1k-request chaos accounting
+invariant."""
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs.classifier import MNIST_MLP
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile)
+from repro.serving.engine import (DEGRADE, DISCONNECT, RECONNECT,
+                                  REASON_ABANDONED, REASON_EXHAUSTED,
+                                  EventJournal, FaultEvent, FaultInjector,
+                                  FleetEngine, RetryPolicy, churn_trace,
+                                  degrade_trace, diurnal_arrivals,
+                                  materialize, mmpp_arrivals)
+from repro.serving.errors import FaultConfigError
+from repro.serving.simulator import InferenceRequest
+from repro.serving.testing import poisson_trace, stub_classifier_server
+
+from tests._hypothesis_shim import given, settings, st
+
+pytestmark = pytest.mark.smoke
+
+DEV = DeviceProfile()
+CH = Channel(capacity_bps=2e6)
+W = ObjectiveWeights()
+
+
+def stub_server(server=None, channel=CH):
+    return stub_classifier_server([("mnist", MNIST_MLP)], server=server,
+                                  device=DEV, channel=channel, weights=W)
+
+
+def req(budget=0.01, channel=CH, **kw):
+    return InferenceRequest("mnist", budget, DEV, channel, W, **kw)
+
+
+def mid(t0: float, t1: float) -> float:
+    assert t1 > t0
+    return (t0 + t1) / 2
+
+
+# shared read-only pricing server (the store is immutable under pricing)
+SRV = stub_server()
+# offloading unattractive (10 MHz server, fast channel): plans go
+# device-side (p > 0), so model segments really ship and disconnects
+# have a radio window to land in
+SLOW_FLEET = [ServerProfile(f_clock=1e7)]
+SRV_SLOW = stub_server(server=SLOW_FLEET[0], channel=Channel())
+
+
+def slow_req(**kw):
+    return req(channel=Channel(), **kw)
+
+
+# ---------------------------------------------------------------------------
+class TestFaultPrimitives:
+    def test_fault_event_validation(self):
+        with pytest.raises(FaultConfigError):
+            FaultEvent(1.0, "power_surge", "dev-1")
+        with pytest.raises(FaultConfigError):
+            FaultEvent(-1.0, DISCONNECT, "dev-1")
+        with pytest.raises(FaultConfigError):
+            FaultEvent(1.0, DEGRADE, "dev-1", factor=0.0)
+        rt = FaultEvent.from_dict(FaultEvent(0.5, DEGRADE, "d",
+                                             factor=0.25).to_dict())
+        assert rt == FaultEvent(0.5, DEGRADE, "d", factor=0.25)
+
+    def test_injector_sorted_and_addable(self):
+        a = FaultInjector([FaultEvent(2.0, DISCONNECT, "x"),
+                           FaultEvent(1.0, RECONNECT, "x")])
+        b = FaultInjector([FaultEvent(1.5, DEGRADE, "y", factor=0.5)])
+        merged = a + b
+        assert [f.time for f in merged.events] == [1.0, 1.5, 2.0]
+        assert len(merged) == 3
+
+    def test_churn_trace_alternates_per_device(self):
+        tr = churn_trace(["a", "b"], horizon=10.0, mean_uptime=1.0,
+                         mean_downtime=0.3, seed=7)
+        assert len(tr) > 0
+        for dev in ("a", "b"):
+            kinds = [f.kind for f in tr.events if f.device_id == dev]
+            assert kinds[0] == DISCONNECT
+            assert all(k != kinds[i] for i, k in enumerate(kinds[1:]))
+
+    def test_degrade_trace_restores(self):
+        tr = degrade_trace(["a"], horizon=20.0, mean_interval=1.0,
+                           mean_duration=0.2, seed=3)
+        factors = [f.factor for f in tr.events]
+        assert any(f < 1.0 for f in factors)
+        # every degrade episode that ends restores factor 1.0
+        assert factors[1] == 1.0
+        assert all(t0.time <= t1.time
+                   for t0, t1 in zip(tr.events, tr.events[1:]))
+
+    def test_trace_generators_monotone(self):
+        for arr in (mmpp_arrivals(200, seed=1), diurnal_arrivals(200, seed=1)):
+            assert len(arr) == 200
+            assert all(b > a for a, b in zip(arr, arr[1:]))
+
+    def test_retry_policy(self):
+        rp = RetryPolicy(max_attempts=4, base_backoff_s=0.1,
+                         backoff_factor=2.0, max_backoff_s=0.3)
+        assert rp.backoff(2) == pytest.approx(0.1)
+        assert rp.backoff(3) == pytest.approx(0.2)
+        assert rp.backoff(4) == pytest.approx(0.3)   # capped
+        assert rp.budget_for(req()) == 4
+        assert rp.budget_for(req(attempt_budget=1)) == 1
+        with pytest.raises(ValueError):
+            RetryPolicy(max_attempts=0)
+        with pytest.raises(ValueError):
+            RetryPolicy(backoff_factor=0.5)
+
+
+# ---------------------------------------------------------------------------
+class TestDisconnectRecovery:
+    def _fault_free(self, r):
+        return FleetEngine(SRV_SLOW, servers=SLOW_FLEET).run([r]).records[0]
+
+    def test_midflight_disconnect_cancels_parks_and_retries(self):
+        r = slow_req(device_id="phone-1")
+        tl = self._fault_free(r).timeline
+        cut = mid(tl.admit, tl.transfer_done)
+        faults = [FaultEvent(cut, DISCONNECT, "phone-1"),
+                  FaultEvent(cut + 0.5, RECONNECT, "phone-1")]
+        eng = FleetEngine(SRV_SLOW, servers=SLOW_FLEET,
+                          retry=RetryPolicy(base_backoff_s=0.01),
+                          faults=faults)
+        m = eng.run([r])
+        rec = m.records[0]
+        assert rec.completed and rec.faults == 1 and rec.attempts == 2
+        # backoff fired while the device was still down: the retry parked
+        assert rec.parked == 1
+        # the retry re-admits only after the reconnect
+        assert rec.timeline.admit >= cut + 0.5
+        assert rec.latency > tl.latency_from(r.arrival_time)
+        assert not m.dead_letters
+        m.assert_terminal()
+
+    def test_attempt_past_transfer_done_completes_server_side(self):
+        """Once the cut activation reached the server, a disconnect no
+        longer cancels: the attempt completes untouched."""
+        r = req(segment_cached=True, device_id="phone-1")
+        base = FleetEngine(SRV).run([r]).records[0]
+        assert base.timeline.finish > base.timeline.transfer_done
+        cut = mid(base.timeline.transfer_done, base.timeline.finish)
+        rec = FleetEngine(SRV,
+                          faults=[FaultEvent(cut, DISCONNECT, "phone-1")]
+                          ).run([r]).records[0]
+        assert rec.completed and rec.faults == 0 and rec.attempts == 1
+        assert rec.timeline == base.timeline
+
+    def test_cancellation_releases_reservation(self):
+        """The cancelled attempts' server seconds are refunded: a
+        request admitted after the cancel prices an empty backlog."""
+        burst = [req(segment_cached=True, device_id="d1")
+                 for _ in range(16)]
+        tl0 = FleetEngine(SRV).run(burst).records[0].timeline
+        cut = tl0.admit + 0.1 * (tl0.transfer_done - tl0.admit)
+        probe = req(segment_cached=True, device_id="d2",
+                    arrival_time=cut + 1e-5)
+        # fault-free: the probe prices the burst's reservations
+        base = FleetEngine(SRV).run(burst + [probe]).records[-1]
+        assert base.backlog_at_admission > 0
+        m = FleetEngine(SRV, faults=[FaultEvent(cut, DISCONNECT, "d1")]
+                        ).run(burst + [probe])
+        assert m.records[-1].completed
+        assert m.records[-1].backlog_at_admission == 0.0
+        # d1 never reconnects: the retries park forever -> dead letters
+        assert all(r.drop_reason == REASON_ABANDONED
+                   for r in m.records[:-1])
+        assert all(d.reason == REASON_ABANDONED for d in m.dead_letters)
+        m.assert_terminal()
+
+    def test_cache_invalidated_when_cut_precedes_ship_done(self):
+        """Disconnect mid-shipment: the pending CACHE_INSTALL is stale,
+        so the retry pays the full weight payload again."""
+        r = slow_req(device_id="phone-1")
+        base = self._fault_free(r)
+        assert base.deployment.plan.p > 0
+        full = base.deployment.plan.payload_bits
+        cut = mid(base.timeline.admit, base.timeline.ship_done)
+        rec = FleetEngine(SRV_SLOW, servers=SLOW_FLEET,
+                          retry=RetryPolicy(base_backoff_s=0.01),
+                          faults=[FaultEvent(cut, DISCONNECT, "phone-1"),
+                                  FaultEvent(cut + 0.2, RECONNECT,
+                                             "phone-1")]).run([r]).records[0]
+        assert rec.completed and rec.attempts == 2
+        assert rec.deployment.payload_bits == full
+
+    def test_cache_survives_when_cut_follows_ship_done(self):
+        """Disconnect after the downlink finished but before the
+        activation uplink: the device keeps the weights, so the retry
+        pays activation-only."""
+        r = slow_req(device_id="phone-1")
+        base = self._fault_free(r)
+        assert base.timeline.transfer_done > base.timeline.ship_done
+        cut = mid(base.timeline.ship_done, base.timeline.transfer_done)
+        rec = FleetEngine(SRV_SLOW, servers=SLOW_FLEET,
+                          retry=RetryPolicy(base_backoff_s=0.01),
+                          faults=[FaultEvent(cut, DISCONNECT, "phone-1"),
+                                  FaultEvent(cut + 0.2, RECONNECT,
+                                             "phone-1")]).run([r]).records[0]
+        assert rec.completed and rec.attempts == 2
+        assert rec.deployment.payload_bits == \
+            rec.deployment.plan.payload_x_bits
+        assert rec.deployment.payload_bits < base.deployment.plan.payload_bits
+
+    def test_arrival_on_down_device_parks_without_burning_attempts(self):
+        r = slow_req(device_id="phone-1", arrival_time=1.0)
+        rec = FleetEngine(SRV_SLOW, servers=SLOW_FLEET,
+                          faults=[FaultEvent(0.5, DISCONNECT, "phone-1"),
+                                  FaultEvent(2.0, RECONNECT, "phone-1")]
+                          ).run([r]).records[0]
+        assert rec.completed and rec.parked == 1 and rec.attempts == 1
+        assert rec.timeline.admit >= 2.0
+
+    def test_parked_forever_becomes_abandoned_dead_letter(self):
+        r = slow_req(device_id="phone-1", arrival_time=1.0)
+        m = FleetEngine(SRV_SLOW, servers=SLOW_FLEET,
+                        faults=[FaultEvent(0.5, DISCONNECT, "phone-1")]
+                        ).run([r])
+        rec = m.records[0]
+        assert rec.rejected and rec.drop_reason == REASON_ABANDONED
+        assert rec.attempts == 0 and rec.deployment is None
+        assert [d.reason for d in m.dead_letters] == [REASON_ABANDONED]
+        assert m.summary()["drop_reasons"] == {REASON_ABANDONED: 1}
+        m.assert_terminal()
+
+
+# ---------------------------------------------------------------------------
+class TestRetryPolicyInEngine:
+    def test_retries_exhausted_goes_to_dead_letter_queue(self):
+        """Cut every attempt mid-flight: the attempt budget runs out and
+        the request terminates in the DLQ with a recorded reason."""
+        r = slow_req(device_id="phone-1")
+        retry = RetryPolicy(max_attempts=2, base_backoff_s=0.01)
+        tl1 = FleetEngine(SRV_SLOW, servers=SLOW_FLEET).run([r]
+                                                            ).records[0].timeline
+        cut1 = mid(tl1.admit, tl1.transfer_done)
+        f1 = [FaultEvent(cut1, DISCONNECT, "phone-1"),
+              FaultEvent(cut1 + 0.2, RECONNECT, "phone-1")]
+        # attempt 2's window comes from the singly-faulted run
+        tl2 = FleetEngine(SRV_SLOW, servers=SLOW_FLEET, retry=retry,
+                          faults=f1).run([r]).records[0].timeline
+        cut2 = mid(tl2.admit, tl2.transfer_done)
+        m = FleetEngine(SRV_SLOW, servers=SLOW_FLEET, retry=retry,
+                        faults=f1 + [FaultEvent(cut2, DISCONNECT, "phone-1"),
+                                     FaultEvent(cut2 + 0.2, RECONNECT,
+                                                "phone-1")]).run([r])
+        rec = m.records[0]
+        assert rec.rejected and rec.drop_reason == REASON_EXHAUSTED
+        assert rec.attempts == 2 and rec.faults == 2
+        assert m.dead_letters[0].reason == REASON_EXHAUSTED
+        assert m.dead_letters[0].attempts == 2
+        m.assert_terminal()
+
+    def test_attempt_budget_override(self):
+        """attempt_budget=1 means one strike: the first cancellation is
+        terminal even though the policy allows three attempts."""
+        r = slow_req(device_id="phone-1", attempt_budget=1)
+        tl = FleetEngine(SRV_SLOW, servers=SLOW_FLEET).run([r]
+                                                           ).records[0].timeline
+        cut = mid(tl.admit, tl.transfer_done)
+        m = FleetEngine(SRV_SLOW, servers=SLOW_FLEET,
+                        retry=RetryPolicy(max_attempts=3),
+                        faults=[FaultEvent(cut, DISCONNECT, "phone-1"),
+                                FaultEvent(cut + 0.2, RECONNECT, "phone-1")]
+                        ).run([r])
+        assert m.records[0].drop_reason == REASON_EXHAUSTED
+        assert m.records[0].attempts == 1
+
+    def test_degrade_on_retry_coarsens_budget(self):
+        """With degrade_on_retry, attempt 2 re-prices one accuracy level
+        coarser than the original budget (the SLO degrade ladder)."""
+        levels = sorted(SRV_SLOW.levels)
+        r = slow_req(budget=levels[0], device_id="phone-1")
+        base = FleetEngine(SRV_SLOW, servers=SLOW_FLEET).run([r]).records[0]
+        assert base.degraded_to is None
+        cut = mid(base.timeline.admit, base.timeline.transfer_done)
+        rec = FleetEngine(SRV_SLOW, servers=SLOW_FLEET,
+                          retry=RetryPolicy(base_backoff_s=0.01,
+                                            degrade_on_retry=True),
+                          faults=[FaultEvent(cut, DISCONNECT, "phone-1"),
+                                  FaultEvent(cut + 0.2, RECONNECT,
+                                             "phone-1")]).run([r]).records[0]
+        assert rec.completed and rec.attempts == 2
+        assert rec.degraded_to == levels[1]
+        assert rec.deployment.extra["degraded_to"] == levels[1]
+
+
+# ---------------------------------------------------------------------------
+class TestChannelDegrade:
+    def test_degrade_slows_priced_transfer(self):
+        r = req(segment_cached=True, arrival_time=1.0, device_id="a")
+        base = FleetEngine(SRV).run([r]).records[0]
+        rec = FleetEngine(SRV, faults=[FaultEvent(0.5, DEGRADE, "a",
+                                                  factor=0.25)]
+                          ).run([dataclasses.replace(r)]).records[0]
+        assert rec.latency > base.latency
+
+    def test_degrade_targets_only_its_device(self):
+        r1 = req(segment_cached=True, arrival_time=1.0, device_id="a")
+        r2 = req(segment_cached=True, arrival_time=1.0, device_id="b")
+        base = FleetEngine(SRV).run([r1, r2])
+        m = FleetEngine(SRV, faults=[FaultEvent(0.5, DEGRADE, "a",
+                                                factor=0.25)]).run([r1, r2])
+        assert m.records[0].latency > base.records[0].latency
+        tb = base.records[1].timeline
+        tf = m.records[1].timeline
+        assert tf.transfer_done - tf.admit == \
+            pytest.approx(tb.transfer_done - tb.admit)
+
+    def test_restore_returns_to_baseline_pricing(self):
+        r = req(segment_cached=True, arrival_time=1.0, device_id="a")
+        base = FleetEngine(SRV).run([r]).records[0]
+        rec = FleetEngine(SRV, faults=[FaultEvent(0.2, DEGRADE, "a",
+                                                  factor=0.25),
+                                       FaultEvent(0.6, DEGRADE, "a",
+                                                  factor=1.0)]
+                          ).run([r]).records[0]
+        assert rec.deployment.objective == base.deployment.objective
+        assert rec.timeline == base.timeline
+
+
+# ---------------------------------------------------------------------------
+class TestEpochBoundary:
+    """The exact-bucketing fix: ``ceil(round(t / iv, 9))`` misplaced
+    on-boundary arrivals for non-dyadic intervals."""
+
+    def test_on_boundary_arrival_admits_at_its_own_epoch(self):
+        iv, k = 0.007, 4691883
+        t = k * iv                       # 32843.181000000004
+        assert t / iv != k               # the float ratio drifts
+        rec = FleetEngine(SRV, epoch_interval=iv).run(
+            [req(segment_cached=True, arrival_time=t)]).records[0]
+        assert rec.timeline.admit == t   # NOT (k + 1) * iv
+
+    def test_just_after_boundary_never_admits_in_the_past(self):
+        iv = 0.007
+        t = math.nextafter(iv, math.inf)
+        rec = FleetEngine(SRV, epoch_interval=iv).run(
+            [req(segment_cached=True, arrival_time=t)]).records[0]
+        assert rec.timeline.admit >= t
+        assert rec.timeline.admit == 2 * iv
+
+    @given(st.sampled_from([0.001, 0.003, 0.005, 0.007, 0.01, 0.1, 1/3]),
+           st.integers(min_value=0, max_value=10_000_000))
+    @settings(max_examples=50, deadline=None, derandomize=True)
+    def test_admit_epoch_is_minimal(self, iv, k):
+        """For any arrival, the admitting epoch k*iv is the SMALLEST
+        float multiple of iv at or after the arrival."""
+        t = k * iv
+        for arrival in (t, math.nextafter(t, math.inf)):
+            rec = FleetEngine(SRV, epoch_interval=iv).run(
+                [req(segment_cached=True, arrival_time=arrival)]).records[0]
+            admit = rec.timeline.admit
+            assert admit >= arrival
+            j = round(admit / iv)
+            assert admit == j * iv
+            assert (j - 1) * iv < arrival
+
+
+# ---------------------------------------------------------------------------
+def _chaos_ingredients(n=60, seed=0, device_pool=12):
+    arrivals = mmpp_arrivals(n, rates=(100.0, 900.0), mean_dwell=(0.3, 0.1),
+                             seed=seed)
+    trace = materialize("mnist", arrivals, [DEV], [CH], W,
+                        budgets=(0.004, 0.01, 0.02),
+                        deadlines=(0.05, 0.2), batches=(1,),
+                        device_pool=device_pool, seed=seed)
+    horizon = trace[-1].arrival_time + 0.5
+    devs = [f"dev-{i}" for i in range(device_pool)]
+    faults = (churn_trace(devs[::2], horizon, mean_uptime=0.2,
+                          mean_downtime=0.1, seed=seed)
+              + degrade_trace(devs[1::2], horizon, mean_interval=0.5,
+                              mean_duration=0.1, seed=seed + 1))
+    return trace, faults
+
+
+class TestJournal:
+    def test_zero_fault_engine_is_bit_for_bit_sunny_day(self):
+        """Default engine vs engine with explicit (empty) fault state:
+        identical plans, timelines, servers, everything."""
+        trace = poisson_trace("mnist", 50, 400.0, [DEV], [CH], W,
+                              budgets=(0.004, 0.01), deadlines=(0.05,),
+                              batches=(1,), device_pool=8, seed=2)
+        fleet = [ServerProfile(), ServerProfile()]
+        a = FleetEngine(SRV, servers=fleet, policy="edf", slo="degrade",
+                        epoch_interval=0.005).run(trace)
+        b = FleetEngine(SRV, servers=fleet, policy="edf", slo="degrade",
+                        epoch_interval=0.005, retry=RetryPolicy(),
+                        faults=FaultInjector()).run(trace)
+        for ra, rb in zip(a.records, b.records):
+            assert ra.rejected == rb.rejected
+            assert ra.timeline == rb.timeline
+            assert ra.server == rb.server
+            if ra.deployment is not None:
+                assert ra.deployment.objective == rb.deployment.objective
+                assert ra.deployment.payload_bits == rb.deployment.payload_bits
+        assert a.server_busy == b.server_busy
+        assert a.journal == b.journal or a.journal.diff(b.journal) is None
+
+    def test_journal_replay_of_faulted_run(self):
+        trace, faults = _chaos_ingredients()
+        eng = FleetEngine(SRV, servers=[ServerProfile()] * 2, policy="edf",
+                          slo="degrade", epoch_interval=0.005,
+                          retry=RetryPolicy(base_backoff_s=0.01,
+                                            degrade_on_retry=True),
+                          faults=faults)
+        m = eng.run(trace)
+        m.journal.verify_replay(SRV, trace,
+                                servers=[ServerProfile()] * 2)
+
+    def test_journal_diff_flags_divergence(self):
+        trace, faults = _chaos_ingredients()
+        kw = dict(servers=[ServerProfile()], epoch_interval=0.005)
+        j1 = FleetEngine(SRV, faults=faults, **kw).run(trace).journal
+        j2 = FleetEngine(SRV, faults=faults.events[:-4], **kw
+                         ).run(trace).journal
+        assert j1.diff(j2) is not None
+        with pytest.raises(AssertionError):
+            j1.verify_replay(SRV, trace, servers=[ServerProfile()] * 3)
+
+    def test_journal_jsonl_round_trip(self):
+        trace, faults = _chaos_ingredients(n=30)
+        j = FleetEngine(SRV, servers=[ServerProfile()], faults=faults,
+                        epoch_interval=0.005).run(trace).journal
+        rt = EventJournal.from_jsonl(j.to_jsonl())
+        assert rt == j and rt.diff(j) is None
+        assert [f.to_dict() for f in rt.fault_trace()] == \
+            [f.to_dict() for f in j.fault_trace()]
+
+    @given(st.integers(min_value=0, max_value=30), st.booleans())
+    @settings(max_examples=8, deadline=None, derandomize=True)
+    def test_any_seeded_trace_replays_identically(self, seed, with_faults):
+        """Property: a run journaled from any seeded trace — with or
+        without faults — replays to an identical journal and identical
+        per-request terminal state."""
+        trace, faults = _chaos_ingredients(n=25, seed=seed)
+        eng = FleetEngine(SRV, servers=[ServerProfile()], policy="fcfs",
+                          slo="degrade", epoch_interval=0.005,
+                          retry=RetryPolicy(base_backoff_s=0.01),
+                          faults=faults if with_faults else None)
+        m = eng.run(trace)
+        replayed = m.journal.replay(SRV, trace, servers=[ServerProfile()])
+        assert m.journal.diff(replayed.journal) is None
+        for ra, rb in zip(m.records, replayed.records):
+            assert (ra.rejected, ra.drop_reason, ra.attempts, ra.faults) \
+                == (rb.rejected, rb.drop_reason, rb.attempts, rb.faults)
+            assert ra.timeline == rb.timeline
+
+
+# ---------------------------------------------------------------------------
+class TestChaosAccounting:
+    def test_thousand_request_chaos_run_is_terminally_accounted(self):
+        """The acceptance invariant: >=1k requests under churn + drift +
+        permanent loss — every request completes, is rejected, or is
+        dead-lettered with a reason; nothing is lost."""
+        trace, faults = _chaos_ingredients(n=1000, seed=5, device_pool=40)
+        horizon = trace[-1].arrival_time + 0.5
+        # a couple of devices die mid-trace and never come back
+        faults = faults + FaultInjector(
+            [FaultEvent(horizon * 0.4, DISCONNECT, "dev-1"),
+             FaultEvent(horizon * 0.5, DISCONNECT, "dev-3")])
+        m = FleetEngine(SRV, servers=[ServerProfile()] * 3,
+                        policy="least_loaded", slo="degrade",
+                        epoch_interval=0.005,
+                        retry=RetryPolicy(base_backoff_s=0.005,
+                                          max_backoff_s=0.05,
+                                          degrade_on_retry=True),
+                        faults=faults).run(trace)
+        m.assert_terminal()
+        s = m.summary()
+        assert s["requests"] == 1000
+        assert s["completed"] + s["rejected"] == 1000
+        assert s["completed"] > 0
+        assert sum(s["drop_reasons"].values()) == s["rejected"]
+        assert s["dead_lettered"] == len(m.dead_letters)
+        # queue drains: no request left in flight
+        assert m.queue_samples[-1][1] == 0

@@ -19,6 +19,8 @@ from repro.serving.testing import stub_classifier_server
 
 from tests._hypothesis_shim import given, settings, st
 
+pytestmark = pytest.mark.smoke
+
 DEV = DeviceProfile()
 CH = Channel(capacity_bps=2e6)
 W = ObjectiveWeights()

@@ -8,6 +8,8 @@ import pytest
 from repro.roofline.hlo_cost import (HloCostModel, _type_bytes, analyze_text,
                                      parse_computations)
 
+pytestmark = pytest.mark.smoke
+
 
 def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()

@@ -11,6 +11,8 @@ from repro.core.quantizer import (analytic_noise_scale, dequantize,
 
 LN4 = np.log(4.0)
 
+pytestmark = pytest.mark.smoke
+
 
 def _rand(shape, seed=0, lo=-3.0, hi=5.0):
     rng = np.random.default_rng(seed)

@@ -18,6 +18,8 @@ from repro.serving.qpart_server import QPARTServer
 from repro.serving.scheduler import WorkloadBalancer, total_latency
 from repro.serving.simulator import InferenceRequest
 
+pytestmark = pytest.mark.smoke
+
 
 @pytest.fixture(scope="module")
 def calibrated_server():

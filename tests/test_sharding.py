@@ -14,6 +14,8 @@ from repro.launch import sharding as shard_lib
 from repro.launch.mesh import MODEL_AXIS
 from repro.launch.steps import batch_specs, cache_specs, param_specs
 
+pytestmark = pytest.mark.smoke
+
 MODEL_SIZE = 16            # production model-axis extent
 
 

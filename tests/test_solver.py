@@ -11,6 +11,8 @@ from repro.core.solver import (OfflineStore, SegmentItems, build_offline_store,
 
 LN4 = np.log(4.0)
 
+pytestmark = pytest.mark.smoke
+
 
 def _items(n, seed=0):
     rng = np.random.default_rng(seed)
