@@ -1,0 +1,166 @@
+"""Decode serving benchmark (the BENCH_serving.json "decode" section).
+
+Two parts, one section:
+
+``decode_session`` rows — REAL streamed generation through the
+partitioned prefill→decode pipeline (``DecodeSession``) on reduced
+variants of two model scales (smollm-135m and qwen1.5-4b flavours),
+across >= 3 cut points each with an 8-bit quantized device segment
+(float8 KV storage). Reports wall-clock TTFT, decode tokens/s, the
+resident device-cache footprint/dtype and the per-token wire bits. The
+compile-once contract is ASSERTED: after one warm pass over every cut,
+a second full pass may not grow the backend's ``trace_count`` — every
+cut point reuses the same jitted decode programs (DESIGN.md §7/§11).
+
+``decode_fleet`` rows — the fleet engine's continuous-batching decode
+lane (pricing-only, stub-calibrated): a trace of concurrent decode
+streams plus one-shot traffic, reporting tokens/s, TTFT percentiles and
+the realized mean round batch, with terminal accounting asserted and
+the journal replayed as a determinism check.
+
+  PYTHONPATH=src python -m benchmarks.run --only decode
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import update_bench_json
+from repro.configs.base import get_config
+from repro.core.cost_model import Channel, DeviceProfile, ObjectiveWeights
+from repro.core.solver import PartitionPlan
+from repro.models import transformer as T
+from repro.serving.backends import TransformerBackend
+from repro.serving.decode import DecodeSession
+from repro.serving.engine import FleetEngine
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+from repro.serving.testing import stub_transformer_calibration
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+MODELS = ("smollm-135m", "qwen1.5-4b")
+SEQ = 16
+MAX_LEN = 64
+DEVICE_BITS = 8.0               # quantized device segment -> float8 KV
+
+
+def _plan(p: int, bits: float = DEVICE_BITS) -> PartitionPlan:
+    return PartitionPlan(p=p, bits_w=np.full(p, float(bits)),
+                         bits_x=float(bits), objective=0.0, psi_total=0.0,
+                         payload_bits=0.0, breakdown={})
+
+
+def _session_rows(smoke: bool) -> list:
+    gen = 8 if smoke else 24
+    rows = []
+    for name in MODELS:
+        cfg = dataclasses.replace(get_config(name).reduced(),
+                                  dtype="float32")
+        if not smoke:
+            # deepen past the 2-layer smoke variant so the cut sweep has
+            # interior points on both scales
+            cfg = dataclasses.replace(cfg, num_layers=4)
+        params = T.init_params(jax.random.key(0), cfg)
+        backend = TransformerBackend(cfg, params, seq_len=SEQ,
+                                     decode_max_len=MAX_LEN)
+        L = cfg.num_layers
+        cuts = sorted({0, 1, L // 2, L})
+        prompt = np.asarray(jax.random.randint(
+            jax.random.key(1), (1, SEQ), 0, cfg.vocab_size))
+        for p in cuts:                               # warm pass: compile
+            DecodeSession(backend, _plan(p),
+                          max_len=MAX_LEN).generate(prompt, 2)
+        n_traces = backend.trace_count
+        for p in cuts:                               # measured pass
+            sess = DecodeSession(backend, _plan(p), max_len=MAX_LEN)
+            t0 = time.perf_counter()
+            out = sess.generate(prompt, gen)
+            wall = time.perf_counter() - t0
+            decode_s = wall - out.ttft_s
+            rows.append({
+                "bench": "decode_session",
+                "model": name,
+                "layers": L,
+                "p": p,
+                "bits": int(DEVICE_BITS) if p else 0,
+                "ttft_ms": round(out.ttft_s * 1e3, 3),
+                "decode_tok_s": round((gen - 1) / decode_s, 1)
+                if decode_s > 0 else None,
+                "wire_bits_per_tok": sess.wire_bits_per_token(1),
+                "device_cache_kib": round(out.device_cache_bytes / 1024, 1),
+                "server_cache_kib": round(out.server_cache_bytes / 1024, 1),
+                "cache_dtype": out.device_cache_dtype if p else None,
+            })
+        assert backend.trace_count == n_traces, \
+            f"{name}: decode programs re-traced across cut points"
+    return rows
+
+
+def _fleet_rows(smoke: bool) -> list:
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              dtype="float32")
+    dev = DeviceProfile(memory_bytes=2e9)
+    ch = Channel(capacity_bps=2e6)
+    w = ObjectiveWeights()
+    srv = QPARTServer()
+    stub_transformer_calibration(srv, "lm", cfg, dev, ch, w, seq_len=SEQ,
+                                 decode_max_len=MAX_LEN)
+    n = 80 if smoke else 300
+    rng = np.random.default_rng(0)
+    arrivals = np.cumsum(rng.exponential(1 / 400.0, size=n))
+    trace = [InferenceRequest(
+        "lm", float(rng.choice((0.02, 0.05))), dev, ch, w,
+        arrival_time=float(arrivals[i]), device_id=f"dev-{rng.integers(24)}",
+        max_new_tokens=int(rng.choice((0, 8, 16, 32))))
+        for i in range(n)]
+    engine = FleetEngine(srv)
+    t0 = time.perf_counter()
+    metrics = engine.run(trace)
+    wall = time.perf_counter() - t0
+    metrics.assert_terminal()
+    metrics.journal.verify_replay(srv, trace)
+    s = metrics.summary()
+    rounds = [dict(e.data) for e in metrics.journal.entries
+              if e.kind == "decode_step" and not dict(e.data)["stale"]]
+    total_tokens = sum(r.tokens_emitted for r in metrics.records)
+    return [{
+        "bench": "decode_fleet",
+        "requests": n,
+        "streams": sum(1 for r in trace if r.max_new_tokens > 1),
+        "tokens": total_tokens,
+        "planned_rps_wall": round(n / wall, 1),
+        "tokens_per_s": s["tokens_per_s"],
+        "ttft_p50_ms": round(s["ttft_p50"] * 1e3, 3),
+        "ttft_p99_ms": round(s["ttft_p99"] * 1e3, 3),
+        "p99_latency_ms": round(s["p99_latency_s"] * 1e3, 3),
+        "decode_rounds": len(rounds),
+        "mean_round_batch": round(float(np.mean(
+            [r["batch"] for r in rounds])), 2) if rounds else None,
+    }]
+
+
+def decode(smoke: bool = False):
+    rows = _session_rows(smoke) + _fleet_rows(smoke)
+    # one key union across both row shapes (the harness CSV-prints each
+    # benchmark with rows[0]'s fieldnames)
+    keys = list(dict.fromkeys(k for r in rows for k in r))
+    rows = [{k: r.get(k) for k in keys} for r in rows]
+    update_bench_json(OUT_PATH, "decode", {
+        "smoke": smoke,
+        "models": list(MODELS),
+        "seq_len": SEQ,
+        "max_len": MAX_LEN,
+        "device_bits": DEVICE_BITS,
+        "rows": rows,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for row in decode():
+        print(row)

@@ -22,8 +22,8 @@ BENCHES = {}
 
 def _register():
     from benchmarks import (calibration_bench, cost_fidelity_bench,
-                            fleet_bench, kernel_bench, paper_tables,
-                            planner_bench, roofline_report)
+                            decode_bench, fleet_bench, kernel_bench,
+                            paper_tables, planner_bench, roofline_report)
     BENCHES.update({
         "fig3_payload": paper_tables.payload,
         "fig5_layerwise": paper_tables.layerwise_cost,
@@ -35,6 +35,7 @@ def _register():
         "serving": calibration_bench.serving,
         "fleet": fleet_bench.fleet,
         "fleet_chaos": fleet_bench.fleet_chaos,
+        "decode": decode_bench.decode,
         "cost_fidelity": cost_fidelity_bench.cost_fidelity,
         "roofline": roofline_report.roofline,
     })
@@ -55,9 +56,11 @@ def main(argv=None) -> int:
         from benchmarks import calibration_bench
         BENCHES["serving"] = functools.partial(calibration_bench.serving,
                                                smoke=True)
-        from benchmarks import cost_fidelity_bench
+        from benchmarks import cost_fidelity_bench, decode_bench
         BENCHES["cost_fidelity"] = functools.partial(
             cost_fidelity_bench.cost_fidelity, smoke=True)
+        BENCHES["decode"] = functools.partial(decode_bench.decode,
+                                              smoke=True)
         # the fleet benches are pricing-only and already CI-fast: --smoke
         # runs them at FULL size (>=1k requests, >=3 servers) so the
         # BENCH_serving.json fleet + fleet_chaos (MMPP arrivals, seeded
@@ -65,7 +68,8 @@ def main(argv=None) -> int:
         # trajectories are always fresh; the cost-fidelity bench
         # refreshes the predicted-vs-measured trajectory (its MNIST
         # setup is shared/cached)
-        names = ["serving", "fleet", "fleet_chaos", "cost_fidelity"]
+        names = ["serving", "fleet", "fleet_chaos", "decode",
+                 "cost_fidelity"]
     else:
         names = args.only or list(BENCHES)
     all_rows = []

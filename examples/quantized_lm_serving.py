@@ -71,7 +71,9 @@ def main():
 
     print("2) register the TransformerBackend; calibrate + build the "
           "pattern store (Alg. 1)...")
-    backend = TransformerBackend(cfg, params, seq_len=SEQ)
+    # decode_max_len marks the backend decode-PLANNED: KV-cache
+    # feasibility enters the plan mask and Deployment.generate streams
+    backend = TransformerBackend(cfg, params, seq_len=SEQ, decode_max_len=64)
     srv = QPARTServer()
     x_cal, y_cal = cycle_batch(rng, cfg.vocab_size, 128)
     srv.register("smollm", backend, x_cal, y_cal)
@@ -114,6 +116,24 @@ def main():
     match = float(jnp.mean(out_f32 == out_q))
     print(f"   greedy tokens agree on {100*match:.0f}% of steps")
     assert res.accuracy_degradation <= 0.25, "quantization hurt the LM too much"
+
+    print("5) stream the SAME deployment through the partitioned "
+          "prefill→decode pipeline (DESIGN.md §11)...")
+    streamed = []
+    out = dep.generate(prompt, 16,
+                       stream_cb=lambda i, tok: streamed.append(tok))
+    assert len(streamed) == 16 and out.tokens.shape == (2, 16)
+    print(f"   TTFT {out.ttft_s*1e3:.1f} ms, {out.tokens_per_s:.0f} tok/s "
+          f"wall-clock; device KV cache {out.device_cache_bytes/1024:.0f} "
+          f"KiB @ {out.device_cache_dtype} "
+          f"(server tail {out.server_cache_bytes/1024:.0f} KiB)")
+    stream_match = float(np.mean(out.tokens == np.asarray(out_f32)))
+    print(f"   streamed tokens agree with f32 greedy on "
+          f"{100*stream_match:.0f}% of steps")
+    # the measured per-stage stream timings feed the calibration ledger —
+    # decode and prefill samples sharpen one set of StageRates
+    srv.record_decode(dep)
+    print(f"   ledger now holds {len(srv.ledger.samples)} measured sample(s)")
 
 
 def quantize_blocks(params, bits_per_block, num_blocks):

@@ -36,12 +36,19 @@ class LayerSpec:
     w_bytes16: Optional[float] = None   # weight-stream bytes at bf16
     act_bytes: Optional[float] = None   # activation read+write bytes (bf16,
                                         # per request batch, like z_x/o)
+    kv_bytes16: Optional[float] = None  # resident decode-cache footprint at
+                                        # the context the specs were built
+                                        # for (bf16 storage; per request
+                                        # batch). 0.0 for cache-less layers
+                                        # (classifiers, prefill-only views).
 
     def __post_init__(self):
         if self.w_bytes16 is None:
             object.__setattr__(self, "w_bytes16", 2.0 * self.z_w)
         if self.act_bytes is None:
             object.__setattr__(self, "act_bytes", 4.0 * self.z_x)
+        if self.kv_bytes16 is None:
+            object.__setattr__(self, "kv_bytes16", 0.0)
 
 
 # ---------------------------------------------------------------------------
@@ -179,20 +186,26 @@ def transformer_layer_specs(cfg: ModelConfig, seq_len: int,
     specs = [LayerSpec("embed", cfg.vocab_size * d, tokens * d, 0.0)]
     hd = cfg.resolved_head_dim()
     win = cfg.sliding_window
+    kvp, _ = cfg.padded_heads()
     for l in range(cfg.num_layers):
         z_w = float(cfg._block_params(l))
         o = 0.0
+        kv_rw_bytes = 0.0     # per-token decode cache read+write traffic
+        kv_f16 = 0.0          # resident cache footprint (bf16 storage)
         if cfg.block_kind(l) == ATTN:
             proj = d * (cfg.num_heads + 2 * cfg.num_kv_heads) * hd + cfg.num_heads * hd * d
             o += tokens * proj
+            ctx = min(seq_len, win) if win else seq_len
             if mode == "decode":
-                ctx = min(seq_len, win) if win else seq_len
                 o += tokens * 2 * cfg.num_heads * hd * ctx
             else:
-                ctx = min(seq_len, win) if win else seq_len
                 avg_ctx = ctx if win else seq_len / 2
                 o += tokens * 2 * cfg.num_heads * hd * avg_ctx
             z_x_state = 2 * cfg.num_kv_heads * hd * (min(seq_len, win) if win else seq_len)
+            # ring buffer {k, v}: (B, ctx, KV_pad, hd) at 2 B/elem; one
+            # decode step reads the whole ring and writes one slot
+            kv_f16 = batch * 2.0 * (2 * kvp * hd * ctx)
+            kv_rw_bytes = batch * 2.0 * (2 * kvp * hd * ctx + 2 * kvp * hd)
         else:
             s = cfg.ssm
             di = s.d_inner(d)
@@ -203,6 +216,13 @@ def transformer_layer_specs(cfg: ModelConfig, seq_len: int,
             o += tokens * nh * (3 * s.d_state * s.head_dim
                                 + (0 if mode == "decode" else s.chunk * (s.d_state + s.head_dim)))
             z_x_state = nh * s.d_state * s.head_dim + (s.conv_width - 1) * (di + 2 * s.d_state)
+            # recurrent state is f32 (4 B/elem) regardless of storage
+            # dtype; the conv ring follows the cache dtype (2 B at bf16).
+            # Both are read AND written every decode step.
+            state_el = nh * s.d_state * s.head_dim
+            conv_el = (s.conv_width - 1) * (di + 2 * s.d_state)
+            kv_f16 = batch * (4.0 * state_el + 2.0 * conv_el)
+            kv_rw_bytes = batch * (8.0 * state_el + 4.0 * conv_el)
         if cfg.uses_moe(l):
             m = cfg.moe
             mult = 3 if cfg.mlp == "swiglu" else 2
@@ -212,8 +232,23 @@ def transformer_layer_specs(cfg: ModelConfig, seq_len: int,
             o += tokens * mult * d * cfg.d_ff
         # cut activation: hidden state(s) crossing the partition
         z_x = tokens * d + (batch * z_x_state if mode == "decode" else 0)
-        specs.append(LayerSpec(f"block{l}", z_w, float(z_x), float(o)))
+        # decode act_bytes made EXPLICIT: the default 4·z_x would charge
+        # the full state transfer as per-layer traffic — the real per-
+        # token traffic is the hidden r/w plus the cache r/w above
+        ab = 4.0 * tokens * d + kv_rw_bytes if mode == "decode" else None
+        specs.append(LayerSpec(f"block{l}", z_w, float(z_x), float(o),
+                               act_bytes=ab, kv_bytes16=float(kv_f16)))
     return specs
+
+
+def kv_bytes_row(specs: List[LayerSpec]) -> np.ndarray:
+    """(P+1,) cumulative resident decode-cache footprint of the DEVICE
+    segment — candidate c holds layers 1..c's caches for the lifetime of
+    the stream (bf16-storage accounting; a quantized segment that stores
+    its cache at a narrower dtype only shrinks this, so the feasibility
+    mask stays conservative)."""
+    return np.concatenate(
+        [[0.0], np.cumsum([sp.kv_bytes16 for sp in specs])])
 
 
 def layer_specs_for(cfg, seq_len: int = 1, batch: int = 1,
@@ -610,6 +645,25 @@ class CalibrationLedger:
         specs = deployment.backend.layer_specs(batch=int(meas["batch"]))
         o1, o2, dev_b, srv_b = plan_cost_terms(deployment.plan, specs)
         self.add(deployment.request.device, server, o1, o2, dev_b, srv_b,
+                 float(meas["t_device_s"]), float(meas["t_server_s"]))
+
+    def record_decode(self, deployment, server: ServerProfile) -> None:
+        """Ingest one streamed generation (``Deployment.generate`` fills
+        ``result.extra['measured_decode']``): the aggregate decode stage
+        seconds regress against N_tokens × the per-token decode terms —
+        same linear model, so decode samples sharpen the same
+        ``StageRates`` the prefill samples fit."""
+        meas = deployment.result.extra.get("measured_decode")
+        if not meas:
+            raise ValueError(
+                "deployment has no measured decode timings — call "
+                "Deployment.generate(prompt, max_new_tokens) first")
+        specs = deployment.backend.decode_layer_specs(
+            batch=int(meas["batch"]))
+        o1, o2, dev_b, srv_b = plan_cost_terms(deployment.plan, specs)
+        n = float(meas["new_tokens"])
+        self.add(deployment.request.device, server, o1 * n, o2 * n,
+                 dev_b * n, srv_b * n,
                  float(meas["t_device_s"]), float(meas["t_server_s"]))
 
     # ------------------------------------------------------------------

@@ -285,6 +285,11 @@ def attention_decode(params, cfg, x, cache, pos):
     valid = (pos + 1 >= buf) | (idx <= slot)
     sc = jnp.where(valid[None, None, None], sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(cv.dtype), cv)
+    # compute PV in the QUERY dtype: the cache may hold low-precision
+    # storage dtypes (bf16, float8 for quantized device segments) that
+    # are fine as storage but catastrophic as accumulators
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype),
+                     cv.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
     out = out[:, None].astype(x.dtype)             # (B,1,KVp,Gp,hd)
     return _out_proj(params, cfg, out, x.dtype), {"k": ck, "v": cv}

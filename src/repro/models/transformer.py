@@ -377,6 +377,90 @@ def segment_logits(params, cfg: ModelConfig, h, start, stop, *,
 
 
 # ---------------------------------------------------------------------------
+# Depth-independent segment prefill/decode (cut-point-partitioned KV cache)
+
+def segment_prefill(params, cfg: ModelConfig, h, cache0, start, stop, *,
+                    positions=None):
+    """``prefill`` restricted to blocks ``[start, stop)`` under the same
+    masked ``lax.scan`` as ``segment_forward`` — ``start``/``stop`` are
+    DYNAMIC operands, so the device segment ``[0, p)`` and the server
+    tail ``[p, L)`` of EVERY cut point share one compiled program per
+    input shape. ``cache0`` is an ``init_cache`` tree (its dtype/max_len
+    are part of the jit shape key); blocks outside the segment leave
+    both the hidden state and their cache slots untouched
+    (``jnp.where`` on every leaf). Returns ``(h_out, caches)``. Router
+    aux losses are dropped (serving paths only consume logits)."""
+    b, s, _ = h.shape
+    if positions is None:
+        positions = rope_lib.text_positions(b, s)
+    plen, nper = period_len(cfg), num_periods(cfg)
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+
+    def scan_fn(x, inp):
+        per_idx, period_params, caches = inp
+        new_caches = []
+        for pos in range(plen):
+            layer = per_idx * plen + pos
+            bp = _dequant_block(period_params[pos], cfg)
+            hh = norm_apply(cfg.norm, bp["norm1"], x)
+            if cfg.block_kind(pos) == ATTN:
+                mixed, c = _attn_prefill_with_cache(bp["attn"], cfg, hh,
+                                                    positions, caches[pos])
+            else:
+                mixed, c = _ssm_prefill_with_cache(bp["ssm"], cfg, hh,
+                                                   caches[pos])
+            x_new = x + mixed
+            if "moe" in bp:
+                h2 = norm_apply(cfg.norm, bp["norm2"], x_new)
+                out, _ = moe_apply(bp["moe"], cfg, h2)
+                x_new = x_new + out
+            elif "mlp" in bp:
+                h2 = norm_apply(cfg.norm, bp["norm2"], x_new)
+                x_new = x_new + mlp_apply(bp["mlp"], cfg, h2)
+            active = (layer >= start) & (layer < stop)
+            x = jnp.where(active, x_new, x)
+            new_caches.append(jax.tree.map(
+                lambda new, old: jnp.where(active, new, old),
+                c, caches[pos]))
+        return x, tuple(new_caches)
+
+    xs = (jnp.arange(nper), tuple(params["blocks"]), tuple(cache0))
+    h, caches = jax.lax.scan(scan_fn, h, xs)
+    return h, list(caches)
+
+
+def segment_decode_step(params, cfg: ModelConfig, x, caches, pos, start,
+                        stop):
+    """One decode step over blocks ``[start, stop)``: ``x`` (B, 1, D)
+    hidden state entering block ``start``, ``pos`` the scalar absolute
+    position of the token. Masked twin of ``decode_step``'s scan with
+    DYNAMIC ``(start, stop)``; inactive blocks pass hidden state and
+    cache through unchanged. Returns ``(x_out, caches)``."""
+    plen, nper = period_len(cfg), num_periods(cfg)
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+
+    def scan_fn(x, inp):
+        per_idx, period_params, caches_in = inp
+        new_caches = []
+        for p in range(plen):
+            layer = per_idx * plen + p
+            x_new, _, c = _block_apply(period_params[p], cfg, p, x, None,
+                                       cache=caches_in[p], decode_pos=pos)
+            active = (layer >= start) & (layer < stop)
+            x = jnp.where(active, x_new, x)
+            new_caches.append(jax.tree.map(
+                lambda new, old: jnp.where(active, new, old),
+                c, caches_in[p]))
+        return x, tuple(new_caches)
+
+    xs = (jnp.arange(nper), tuple(params["blocks"]), tuple(caches))
+    x, caches = jax.lax.scan(scan_fn, x, xs)
+    return x, list(caches)
+
+
+# ---------------------------------------------------------------------------
 # Public single-block entry points (repro.serving.backends.transformer):
 # embed/unembed and one block application — the non-scan view of the same
 # math `forward` runs under lax.scan, for paths that need per-block access

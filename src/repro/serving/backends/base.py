@@ -157,6 +157,28 @@ class ModelBackend(abc.ABC):
         """Params tree with layer ``layer``'s weights fake-quantized at
         ``bits`` — the Alg. 1 noise probe's perturbed model."""
 
+    # -- autoregressive decode (optional capability) --------------------
+    # Token-by-token serving (DESIGN.md §11). Backends without a decode
+    # path (classifiers) keep the defaults: ``supports_decode`` False,
+    # ``kv_bytes_row`` None (no cache feasibility term is priced in).
+    supports_decode: bool = False
+
+    def decode_layer_specs(self, batch: int = 1,
+                           context_len: Optional[int] = None) -> List[LayerSpec]:
+        """Per-layer specs of ONE decode step against a ``context_len``
+        context — the per-token pricing terms (MACs, cache read/write
+        bytes, per-token cut payload)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} has no autoregressive decode path")
+
+    def kv_bytes_row(self, batch: int = 1):
+        """(P+1,) cumulative device-resident decode-cache footprint per
+        candidate cut, or ``None`` when no cache feasibility term
+        applies (non-decode backends, or decode_max_len unset). Priced
+        into the ``DeviceProfile.memory_bytes`` mask by ``price_window``
+        and ``QPARTServer.serve``."""
+        return None
+
     # -- calibration probes (Alg. 1 steps 7-9) --------------------------
     def calibrate_probes(self, x, probe_bits: int = noise_lib.PROBE_BITS):
         """Per-layer output-noise energies for the Alg. 1 calibration:

@@ -35,7 +35,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import noise as noise_lib
-from repro.core.cost_model import LayerSpec, transformer_layer_specs
+from repro.core.cost_model import (LayerSpec, kv_bytes_row as _kv_row,
+                                   transformer_layer_specs)
 from repro.core.partition import DeviceSegment, split_blocks
 from repro.core.quantizer import fake_quant
 from repro.models import transformer as T
@@ -55,6 +56,13 @@ class TransformerBackend(ModelBackend):
     params: dict
     seq_len: int
     mode: str = "prefill"
+    # context length decode streams are planned against (the KV cache is
+    # allocated at this length). None = the backend is not planned for
+    # decode and no cache-feasibility term is priced in — the prefill-
+    # only pricing stays bit-identical.
+    decode_max_len: Optional[int] = None
+
+    supports_decode = True
 
     @property
     def num_layers(self) -> int:
@@ -66,6 +74,25 @@ class TransformerBackend(ModelBackend):
             self.cfg, seq_len or self.seq_len, batch=batch,
             mode=self.mode)[1:]                      # drop the embed row
         return self.refine_specs(specs, batch=batch)
+
+    def decode_layer_specs(self, batch: int = 1,
+                           context_len: Optional[int] = None) -> List[LayerSpec]:
+        """ONE decode step's per-layer terms at a ``context_len`` (default
+        ``decode_max_len`` or ``seq_len``) context. HLO overrides
+        (``set_layer_cost_overrides``) are measured on the PREFILL
+        program, so they are deliberately NOT applied here."""
+        ctx = context_len or self.decode_max_len or self.seq_len
+        return transformer_layer_specs(self.cfg, ctx, batch=batch,
+                                       mode="decode")[1:]
+
+    def kv_bytes_row(self, batch: int = 1):
+        if self.decode_max_len is None:
+            return None
+        cache = self.__dict__.setdefault("_kv_row_cache", {})
+        row = cache.get(batch)
+        if row is None:
+            row = cache[batch] = _kv_row(self.decode_layer_specs(batch))
+        return row
 
     def input_elements(self) -> float:
         return float(self.seq_len)                   # token ids per example
@@ -103,6 +130,55 @@ class TransformerBackend(ModelBackend):
             h = T.embed_tokens(params, self.cfg, tokens)
             return T.segment_forward(params, self.cfg, h, 0, stop)
         return self.jitted("cut", lambda: f)
+
+    # -- compile-once decode programs (DESIGN.md §11) --------------------
+    # Three more shape-keyed programs serve EVERY cut point of the
+    # prefill→decode pipeline — (start, stop, pos) are dynamic operands
+    # and the cache tree is an OPERAND (its max_len/dtype shape-key the
+    # jit), so the device segment [0, p), the server tail [p, L) and
+    # the monolithic [0, L) all reuse one compilation per shape:
+    #   embed        (params, tokens)                        -> (B, S, D)
+    #   prefill_seg  (params, h, cache0, start, stop)        -> (h, caches)
+    #   decode_seg   (params, x, caches, pos, start, stop)   -> (x, caches)
+    # Unembedding reuses ``h_logits`` with an EMPTY segment (start ==
+    # stop == L): pure final-norm + head, no extra program.
+    def _embed_prog(self):
+        def f(params, tokens):
+            return T.embed_tokens(params, self.cfg, tokens)
+        return self.jitted("embed", lambda: f)
+
+    def _prefill_seg(self):
+        def f(params, h, cache0, start, stop):
+            return T.segment_prefill(params, self.cfg, h, cache0, start,
+                                     stop)
+        return self.jitted("prefill_seg", lambda: f)
+
+    def _decode_seg(self):
+        def f(params, x, caches, pos, start, stop):
+            return T.segment_decode_step(params, self.cfg, x, caches, pos,
+                                         start, stop)
+        return self.jitted("decode_seg", lambda: f)
+
+    def embed(self, tokens, params=None):
+        return self._embed_prog()(
+            self.params if params is None else params, tokens)
+
+    def prefill_segment(self, h, cache0, start, stop, params=None):
+        return self._prefill_seg()(
+            self.params if params is None else params, h, cache0, start,
+            stop)
+
+    def decode_segment(self, x, caches, pos, start, stop, params=None):
+        return self._decode_seg()(
+            self.params if params is None else params, x, caches, pos,
+            start, stop)
+
+    def hidden_logits(self, h, params=None):
+        """Unembed hidden state ``h`` (B, S, D) -> (B, V) at the last
+        position (empty segment of the shared ``h_logits`` program)."""
+        return self._h_logits()(
+            self.params if params is None else params, h,
+            self.num_layers, self.num_layers)
 
     def forward(self, x, params=None):
         return self._tokens_logits()(
@@ -203,13 +279,13 @@ class TransformerBackend(ModelBackend):
         return split_blocks(self._device_blocks(plan.p), plan,
                             self.layer_specs())
 
-    def run_device_segment(self, seg: DeviceSegment, plan, x):
-        # the stacked tree is a full-stack weight copy, so it is built
-        # LAZILY on first execution (split alone — pricing, payload and
-        # memory queries — never pays for it) and cached per DEPLOYED
-        # plan on the backend, bounded: deployments sharing a plan (the
-        # common case — windows price onto few plans) share one copy,
-        # and N concurrent deployments never hold N model-size trees
+    def stacked_for(self, seg: DeviceSegment, plan) -> dict:
+        """The quantized segment scattered into a full stacked tree —
+        built LAZILY on first execution (split alone — pricing, payload
+        and memory queries — never pays for it) and cached per DEPLOYED
+        plan on the backend, bounded: deployments sharing a plan (the
+        common case — windows price onto few plans) share one copy, and
+        N concurrent deployments never hold N model-size trees."""
         key = (plan.p, tuple(int(b) for b in np.asarray(seg.bits_w)),
                int(seg.bits_x))
         cache = self.__dict__.setdefault("_stacked_cache", {})
@@ -217,5 +293,8 @@ class TransformerBackend(ModelBackend):
             while len(cache) >= _STACKED_CACHE_SLOTS:
                 cache.pop(next(iter(cache)))
             cache[key] = self._stack_segment(seg.params)
-        h = self._cut()(cache[key], x, plan.p)
+        return cache[key]
+
+    def run_device_segment(self, seg: DeviceSegment, plan, x):
+        h = self._cut()(self.stacked_for(seg, plan), x, plan.p)
         return fake_quant(h, int(seg.bits_x))

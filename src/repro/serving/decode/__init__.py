@@ -1,0 +1,21 @@
+"""Autoregressive decode serving (DESIGN.md §11): the prefill→decode
+pipeline partitioned at the QPART cut point. The device holds the
+quantized segment's KV cache at the deployed bit-width's storage dtype,
+the server holds the full-precision tail cache, and each decode step
+ships one token's quantized hidden state across the channel.
+
+  * ``cache``    — cache dtype ladder + device-segment footprint math
+  * ``pipeline`` — ``DecodeSession`` / ``GenerationResult``: streaming
+                   greedy decode over the compile-once segment programs
+  * ``batching`` — ``DecodeBatcher``: the fleet engine's per-server
+                   continuous-batching state for concurrent streams
+"""
+from repro.serving.decode.batching import DecodeBatcher, DecodeStream
+from repro.serving.decode.cache import (kv_cache_dtype, segment_cache_bytes,
+                                        tree_cache_bytes)
+from repro.serving.decode.pipeline import DecodeSession, GenerationResult
+
+__all__ = [
+    "DecodeBatcher", "DecodeStream", "DecodeSession", "GenerationResult",
+    "kv_cache_dtype", "segment_cache_bytes", "tree_cache_bytes",
+]

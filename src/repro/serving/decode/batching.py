@@ -1,0 +1,63 @@
+"""Continuous batching state for the fleet engine's decode lane.
+
+Each fleet server owns one ``DecodeBatcher``: the set of live decode
+streams whose tail segment it hosts. The engine advances the batcher in
+ROUNDS — at each DECODE_STEP event every stream whose next token input
+has arrived (``ready_at <= t``) joins the round, and the round's server
+time is priced ONCE for the whole batch:
+
+    round_s = provider.server_seconds(profile, sum_i o2_tok_i,
+                                      max_i srv_bytes_tok_i)
+
+MAC terms add across streams; the weight-stream byte term does NOT —
+the tail weights are read once per round regardless of how many streams
+share it (the continuous-batching amortization that makes the decode
+lane scale). Streams that finish a round re-arm at ``round_end +
+step_lag`` (their device-segment + wire round trip); new streams join
+whenever their prefill pipeline delivers the first decode input.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class DecodeStream:
+    """One live decode stream at a server's tail segment."""
+    index: int                # FleetRecord index
+    token: tuple              # (index, attempt) liveness token
+    device_id: Optional[str]
+    remaining: int            # tokens still to emit
+    ready_at: float           # when the next step's input is at the server
+    o2_tok: float             # server MACs per decode step
+    srv_bytes_tok: float      # server tail bytes per decode step
+    step_lag: float           # device step + wire seconds per round trip
+
+
+@dataclasses.dataclass
+class DecodeBatcher:
+    """Per-server continuous-batching state (engine-owned)."""
+    streams: Dict[int, DecodeStream] = dataclasses.field(default_factory=dict)
+    busy_until: float = 0.0          # current round's end time
+
+    def add(self, stream: DecodeStream) -> None:
+        self.streams[stream.index] = stream
+
+    def remove(self, index: int) -> Optional[DecodeStream]:
+        return self.streams.pop(index, None)
+
+    def due(self, t: float) -> List[DecodeStream]:
+        """Streams joining a round started at ``t``, in admission
+        order (dict order = insertion order — deterministic)."""
+        return [st for st in self.streams.values() if st.ready_at <= t]
+
+    def next_time(self) -> Optional[float]:
+        """Earliest time the next round can start: every state change
+        (stream added/removed, round finished) re-derives this and the
+        engine queues a DECODE_STEP there; stale queued events are
+        detected by re-deriving at fire time."""
+        if not self.streams:
+            return None
+        return max(self.busy_until,
+                   min(st.ready_at for st in self.streams.values()))

@@ -1,0 +1,58 @@
+"""KV-cache dtype plumbing for the partitioned decode pipeline.
+
+The cut splits cache OWNERSHIP: the device holds the caches of its
+quantized segment ``[0, p)``, the server the tail's ``[p, L)``. Each
+side allocates a FULL stacked ``transformer.init_cache`` tree (the
+compile-once segment programs scan all layers and mask the inactive
+ones), but only its own segment's slices are ever written — the rest
+stay zeros, a simulation artifact whose cost is excluded from the
+footprint accounting below.
+
+A quantized device segment stores its cache at the deployed bit-width's
+storage dtype instead of silently upcasting to bf16: ≤8-bit plans get
+``float8_e4m3fn`` (1 B/elem — storage only; attention always computes
+in the query dtype, see ``models.attention.attention_decode``), ≤16-bit
+plans bf16, and full-precision plans the model dtype. SSM recurrent
+state stays f32 regardless (``init_ssm_cache`` pins it) — only the conv
+ring follows the storage dtype.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import num_periods, period_len
+
+
+def kv_cache_dtype(bits, model_dtype=jnp.bfloat16):
+    """Storage dtype of a decode cache deployed at ``bits`` activation
+    bits. ``None``/0 bits means full precision (the server tail)."""
+    if not bits:
+        return model_dtype
+    b = int(math.ceil(float(bits)))
+    if b <= 8:
+        return jnp.float8_e4m3fn
+    if b <= 16:
+        return jnp.bfloat16
+    return model_dtype
+
+
+def tree_cache_bytes(caches) -> int:
+    """Total allocated bytes of an ``init_cache`` tree (all layers)."""
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(caches)))
+
+
+def segment_cache_bytes(cfg, caches, start: int, stop: int) -> int:
+    """Bytes of the cache slices owned by segment ``[start, stop)`` of a
+    stacked ``init_cache`` tree — what the segment's holder actually
+    pays for (layer l lives at index ``l // plen`` of period-position
+    ``l % plen``'s leaves, one of ``nper`` equal slices)."""
+    plen, nper = period_len(cfg), num_periods(cfg)
+    total = 0
+    for layer in range(start, stop):
+        pos = layer % plen
+        total += sum(leaf.nbytes // nper
+                     for leaf in jax.tree.leaves(caches[pos]))
+    return total

@@ -1,0 +1,222 @@
+"""``DecodeSession`` — streaming greedy decode over the compile-once
+segment programs, partitioned at the plan's cut point.
+
+Prefill: the device embeds the prompt and runs its quantized segment
+``[0, p)``, populating its own cache (stored at the deployed bit-width's
+dtype, ``cache.kv_cache_dtype``); the cut hidden state crosses the
+channel quantized at ``bits_x``; the server tail ``[p, L)`` fills its
+full-precision cache and emits the first token (TTFT). Decode: each
+step embeds the previous token on the device, advances the device
+cache, ships ONE token's quantized hidden state, advances the server
+cache and samples greedily. ``p == 0`` (full offload) runs entirely
+server-side — the sampled token never has to cross the radio. ``p ==
+L`` still unembeds server-side (the head weights stay with the server,
+matching ``execute_plan``'s partition semantics).
+
+Every session of every cut point reuses the SAME three jitted programs
+(``TransformerBackend`` decode family): ``(start, stop, pos)`` are
+dynamic operands and the cache tree is an operand, so ``trace_count``
+is constant across cuts at a fixed (batch, prompt, max_len, dtype)
+shape. Stage boundaries are wall-clock fenced (``block_until_ready``)
+— the timings feed ``CalibrationLedger.record_decode``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantizer import fake_quant
+from repro.models import transformer as T
+from repro.serving.decode.cache import (kv_cache_dtype, segment_cache_bytes)
+from repro.serving.errors import ServingError
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    """One streamed generation. ``tokens`` (B, new_tokens) greedy ids;
+    stage seconds are wall-clock, aggregated over the whole stream."""
+    tokens: np.ndarray
+    ttft_s: float                 # prefill → first token
+    t_device_s: float             # device-segment seconds (incl. prefill)
+    t_server_s: float             # server-tail seconds (incl. prefill)
+    t_total_s: float
+    per_token_s: List[float]      # decode-step seconds (len new_tokens-1)
+    device_cache_bytes: int       # resident [0, p) cache footprint
+    server_cache_bytes: int       # resident [p, L) cache footprint
+    device_cache_dtype: str
+
+    @property
+    def new_tokens(self) -> int:
+        return int(self.tokens.shape[1])
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.new_tokens / self.t_total_s if self.t_total_s else 0.0
+
+
+class DecodeSession:
+    """One partitioned prefill→decode stream for a deployed plan.
+
+    ``backend`` must support decode (``TransformerBackend``); ``segment``
+    reuses an already-materialized quantized device segment (pass
+    ``Deployment``'s). Prompts are token ids (B, S) — greedy text decode
+    only; frontend archs (audio/vision) prefill from embeds and are not
+    routed through sessions."""
+
+    def __init__(self, backend, plan, *, max_len: int,
+                 segment=None):
+        if not getattr(backend, "supports_decode", False):
+            raise ServingError(
+                f"{type(backend).__name__} has no autoregressive decode "
+                "path — decode sessions need a transformer backend")
+        self.backend = backend
+        self.plan = plan
+        self.max_len = int(max_len)
+        cfg = backend.cfg
+        self.cfg = cfg
+        self.L = backend.num_layers
+        self.p = int(plan.p)
+        self.model_dtype = getattr(jnp, cfg.dtype)
+        if self.p > 0:
+            seg = segment if segment is not None else backend.split(plan)
+            self.dev_params = backend.stacked_for(seg, plan)
+            self.bits_x = int(seg.bits_x)
+            self.dev_dtype = kv_cache_dtype(self.bits_x, self.model_dtype)
+        else:
+            self.dev_params = None
+            self.bits_x = 0
+            self.dev_dtype = self.model_dtype
+        self.dev_caches = None
+        self.srv_caches = None
+        self.pos = 0
+        self.t_device_s = 0.0
+        self.t_server_s = 0.0
+
+    # -- pricing views ---------------------------------------------------
+    def wire_bits_per_token(self, batch: int) -> float:
+        """Uplink bits per decode step: the quantized cut hidden state
+        plus the 32-bit sampled-token downlink; 0 for full offload (the
+        stream never touches the radio after the prompt upload)."""
+        if self.p == 0:
+            return 0.0
+        return float(self.bits_x * self.cfg.d_model * batch + 32 * batch)
+
+    def device_cache_bytes(self) -> int:
+        if self.dev_caches is None or self.p == 0:
+            return 0
+        return segment_cache_bytes(self.cfg, self.dev_caches, 0, self.p)
+
+    def server_cache_bytes(self) -> int:
+        if self.srv_caches is None:
+            return 0
+        return segment_cache_bytes(self.cfg, self.srv_caches, self.p,
+                                   self.L)
+
+    # -- pipeline stages -------------------------------------------------
+    def prefill(self, prompt):
+        """Run the partitioned prefill; returns the first greedy token
+        (B,) and records stage seconds (TTFT = their sum)."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        b, s = prompt.shape
+        if s + 1 > self.max_len:
+            raise ServingError(
+                f"prompt ({s}) leaves no room in max_len={self.max_len}")
+        t0 = time.perf_counter()
+        if self.p > 0:
+            h0 = self.backend.embed(prompt, params=self.dev_params)
+            cache0 = T.init_cache(self.cfg, b, self.max_len,
+                                  self.dev_dtype)
+            h_dev, self.dev_caches = self.backend.prefill_segment(
+                h0, cache0, 0, self.p, params=self.dev_params)
+            h_in = fake_quant(h_dev, self.bits_x)
+            jax.block_until_ready(h_in)
+        t1 = time.perf_counter()
+        if self.p == 0:
+            h_in = self.backend.embed(prompt)
+        cache0 = T.init_cache(self.cfg, b, self.max_len, self.model_dtype)
+        h_srv, self.srv_caches = self.backend.prefill_segment(
+            h_in, cache0, self.p, self.L)
+        logits = self.backend.hidden_logits(h_srv[:, -1:, :])
+        token = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(token)
+        t2 = time.perf_counter()
+        self.t_device_s += t1 - t0
+        self.t_server_s += t2 - t1
+        self.pos = s
+        return token
+
+    def step(self, token):
+        """One decode step feeding ``token`` (B,); returns the next
+        greedy token (B,)."""
+        if self.pos + 1 > self.max_len:
+            raise ServingError(f"decode past max_len={self.max_len}")
+        tok = jnp.asarray(token, jnp.int32).reshape(-1, 1)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        t0 = time.perf_counter()
+        if self.p > 0:
+            x = self.backend.embed(tok, params=self.dev_params)
+            x_dev, self.dev_caches = self.backend.decode_segment(
+                x, self.dev_caches, pos, 0, self.p,
+                params=self.dev_params)
+            x_in = fake_quant(x_dev, self.bits_x)
+            jax.block_until_ready(x_in)
+        t1 = time.perf_counter()
+        if self.p == 0:
+            x_in = self.backend.embed(tok)
+        x_srv, self.srv_caches = self.backend.decode_segment(
+            x_in, self.srv_caches, pos, self.p, self.L)
+        logits = self.backend.hidden_logits(x_srv)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        jax.block_until_ready(nxt)
+        t2 = time.perf_counter()
+        self.t_device_s += t1 - t0
+        self.t_server_s += t2 - t1
+        self.pos += 1
+        return nxt
+
+    # -- drivers ----------------------------------------------------------
+    def stream(self, prompt, max_new_tokens: int):
+        """Generator of (step_index, token (B,) np.ndarray) — token 0 is
+        the prefill's (TTFT); the session's stage clocks accumulate as
+        the consumer drains it."""
+        token = self.prefill(prompt)
+        yield 0, np.asarray(token)
+        for i in range(1, max_new_tokens):
+            token = self.step(token)
+            yield i, np.asarray(token)
+
+    def generate(self, prompt, max_new_tokens: int,
+                 stream_cb=None) -> GenerationResult:
+        if max_new_tokens < 1:
+            raise ServingError("max_new_tokens must be >= 1")
+        toks: List[np.ndarray] = []
+        per_token: List[float] = []
+        t_start = time.perf_counter()
+        ttft = None
+        last = t_start
+        for i, tok in self.stream(prompt, max_new_tokens):
+            now = time.perf_counter()
+            if i == 0:
+                ttft = now - t_start
+            else:
+                per_token.append(now - last)
+            last = now
+            toks.append(tok)
+            if stream_cb is not None:
+                stream_cb(i, tok)
+        total = time.perf_counter() - t_start
+        return GenerationResult(
+            tokens=np.stack(toks, axis=1),
+            ttft_s=float(ttft),
+            t_device_s=self.t_device_s,
+            t_server_s=self.t_server_s,
+            t_total_s=total,
+            per_token_s=per_token,
+            device_cache_bytes=self.device_cache_bytes(),
+            server_cache_bytes=self.server_cache_bytes(),
+            device_cache_dtype=np.dtype(self.dev_dtype).name)

@@ -133,3 +133,40 @@ class Deployment:
         self.result.accuracy = acc
         self.result.accuracy_degradation = base - acc
         return self.result
+
+    # -- generate (autoregressive decode, DESIGN.md §11) ----------------
+    def decode_session(self, max_len: Optional[int] = None):
+        """A fresh ``DecodeSession`` on this deployment's plan, reusing
+        the lazily-materialized quantized device segment."""
+        from repro.serving.decode import DecodeSession
+        seg = self.device_segment().segment if self.plan.p else None
+        if max_len is None:
+            max_len = getattr(self.backend, "decode_max_len", None) \
+                or 2 * getattr(self.backend, "seq_len", 1)
+        return DecodeSession(self.backend, self.plan, max_len=max_len,
+                             segment=seg)
+
+    def generate(self, prompt, max_new_tokens: int, *,
+                 max_len: Optional[int] = None, stream_cb=None):
+        """Stream ``max_new_tokens`` greedy tokens through the
+        partitioned prefill→decode pipeline (quantized device segment
+        ``[0, p)`` with its cache at the deployed bit-width's dtype,
+        full-precision server tail ``[p, L)``). Wall-clock stage seconds
+        land in ``result.extra['measured_decode']`` — the sample
+        ``CalibrationLedger.record_decode`` regresses per-token rates
+        from. ``stream_cb(i, token)`` observes tokens as they decode.
+        Returns a ``decode.GenerationResult``."""
+        sess = self.decode_session(max_len=max_len)
+        out = sess.generate(prompt, max_new_tokens, stream_cb=stream_cb)
+        self.result.extra["measured_decode"] = {
+            "batch": int(out.tokens.shape[0]),
+            "new_tokens": out.new_tokens,
+            "ttft_s": out.ttft_s,
+            "t_device_s": out.t_device_s,
+            "t_server_s": out.t_server_s,
+            "t_total_s": out.t_total_s,
+            "tokens_per_s": out.tokens_per_s,
+            "device_cache_bytes": out.device_cache_bytes,
+            "device_cache_dtype": out.device_cache_dtype,
+        }
+        return out

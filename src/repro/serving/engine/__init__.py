@@ -3,8 +3,8 @@ arrivals, multi-server queues, device segment-cache state, pluggable
 admission policies, fleet metrics — plus the operational-resilience
 layer: fault injection (device churn, channel degradation), retry with
 dead-letter queue, replayable event journal, MMPP/diurnal traces."""
-from repro.serving.engine.events import (Event, EventQueue,  # noqa: F401
-                                         StageTimeline)
+from repro.serving.engine.events import (DECODE_STEP, Event,  # noqa: F401
+                                         EventQueue, StageTimeline)
 from repro.serving.engine.faults import (DEGRADE,  # noqa: F401
                                          DISCONNECT, RECONNECT, FaultEvent,
                                          FaultInjector, churn_trace,

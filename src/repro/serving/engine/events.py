@@ -1,6 +1,6 @@
 """Event taxonomy + queue of the fleet serving engine (DESIGN.md §8/§10).
 
-The engine is a discrete-event simulator over a continuous clock. Six
+The engine is a discrete-event simulator over a continuous clock. Seven
 event kinds, processed in (time, kind, seq) order so simultaneous events
 resolve deterministically:
 
@@ -24,6 +24,12 @@ resolve deterministically:
                    (queue-depth sample, horizon). Carries the admission
                    token: a cancelled attempt's COMPLETE is stale and
                    skipped.
+  DECODE_STEP    — a server's continuous-batching decode lane can start
+                   its next round (serving/decode/batching.py): every
+                   live stream whose next token input has arrived joins,
+                   the round is priced once for the whole batch. Stale
+                   events (the batcher state changed since queueing) are
+                   detected by re-deriving the round time at fire time.
 
 Admission computes the whole per-request stage timeline analytically
 (``StageTimeline``): plan → uplink (model shipment) → device segment →
@@ -44,10 +50,11 @@ RETRY = 2
 CACHE_INSTALL = 3
 EPOCH = 4
 COMPLETE = 5
+DECODE_STEP = 6
 
 KIND_NAMES = {FAULT: "fault", ARRIVAL: "arrival", RETRY: "retry",
               CACHE_INSTALL: "cache_install", EPOCH: "epoch",
-              COMPLETE: "complete"}
+              COMPLETE: "complete", DECODE_STEP: "decode_step"}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -64,10 +64,11 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.core.cost_model import Channel, CostProvider, ServerProfile
+from repro.serving.decode.batching import DecodeBatcher, DecodeStream
 from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.engine.events import (ARRIVAL, CACHE_INSTALL, COMPLETE,
-                                         EPOCH, FAULT, RETRY, Event,
-                                         EventQueue, StageTimeline)
+                                         DECODE_STEP, EPOCH, FAULT, RETRY,
+                                         Event, EventQueue, StageTimeline)
 from repro.serving.engine.faults import (DEGRADE, DISCONNECT, RECONNECT,
                                          FaultInjector)
 from repro.serving.engine.journal import EventJournal
@@ -75,7 +76,8 @@ from repro.serving.engine.metrics import FleetMetrics, FleetRecord
 from repro.serving.engine.policies import AdmissionPolicy, get_policy
 from repro.serving.engine.retry import (REASON_ABANDONED, REASON_EXHAUSTED,
                                         REASON_SLO, DeadLetter, RetryPolicy)
-from repro.serving.pricing import price_window
+from repro.serving.errors import ServingError
+from repro.serving.pricing import decode_rows_for, price_window
 from repro.serving.simulator import InferenceRequest, ServingResult
 
 SLO_MODES = ("observe", "reject", "degrade")
@@ -191,6 +193,10 @@ class FleetEngine:
         self._attempts: dict = {}            # index -> admissions consumed
         self._inflight: dict = {}            # index -> _Flight
         self._live: set = set()              # valid admission tokens
+        # decode lane (DESIGN.md §11): one continuous batcher per server,
+        # per-(model, level, batch) per-token term rows
+        self._batchers = [DecodeBatcher() for _ in self.servers]
+        self._decode_rows_cache: dict = {}
         self.dead_letters = []
         self._journal = EventJournal(header={
             "policy": self.policy.name, "slo": self.slo,
@@ -222,6 +228,8 @@ class FleetEngine:
                 self._on_epoch(ev.time)
             elif ev.kind == COMPLETE:
                 self._on_complete(ev)
+            elif ev.kind == DECODE_STEP:
+                self._on_decode(ev)
         # trace drained: whoever is still parked never saw a reconnect
         for dev in sorted(self._parked):
             for i in self._parked[dev]:
@@ -296,6 +304,96 @@ class FleetEngine:
         self._horizon = max(self._horizon, ev.time)
         self._journal.record(ev.time, COMPLETE, index=i, stale=False)
 
+    # -- decode lane (DESIGN.md §11) -----------------------------------
+    def _decode_rows(self, req: InferenceRequest, a_star: float):
+        """Per-token candidate term rows of the request's model at its
+        resolved accuracy level — cached per (model, level, batch)."""
+        key = (req.model, a_star, req.batch)
+        rows = self._decode_rows_cache.get(key)
+        if rows is None:
+            m = self.qs.models[req.model]
+            rows = decode_rows_for(m.backend, m.store(self.context),
+                                   a_star, req.batch,
+                                   self.provider.uses_bytes)
+            self._decode_rows_cache[key] = rows
+        return rows
+
+    def _push_decode(self, s: int) -> None:
+        """Queue a DECODE_STEP at server ``s``'s next round time. Called
+        after EVERY batcher mutation; previously queued events whose time
+        no longer matches are detected as stale at fire time."""
+        t_next = self._batchers[s].next_time()
+        if t_next is not None:
+            self._queue.push(Event(t_next, DECODE_STEP, s))
+
+    def _start_stream(self, finish: float, i: int, req: InferenceRequest,
+                      plan, a_star: float, s: int, token: tuple,
+                      n_tok: int) -> None:
+        """Register an admitted request's decode stream with its server's
+        batcher. The prefill delivers token 1 at ``finish`` (TTFT); each
+        later token costs one device-segment step + one hidden-state hop
+        (``step_lag``) before it can join a server round."""
+        rows = self._decode_rows(req, a_star)
+        c = plan.p
+        dev_b, srv_b = rows.bytes_at(c)
+        dt_dev = self.provider.device_seconds(req.device, float(rows.o1[c]),
+                                              dev_b)
+        if plan.p:
+            backend = self.qs.models[req.model].backend
+            wire_tok = (plan.bits_x * backend.cfg.d_model * req.batch
+                        + 32.0 * req.batch)
+            step_lag = float(dt_dev + wire_tok / req.channel.capacity())
+        else:
+            # full offload: the server feeds its own sample back — no
+            # device hop on the decode path
+            step_lag = 0.0
+        self._batchers[s].add(DecodeStream(
+            index=i, token=token, device_id=req.device_id,
+            remaining=n_tok - 1, ready_at=finish + step_lag,
+            o2_tok=float(rows.o2[c]), srv_bytes_tok=srv_b,
+            step_lag=step_lag))
+        self._push_decode(s)
+
+    def _on_decode(self, ev: Event) -> None:
+        """One continuous-batching round at server ``ev.payload``: every
+        stream whose next input has arrived joins, the round is priced
+        once for the batch (MAC terms add, the tail weight-stream term
+        amortizes — ``server_seconds(Σ o2_tok, max srv_bytes_tok)``)."""
+        s = ev.payload
+        batcher = self._batchers[s]
+        t_next = batcher.next_time()
+        if t_next is None or ev.time < t_next:
+            # the batcher mutated since this event was queued — a fresh
+            # event exists at the re-derived time; this one is a no-op
+            self._journal.record(ev.time, DECODE_STEP, server=s, stale=True)
+            return
+        t, srv = ev.time, self.servers[s]
+        due = batcher.due(t)
+        dt = float(self.provider.server_seconds(
+            srv.profile, sum(st.o2_tok for st in due),
+            max(st.srv_bytes_tok for st in due)))
+        t_end = t + dt
+        srv.work_until = max(srv.work_until, t) + dt
+        srv.busy += dt
+        batcher.busy_until = t_end
+        active, finished = [], []
+        for st in due:
+            st.remaining -= 1
+            self._records[st.index].tokens_emitted += 1
+            if st.remaining <= 0:
+                batcher.remove(st.index)
+                self._records[st.index].decode_done = t_end
+                finished.append(st.index)
+                self._queue.push(Event(t_end, COMPLETE,
+                                       (st.index, st.token)))
+            else:
+                st.ready_at = t_end + st.step_lag
+                active.append(st.index)
+        self._journal.record(t, DECODE_STEP, server=s, stale=False,
+                             round_s=dt, batch=len(due), active=active,
+                             finished=finished)
+        self._push_decode(s)
+
     # -- faults --------------------------------------------------------
     def _on_fault(self, ev: Event) -> None:
         f, t = ev.payload, ev.time
@@ -328,15 +426,35 @@ class FleetEngine:
         ship/device/transfer stage (an attempt whose cut activation
         already reached the server — t >= transfer_done — completes
         server-side as committed). Cancellation releases the server
-        reservation and hands the request to the retry policy."""
+        reservation and hands the request to the retry policy.
+
+        Decode streams extend the window: a stream whose device is still
+        feeding the batcher (tokens remaining) is severed even AFTER its
+        prefill reached the server — the next hidden-state hop can never
+        arrive. The prefill's server work stays billed (committed), only
+        the reservation ledger entry is dropped, and the whole attempt
+        retries from scratch. A stream that already emitted its last
+        token (out of the batcher, COMPLETE queued) lands as committed."""
         cancelled = []
         for i in sorted(self._inflight):
             fl = self._inflight[i]
-            if fl.device_id != dev or t >= fl.timeline.transfer_done:
+            if fl.device_id != dev:
                 continue
+            stream = self._batchers[fl.server].remove(i)
+            if t >= fl.timeline.transfer_done and stream is None:
+                continue
+            if stream is not None:
+                self._push_decode(fl.server)
             del self._inflight[i]
             self._live.discard(fl.token)
-            self._release(fl)
+            if t < fl.timeline.transfer_done:
+                self._release(fl)
+            else:
+                # mid-stream severance: no backlog refund, just drop the
+                # reservation ledger entry (mirrors _release sans refund)
+                srv = self.servers[fl.server]
+                if srv.reservations.pop(fl.token, None) is not None:
+                    srv.free = max(srv.reservations.values(), default=0.0)
             self._in_flight -= 1
             self._samples.append((t, self._in_flight))
             rec = self._records[i]
@@ -350,6 +468,9 @@ class FleetEngine:
             rec.backlog_at_admission = 0.0
             rec.queue_delay = 0.0
             rec.degraded_to = None
+            rec.decode_tokens = 0
+            rec.tokens_emitted = 0
+            rec.decode_done = None
             cancelled.append(i)
             self._retry_or_dead_letter(i, t)
         return cancelled
@@ -663,4 +784,23 @@ class FleetEngine:
                                     (req.model, a_star, plan.p), token)))
         self._in_flight += 1
         self._samples.append((t, self._in_flight))
-        self._queue.push(Event(finish, COMPLETE, (pnd.index, token)))
+        # decode streams (DESIGN.md §11): the prefill's finish is token 1
+        # (TTFT); the remaining tokens run through the server's
+        # continuous-batching lane and COMPLETE moves to the last round
+        n_tok = int(req.max_new_tokens)
+        if n_tok > 0:
+            if not getattr(backend, "supports_decode", False):
+                raise ServingError(
+                    f"request {pnd.index} asks for {n_tok} decode tokens "
+                    f"but backend {type(backend).__name__!r} of model "
+                    f"{req.model!r} has no autoregressive decode path")
+            rec.decode_tokens = n_tok
+            rec.tokens_emitted = 1
+        if n_tok > 1:
+            rec.decode_done = None
+            self._start_stream(finish, pnd.index, req, plan, a_star, s,
+                               token, n_tok)
+        else:
+            if n_tok == 1:
+                rec.decode_done = finish
+            self._queue.push(Event(finish, COMPLETE, (pnd.index, token)))

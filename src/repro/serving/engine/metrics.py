@@ -45,6 +45,11 @@ class FleetRecord:
     # (0 = never admitted; > 1 = fault-driven re-admissions)
     faults: int = 0                     # in-flight cancellations suffered
     parked: int = 0                     # times held for a down device
+    # -- decode streams (DESIGN.md §11) --------------------------------
+    decode_tokens: int = 0              # tokens the request streams
+    # (0 = one-shot request; == request.max_new_tokens when admitted)
+    tokens_emitted: int = 0             # tokens the decode lane delivered
+    decode_done: Optional[float] = None  # last-token time (streams only)
 
     @property
     def arrival(self) -> float:
@@ -63,7 +68,19 @@ class FleetRecord:
             and self.drop_reason != REASON_SLO
 
     @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (arrival → prefill finish). For one-shot
+        requests this IS the end-to-end latency."""
+        if self.timeline is None:
+            return None
+        return self.timeline.latency_from(self.arrival)
+
+    @property
     def latency(self) -> Optional[float]:
+        """End-to-end: last decode token for streams (``decode_done``),
+        the prefill/one-shot finish otherwise."""
+        if self.decode_tokens > 1 and self.decode_done is not None:
+            return self.decode_done - self.arrival
         if self.timeline is None:
             return None
         return self.timeline.latency_from(self.arrival)
@@ -71,12 +88,15 @@ class FleetRecord:
     @property
     def deadline_missed(self) -> Optional[bool]:
         """None when the request has no deadline; a dropped request with
-        a deadline counts as missed."""
+        a deadline counts as missed. For decode streams the SLO is on
+        TTFT (the interactive metric) — the stream's tail pace is priced,
+        not promised."""
         if self.request.deadline is None:
             return None
         if self.rejected:
             return True
-        return self.latency > self.request.deadline + 1e-12
+        lat = self.ttft if self.decode_tokens > 1 else self.latency
+        return lat > self.request.deadline + 1e-12
 
 
 @dataclasses.dataclass
@@ -158,6 +178,18 @@ class FleetMetrics:
             return 0.0
         return self.retried() / len(self.records)
 
+    # -- decode aggregates (DESIGN.md §11) -----------------------------
+    def ttfts(self) -> np.ndarray:
+        return np.array([r.ttft for r in self.completed()
+                         if r.ttft is not None], np.float64)
+
+    def tokens_per_s(self) -> float:
+        """Decode-lane throughput: tokens delivered per second of
+        horizon (0.0 for one-shot-only traces)."""
+        if self.horizon <= 0:
+            return 0.0
+        return sum(r.tokens_emitted for r in self.records) / self.horizon
+
     def goodput_rps(self) -> float:
         """USEFUL completions per second of horizon: completed AND (when
         a deadline was attached) inside it — the number fault tolerance
@@ -179,6 +211,15 @@ class FleetMetrics:
             else:
                 assert r.deployment is not None and r.timeline is not None, \
                     f"request {r.index} neither completed nor dropped"
+                if r.decode_tokens:
+                    # a completed stream delivered EVERY token: no
+                    # request may finish with its decode stream dangling
+                    assert r.tokens_emitted == r.decode_tokens, \
+                        (f"request {r.index} completed with "
+                         f"{r.tokens_emitted}/{r.decode_tokens} tokens")
+                    assert r.decode_tokens == 1 \
+                        or r.decode_done is not None, \
+                        f"request {r.index} stream never finished"
         n_dead = sum(1 for r in self.records if r.dead_lettered)
         assert n_dead == len(self.dead_letters), \
             f"{n_dead} dead-lettered records vs {len(self.dead_letters)} DLQ"
@@ -186,6 +227,7 @@ class FleetMetrics:
     # ------------------------------------------------------------------
     def summary(self) -> dict:
         lat = self.latencies()
+        tt = self.ttfts()
         done = self.completed()
         n = len(self.records)
         queue_delays = [r.timeline.server_wait for r in done]
@@ -211,6 +253,11 @@ class FleetMetrics:
             "deadline_miss_rate": self.deadline_miss_rate(),
             "mean_queue_delay_s": round(float(np.mean(queue_delays)), 6)
             if queue_delays else None,
+            "tokens_per_s": round(self.tokens_per_s(), 3),
+            "ttft_p50": round(float(np.percentile(tt, 50)), 6)
+            if len(tt) else None,
+            "ttft_p99": round(float(np.percentile(tt, 99)), 6)
+            if len(tt) else None,
             "mean_queue_depth": round(self.mean_queue_depth(), 3),
             "max_queue_depth": max((s[1] for s in self.queue_samples),
                                    default=0),

@@ -97,6 +97,22 @@ def candidate_rows_for(backend, store, a_star: float, batch: int,
                           ab_cum)
 
 
+def decode_rows_for(backend, store, a_star: float, batch: int,
+                    need_bytes: bool) -> CandidateRows:
+    """Per-TOKEN candidate term vectors of one decode step (DESIGN.md
+    §11): the same assembly as ``candidate_rows_for`` but over the
+    backend's decode-mode layer specs, so ``o1``/``o2`` are MACs per
+    generated token and the byte rows carry the per-step KV read/write
+    traffic. The ``wire`` row is the payload table's shipment row and is
+    NOT the per-token wire — callers price the per-step hidden-state hop
+    themselves (one activation vector, not a sequence)."""
+    specs = backend.decode_layer_specs(batch=batch)
+    o1 = np.concatenate([[0.0], np.cumsum([sp.o for sp in specs])])
+    ab_cum = act_bytes_row(specs) if need_bytes else None
+    return _assemble_rows(specs, store, a_star, False, need_bytes, o1,
+                          ab_cum)
+
+
 def price_window(models, server: ServerProfile,
                  requests: Sequence[InferenceRequest],
                  context: Optional["ReferenceContext"] = None,
@@ -170,6 +186,17 @@ def price_window(models, server: ServerProfile,
         # never win the argmin. p=0 holds no device weights, so a finite
         # column always remains.
         mem = np.stack(mem_rows)
+        # decode-planned backends (decode_max_len set) additionally hold
+        # the device segment's KV cache at max_len for the stream's
+        # lifetime — candidate c's resident footprint is weights + cache
+        # (None for classifiers / prefill-only backends: mask unchanged;
+        # getattr tolerates spec-only backend stubs in tests)
+        kv_fn = getattr(m.backend, "kv_bytes_row", None)
+        kv_rows = [kv_fn(r.batch) if kv_fn else None for r in group]
+        if any(k is not None for k in kv_rows):
+            zero = np.zeros_like(mem[0])
+            mem = mem + np.stack([zero if k is None else k
+                                  for k in kv_rows])
         dev_mem = np.array([r.device.memory_bytes for r in group])
         obj = np.where(mem > dev_mem[:, None], np.inf, obj)
         tab.groups.append((idxs, obj))

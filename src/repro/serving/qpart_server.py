@@ -194,11 +194,18 @@ class QPARTServer:
                 obj = obj + coeff[k] * terms[k][c]
             return obj
 
+        # decode-planned backends additionally hold the device segment's
+        # KV cache at max_len for the stream's lifetime (None otherwise:
+        # the prefill-only feasibility mask is unchanged)
+        kv_row = m.backend.kv_bytes_row(req.batch)
+
+        def feasible(pl):
+            kv = float(kv_row[pl.p]) if kv_row is not None else 0.0
+            return pl.device_memory_bytes + kv <= req.device.memory_bytes
+
         try:
-            plan = store.lookup(
-                req.accuracy_budget, runtime_objective,
-                feasible_fn=lambda pl:
-                    pl.device_memory_bytes <= req.device.memory_bytes)
+            plan = store.lookup(req.accuracy_budget, runtime_objective,
+                                feasible_fn=feasible)
         except ValueError:
             raise PlanInfeasibleError(
                 f"no stored pattern fits device memory "
@@ -280,6 +287,14 @@ class QPARTServer:
         timings (``Deployment.execute`` fills
         ``result.extra['measured']``) into the calibration ledger."""
         self.ledger.record(deployment, self.server)
+
+    def record_decode(self, deployment: Deployment) -> None:
+        """Feed one streamed generation's aggregate stage timings
+        (``Deployment.generate`` fills
+        ``result.extra['measured_decode']``) into the same ledger: the
+        sample regresses N_tokens × the per-token decode terms, so
+        decode and prefill samples sharpen one set of StageRates."""
+        self.ledger.record_decode(deployment, self.server)
 
     def calibrated_provider(self) -> CalibratedCost:
         """Least-squares fit of the ledger → the measurement-calibrated

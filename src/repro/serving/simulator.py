@@ -51,6 +51,11 @@ class InferenceRequest:
     # the engine's segment cache AND fault injection (engine/faults.py)
     attempt_budget: Optional[int] = None  # per-request cap on admission
     # attempts under fault recovery; None = the RetryPolicy default
+    max_new_tokens: int = 0             # autoregressive decode stream
+    # length (DESIGN.md §11): 0 = one-shot (every pre-decode path —
+    # bit-for-bit unchanged); N >= 1 streams N tokens, the first being
+    # the prefill's (TTFT), through the serving server's continuous-
+    # batching decode lane. Needs a decode-capable backend.
 
 
 @dataclasses.dataclass

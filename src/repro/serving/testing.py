@@ -41,6 +41,28 @@ def stub_calibration(srv: QPARTServer, name: str, cfg,
     srv.build_store(name, device, channel, weights)
 
 
+def stub_transformer_calibration(srv: QPARTServer, name: str, cfg,
+                                 device: DeviceProfile, channel: Channel,
+                                 weights: ObjectiveWeights,
+                                 seq_len: int = 32,
+                                 decode_max_len: Optional[int] = None,
+                                 ) -> None:
+    """Register transformer ``cfg`` under ``name`` with synthetic
+    calibration constants (params may stay ``None`` — pricing never
+    touches them) and build its offline store. A non-None
+    ``decode_max_len`` marks the backend decode-planned: KV-cache
+    feasibility and the fleet decode lane activate."""
+    from repro.serving.backends import TransformerBackend
+    srv.register(name, TransformerBackend(cfg, None, seq_len,
+                                          decode_max_len=decode_max_len),
+                 np.zeros((4, seq_len), np.int32), np.zeros(4, np.int32))
+    m = srv.models[name]
+    L = cfg.num_layers
+    m.s_w, m.s_x, m.rho = np.ones(L), np.ones(L), np.full(L, 0.1)
+    m.delta_table = {a: a * 50 for a in srv.levels}
+    srv.build_store(name, device, channel, weights)
+
+
 def stub_classifier_server(configs, server: Optional[ServerProfile] = None,
                            device: Optional[DeviceProfile] = None,
                            channel: Optional[Channel] = None,
