@@ -1,0 +1,169 @@
+"""Fleet-engine scaling sweep (the BENCH_serving.json "fleet_scale"
+trajectory; DESIGN.md §12).
+
+Sweeps trace size x fleet size — N ∈ {10k, 100k, 1M} requests over
+{3, 16, 64} servers — through the engine's scale configuration
+(``journal="off"``, ``records="light"``, vectorized admission, cached
+re-price ladders) and records, per grid point, the simulated-serving
+throughput (requests planned per second of bench wall clock), the wall
+time itself, and the process peak RSS. The 1M x 64 point is asserted to
+complete: that is the scale contract the §12 rework buys.
+
+Arrival rate scales with the fleet (~233 rps per server — the same ~0.85
+utilization the ``fleet`` bench runs at 3 servers), so every grid point
+exercises a loaded fleet rather than an idle one, and the per-point sim
+horizon stays roughly constant down a column. Traces are generated
+vectorized (one RNG draw per attribute column, not per request) so trace
+construction doesn't drown the engine measurement at 10⁶.
+
+  PYTHONPATH=src python -m benchmarks.run --only fleet_scale
+  PYTHONPATH=src python benchmarks/fleet_scale_bench.py --smoke
+"""
+from __future__ import annotations
+
+import pathlib
+import resource
+import time
+
+import numpy as np
+
+from benchmarks.common import update_bench_json
+from repro.configs.classifier import MNIST_MLP
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile)
+from repro.serving.engine import FleetEngine
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+from repro.serving.testing import stub_classifier_server
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serving.json"
+
+GRID_N = (10_000, 100_000, 1_000_000)
+GRID_SERVERS = (3, 16, 64)
+RATE_PER_SERVER = 700.0 / 3     # the fleet bench's ~0.85-utilization point
+EPOCH_S = 0.005
+DEADLINES_S = (0.020, 0.035, 0.060)
+BATCHES = (1, 1, 4)
+BUDGETS = (0.004, 0.01, 0.02)
+
+# same hardware mix as fleet_bench: slow fleet, fast devices, a 200 Mbps
+# channel tier — congestion pushes plans device-side and caches get hits
+DEVICES = [DeviceProfile(f_clock=f) for f in (4e8, 1e9, 2e9)]
+CHANNELS = [Channel(capacity_bps=c) for c in (2e6, 1e7, 2e8)]
+WEIGHTS = ObjectiveWeights()
+SERVER = ServerProfile(f_clock=3e8)
+
+# CI latency contract for the --smoke point (50k x 16). The full 1M
+# points size themselves by measurement, but the smoke tier asserts an
+# absolute wall budget so a hot-path regression fails the build instead
+# of silently doubling CI time. Generous vs the ~10-15s measured here.
+SMOKE_N = 50_000
+SMOKE_SERVERS = 16
+SMOKE_WALL_BUDGET_S = 120.0
+
+
+def _stub_server() -> QPARTServer:
+    return stub_classifier_server([("mnist", MNIST_MLP)], server=SERVER,
+                                  device=DEVICES[0], channel=CHANNELS[1],
+                                  weights=WEIGHTS)
+
+
+def scale_trace(n: int, rate: float, seed: int = 0,
+                device_pool: int = 2000) -> list:
+    """Poisson trace with every attribute drawn as one vectorized column
+    (same request distribution family as ``fleet_bench._trace``)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    bud = rng.integers(len(BUDGETS), size=n)
+    dev = rng.integers(len(DEVICES), size=n)
+    ch = rng.integers(len(CHANNELS), size=n)
+    bat = rng.integers(len(BATCHES), size=n)
+    dl = rng.integers(len(DEADLINES_S), size=n)
+    ids = rng.integers(device_pool, size=n)
+    id_strs = [f"dev-{k}" for k in range(device_pool)]
+    arrivals_l = arrivals.tolist()
+    return [InferenceRequest(
+        "mnist", BUDGETS[bud[i]], DEVICES[dev[i]], CHANNELS[ch[i]], WEIGHTS,
+        batch=BATCHES[bat[i]], arrival_time=arrivals_l[i],
+        deadline=DEADLINES_S[dl[i]], device_id=id_strs[ids[i]])
+        for i in range(n)]
+
+
+def _peak_rss_mb() -> float:
+    # ru_maxrss is KiB on Linux; process-lifetime peak (monotone), so the
+    # sweep runs small -> large and each reading reflects its own point
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def _run_point(srv: QPARTServer, n: int, n_servers: int,
+               seed: int = 0) -> dict:
+    fleet = [ServerProfile(f_clock=SERVER.f_clock)] * n_servers
+    rate = RATE_PER_SERVER * n_servers
+    t0 = time.perf_counter()
+    trace = scale_trace(n, rate, seed=seed,
+                        device_pool=max(200, min(20_000, n // 50)))
+    t_trace = time.perf_counter() - t0
+    engine = FleetEngine(srv, servers=fleet, policy="fcfs", slo="degrade",
+                         epoch_interval=EPOCH_S, journal="off",
+                         records="light")
+    t0 = time.perf_counter()
+    metrics = engine.run(trace)
+    wall = time.perf_counter() - t0
+    s = metrics.summary()
+    assert s["completed"] + s["rejected"] == n
+    return {
+        "bench": "fleet_scale",
+        "requests": n,
+        "servers": n_servers,
+        "arrival_rate_rps": round(rate, 1),
+        "wall_s": round(wall, 2),
+        "trace_gen_s": round(t_trace, 2),
+        "planned_rps_wall": round(n / wall, 1),
+        "sim_horizon_s": round(s["horizon_s"], 2),
+        "peak_rss_mb": round(_peak_rss_mb(), 1),
+        "completed": s["completed"],
+        "rejected": s["rejected"],
+        "deadline_miss_rate": s["deadline_miss_rate"],
+        "utilization": round(float(np.mean(s["server_utilization"])), 4),
+    }
+
+
+def fleet_scale(smoke: bool = False):
+    srv = _stub_server()
+    rows = []
+    if smoke:
+        row = _run_point(srv, SMOKE_N, SMOKE_SERVERS)
+        row["tier"] = "smoke"
+        assert row["wall_s"] < SMOKE_WALL_BUDGET_S, (
+            f"smoke point {SMOKE_N}x{SMOKE_SERVERS} took {row['wall_s']}s "
+            f"(budget {SMOKE_WALL_BUDGET_S}s) — engine hot path regressed")
+        rows.append(row)
+    else:
+        # small -> large so each point's peak-RSS reading is its own
+        for n in GRID_N:
+            for n_servers in GRID_SERVERS:
+                rows.append(_run_point(srv, n, n_servers))
+                print(f"  {n}x{n_servers}: {rows[-1]['wall_s']}s, "
+                      f"{rows[-1]['planned_rps_wall']} req/s wall",
+                      flush=True)
+        # the §12 scale contract: the 10⁶-request, >=50-server point ran
+        assert any(r["requests"] >= 1_000_000 and r["servers"] >= 50
+                   for r in rows)
+        assert len(rows) >= 9
+    update_bench_json(OUT_PATH, "fleet_scale", {
+        "tier": "smoke" if smoke else "full",
+        "grid_requests": list(GRID_N),
+        "grid_servers": list(GRID_SERVERS),
+        "rate_per_server_rps": round(RATE_PER_SERVER, 1),
+        "engine": {"journal": "off", "records": "light",
+                   "admission": "vectorized", "policy": "fcfs",
+                   "slo": "degrade", "epoch_ms": EPOCH_S * 1e3},
+        "rows": rows,
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    for row in fleet_scale(smoke="--smoke" in sys.argv):
+        print(row)

@@ -22,8 +22,9 @@ BENCHES = {}
 
 def _register():
     from benchmarks import (calibration_bench, cost_fidelity_bench,
-                            decode_bench, fleet_bench, kernel_bench,
-                            paper_tables, planner_bench, roofline_report)
+                            decode_bench, fleet_bench, fleet_scale_bench,
+                            kernel_bench, paper_tables, planner_bench,
+                            roofline_report)
     BENCHES.update({
         "fig3_payload": paper_tables.payload,
         "fig5_layerwise": paper_tables.layerwise_cost,
@@ -35,6 +36,7 @@ def _register():
         "serving": calibration_bench.serving,
         "fleet": fleet_bench.fleet,
         "fleet_chaos": fleet_bench.fleet_chaos,
+        "fleet_scale": fleet_scale_bench.fleet_scale,
         "decode": decode_bench.decode,
         "cost_fidelity": cost_fidelity_bench.cost_fidelity,
         "roofline": roofline_report.roofline,
@@ -48,6 +50,9 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset: reduced-depth serving bench + "
                          "full-size fleet bench")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the selected benchmarks under cProfile and "
+                         "print the top-20 cumulative-time hot spots")
     args = ap.parse_args(argv)
     if args.smoke and args.only:
         ap.error("--smoke selects its own benchmark set; drop --only")
@@ -68,15 +73,29 @@ def main(argv=None) -> int:
         # trajectories are always fresh; the cost-fidelity bench
         # refreshes the predicted-vs-measured trajectory (its MNIST
         # setup is shared/cached)
-        names = ["serving", "fleet", "fleet_chaos", "decode",
-                 "cost_fidelity"]
+        from benchmarks import fleet_scale_bench
+        BENCHES["fleet_scale"] = functools.partial(
+            fleet_scale_bench.fleet_scale, smoke=True)
+        # fleet_scale --smoke: one 50k x 16-server point through the
+        # engine's scale configuration with an asserted wall budget —
+        # the §12 hot-path latency contract runs on every CI build
+        names = ["serving", "fleet", "fleet_chaos", "fleet_scale",
+                 "decode", "cost_fidelity"]
     else:
         names = args.only or list(BENCHES)
     all_rows = []
+    profiler = None
+    if args.profile:
+        import cProfile
+        profiler = cProfile.Profile()
     for name in names:
         t0 = time.time()
         print(f"=== {name} ===", flush=True)
+        if profiler is not None:
+            profiler.enable()
         rows = BENCHES[name]()
+        if profiler is not None:
+            profiler.disable()
         all_rows += rows
         keys = list(rows[0].keys()) if rows else []
         out = io.StringIO()
@@ -92,6 +111,10 @@ def main(argv=None) -> int:
             w = csv.DictWriter(f, fieldnames=keys)
             w.writeheader()
             w.writerows(all_rows)
+    if profiler is not None:
+        import pstats
+        print("=== profile: top 20 by cumulative time ===")
+        pstats.Stats(profiler).sort_stats("cumulative").print_stats(20)
     print(f"TOTAL {len(all_rows)} rows from {len(names)} benchmarks")
     return 0
 

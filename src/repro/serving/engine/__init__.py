@@ -2,19 +2,24 @@
 arrivals, multi-server queues, device segment-cache state, pluggable
 admission policies, fleet metrics — plus the operational-resilience
 layer: fault injection (device churn, channel degradation), retry with
-dead-letter queue, replayable event journal, MMPP/diurnal traces."""
-from repro.serving.engine.events import (DECODE_STEP, Event,  # noqa: F401
-                                         EventQueue, StageTimeline)
+dead-letter queue, replayable event journal, MMPP/diurnal traces — and
+the scale core (DESIGN.md §12): bulk-loaded arrivals, columnar records,
+vectorized admission and selectable journaling modes."""
+from repro.serving.engine.events import (DECODE_STEP, ArrivalStream,  # noqa: F401
+                                         Event, EventQueue, StageTimeline)
 from repro.serving.engine.faults import (DEGRADE,  # noqa: F401
                                          DISCONNECT, RECONNECT, FaultEvent,
                                          FaultInjector, churn_trace,
                                          degrade_trace)
 from repro.serving.engine.fleet import (FleetEngine,  # noqa: F401
                                         ServerState)
-from repro.serving.engine.journal import (EventJournal,  # noqa: F401
-                                          JournalEntry)
+from repro.serving.engine.journal import (JOURNAL_MODES,  # noqa: F401
+                                          EventJournal, JournalEntry,
+                                          LightJournal)
 from repro.serving.engine.metrics import (FleetMetrics,  # noqa: F401
                                           FleetRecord)
+from repro.serving.engine.records import (LazyRecords,  # noqa: F401
+                                          RecordStore)
 from repro.serving.engine.policies import (POLICIES,  # noqa: F401
                                            AdmissionPolicy, BalancedPolicy,
                                            EDFPolicy, FCFSPolicy,

@@ -44,6 +44,8 @@ import dataclasses
 import heapq
 import itertools
 
+import numpy as np
+
 FAULT = 0
 ARRIVAL = 1
 RETRY = 2
@@ -59,29 +61,79 @@ KIND_NAMES = {FAULT: "fault", ARRIVAL: "arrival", RETRY: "retry",
 
 @dataclasses.dataclass(frozen=True)
 class Event:
+    """Descriptive form of one event — kept for callers and tests that
+    build events by name; the engine's hot loop moves plain
+    ``(time, kind, payload)`` tuples through ``EventQueue`` instead (no
+    per-event object at 10⁶ scale)."""
     time: float
     kind: int                     # ARRIVAL | CACHE_INSTALL | EPOCH | COMPLETE
     payload: object = None        # kind-specific (request index, cache key…)
 
 
 class EventQueue:
-    """Min-heap of events ordered by (time, kind, insertion seq)."""
+    """Min-heap of bare ``(time, kind, seq, payload)`` tuples ordered by
+    (time, kind, insertion seq) — same total order as the historical
+    Event-object heap, minus the dataclass allocation per push."""
+
+    __slots__ = ("_heap", "_seq")
 
     def __init__(self):
         self._heap = []
         self._seq = itertools.count()
 
-    def push(self, ev: Event) -> None:
-        heapq.heappush(self._heap, (ev.time, ev.kind, next(self._seq), ev))
+    def push(self, time: float, kind: int, payload=None) -> None:
+        heapq.heappush(self._heap, (time, kind, next(self._seq), payload))
 
-    def pop(self) -> Event:
-        return heapq.heappop(self._heap)[-1]
+    def push_event(self, ev: Event) -> None:
+        self.push(ev.time, ev.kind, ev.payload)
+
+    def pop(self) -> tuple:
+        """-> (time, kind, payload) of the earliest event."""
+        t, kind, _, payload = heapq.heappop(self._heap)
+        return t, kind, payload
+
+    def peek_key(self):
+        """(time, kind) of the head event, or None when empty — what the
+        engine's sorted-arrival cursor merges against."""
+        if not self._heap:
+            return None
+        head = self._heap[0]
+        return head[0], head[1]
 
     def __len__(self) -> int:
         return len(self._heap)
 
     def __bool__(self) -> bool:
         return bool(self._heap)
+
+
+class ArrivalStream:
+    """Bulk-loaded arrival cursor: ONE stable argsort over the trace's
+    arrival times replaces 10⁶ individual ``heappush``es. The engine
+    merges the cursor against the heap lexicographically on
+    (time, kind): an arrival fires strictly before any same-time heap
+    event of a later kind, and after FAULT (kind 0) at the same instant
+    — exactly the order the old all-in-one heap produced, because no
+    ARRIVAL ever lived alongside another ARRIVAL in the heap (stable
+    sort preserves trace order for ties, matching insertion seq)."""
+
+    __slots__ = ("times", "order", "pos", "n")
+
+    def __init__(self, times):
+        t = np.asarray(times, dtype=np.float64)
+        self.order = np.argsort(t, kind="stable")
+        self.times = t[self.order]
+        self.pos = 0
+        self.n = int(t.shape[0])
+
+    def __len__(self) -> int:
+        return self.n - self.pos
+
+    def pop(self) -> tuple:
+        """-> (arrival time, trace index) of the next arrival."""
+        i = self.pos
+        self.pos = i + 1
+        return float(self.times[i]), int(self.order[i])
 
 
 @dataclasses.dataclass

@@ -1,4 +1,5 @@
-"""Event-driven fleet serving engine (DESIGN.md §8, resilience §10).
+"""Event-driven fleet serving engine (DESIGN.md §8, resilience §10,
+scale §12).
 
 Runs a discrete-event loop over timestamped ``InferenceRequest`` arrivals
 against a MULTI-SERVER fleet: plan → uplink (model shipment) → device
@@ -54,6 +55,17 @@ attempt burned — until reconnect, and park forever becomes the
 ``disconnect_abandoned`` dead letter when the trace drains. Every event
 processed lands in a replayable ``EventJournal``; with no faults
 injected the engine is bit-for-bit the sunny-day engine of §8.
+
+Scale (DESIGN.md §12): the hot loop is built for 10⁶-request traces —
+arrivals bulk-load through one stable argsort (``ArrivalStream``)
+instead of a heappush per request, per-request facts live in a columnar
+``RecordStore``, the admission argmin runs as one (servers × candidates)
+masked matrix op (``admission="vectorized"``; the historical scalar loop
+survives as ``admission="reference"`` and is asserted decision-for-
+decision identical), the degrade/retry ladders re-price against cached
+one-row tables, and ``journal="light"|"off"`` drop journaling overhead.
+Every knob defaults to the bit-for-bit path (vectorized admission IS
+bit-for-bit; it's locked, not trusted).
 """
 from __future__ import annotations
 
@@ -68,12 +80,16 @@ from repro.serving.decode.batching import DecodeBatcher, DecodeStream
 from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.engine.events import (ARRIVAL, CACHE_INSTALL, COMPLETE,
                                          DECODE_STEP, EPOCH, FAULT, RETRY,
-                                         Event, EventQueue, StageTimeline)
+                                         ArrivalStream, EventQueue,
+                                         StageTimeline)
 from repro.serving.engine.faults import (DEGRADE, DISCONNECT, RECONNECT,
                                          FaultInjector)
-from repro.serving.engine.journal import EventJournal
-from repro.serving.engine.metrics import FleetMetrics, FleetRecord
+from repro.serving.engine.journal import (JOURNAL_MODES, EventJournal,
+                                          LightJournal)
+from repro.serving.engine.metrics import FleetMetrics
 from repro.serving.engine.policies import AdmissionPolicy, get_policy
+from repro.serving.engine.records import (DROP_CODES, LazyRecords,
+                                          RecordStore)
 from repro.serving.engine.retry import (REASON_ABANDONED, REASON_EXHAUSTED,
                                         REASON_SLO, DeadLetter, RetryPolicy)
 from repro.serving.errors import ServingError
@@ -81,6 +97,8 @@ from repro.serving.pricing import decode_rows_for, price_window
 from repro.serving.simulator import InferenceRequest, ServingResult
 
 SLO_MODES = ("observe", "reject", "degrade")
+RECORD_MODES = ("full", "light")
+ADMISSION_MODES = ("vectorized", "reference")
 
 
 @dataclasses.dataclass
@@ -123,6 +141,25 @@ class FleetEngine:
     one epoch/window); ``retry`` the fault-recovery ``RetryPolicy``
     (default ``RetryPolicy()`` — inert without faults); ``faults`` a
     ``FaultInjector`` or plain ``FaultEvent`` sequence.
+
+    Scale knobs (DESIGN.md §12) — every default is the full-fidelity
+    path, and every non-default is decision-for-decision identical
+    (only cheaper bookkeeping):
+
+    ``journal``   — "full" (replayable ``EventJournal``), "light"
+                    (columnar time/kind tape), "off" (no journal object;
+                    ``metrics.journal`` is None).
+    ``records``   — "full" keeps per-request ``Deployment`` objects;
+                    "light" skips result assembly (views carry
+                    ``deployment=None``; stage math identical).
+    ``admission`` — "vectorized" (one masked (servers × candidates)
+                    argmin per admission), "reference" (the historical
+                    per-server scalar loop, kept as the equivalence
+                    oracle).
+    ``reprice_cache`` — memoize the degrade/retry ladders' one-row
+                    ``price_window`` tables per (model, level, batch,
+                    device, effective channel, weights, cached) for the
+                    run; False re-prices fresh per rung (the oracle).
     """
 
     def __init__(self, qpart_server, servers: Optional[Sequence[ServerProfile]] = None,
@@ -130,9 +167,21 @@ class FleetEngine:
                  epoch_interval: float = 0.0,
                  provider: Optional[CostProvider] = None,
                  retry: Optional[RetryPolicy] = None,
-                 faults: Optional[FaultInjector] = None):
+                 faults: Optional[FaultInjector] = None,
+                 journal: str = "full", records: str = "full",
+                 admission: str = "vectorized",
+                 reprice_cache: bool = True):
         if slo not in SLO_MODES:
             raise ValueError(f"slo must be one of {SLO_MODES}, got {slo!r}")
+        if journal not in JOURNAL_MODES:
+            raise ValueError(f"journal must be one of {JOURNAL_MODES}, "
+                             f"got {journal!r}")
+        if records not in RECORD_MODES:
+            raise ValueError(f"records must be one of {RECORD_MODES}, "
+                             f"got {records!r}")
+        if admission not in ADMISSION_MODES:
+            raise ValueError(f"admission must be one of {ADMISSION_MODES}, "
+                             f"got {admission!r}")
         self.qs = qpart_server
         profiles = list(servers) if servers is not None \
             else [qpart_server.server]
@@ -144,6 +193,12 @@ class FleetEngine:
         self.slo = slo
         self.epoch_interval = float(epoch_interval)
         self.context: Optional[ReferenceContext] = None
+        self.journal_mode = journal
+        self.records_mode = records
+        self.admission_mode = admission
+        self._reprice_enabled = bool(reprice_cache)
+        self._choose = self._choose_vectorized \
+            if admission == "vectorized" else self._choose_reference
         # CostModel v2: pricing, SLO finish estimates, reservations and
         # breakdowns all run through the provider (default: the
         # qpart_server's — AnalyticCost unless overridden, e.g. with a
@@ -176,21 +231,23 @@ class FleetEngine:
         self.context = context
         self.servers = [ServerState(p) for p in self._profiles]
         self.caches = {}
-        records = [FleetRecord(i, r) for i, r in enumerate(requests)]
-        self._records = records
+        st = RecordStore(requests, full=self.records_mode == "full")
+        self._st = st
         self._queue = EventQueue()
         self._pending: List[_Pending] = []
         self._epochs = set()
         self._admit_rank = 0
         self._in_flight = 0
-        self._samples: List[tuple] = []
+        # queue-depth samples as growing columns (one per commit/finish)
+        self._s_t = np.empty(256, dtype=np.float64)
+        self._s_d = np.empty(256, dtype=np.int64)
+        self._s_len = 0
         self._horizon = 0.0
         # fault-tolerance state (all per-run)
         self._down: set = set()              # disconnected device_ids
         self._parked: dict = {}              # device_id -> [indices]
         self._channel_factor: dict = {}      # device_id -> capacity factor
         self._eff_channels: dict = {}        # (channel, factor) -> Channel
-        self._attempts: dict = {}            # index -> admissions consumed
         self._inflight: dict = {}            # index -> _Flight
         self._live: set = set()              # valid admission tokens
         # decode lane (DESIGN.md §11): one continuous batcher per server,
@@ -198,51 +255,102 @@ class FleetEngine:
         self._batchers = [DecodeBatcher() for _ in self.servers]
         self._decode_rows_cache: dict = {}
         self.dead_letters = []
-        self._journal = EventJournal(header={
+        # per-run pricing caches (§12). All keyed through the shared
+        # ``_price_cache``'s stable CandidateRows identities — dropping
+        # the whole set at run start is the invalidation story.
+        self._price_cache: dict = {}         # price_window row/spec cache
+        self._reprice_tables: dict = {}      # ladder one-row WindowTables
+        self._corr_cache: dict = {}          # (id(rows), weights, profile)
+        self._tsrv_cache: dict = {}          # (id(rows), profile)
+        self._tsrv_stacks: dict = {}         # id(rows) -> (S, C) matrix
+        self._corr_stacks: dict = {}         # (id(rows), weights) -> matrix
+        self._tdev_cache: dict = {}          # (id(rows), device)
+        self._order_cache = None             # least-loaded server order
+        self._stores: dict = {}              # model name -> OfflineStore
+        # the fleet's heterogeneity layout is fixed for the run: which
+        # servers price off the reference row directly (profile IS the
+        # reference object) vs through a delta correction
+        ref = self.servers[0].profile
+        self._nonref_idx = np.array(
+            [s for s in range(len(self.servers))
+             if self.servers[s].profile is not ref], dtype=np.intp)
+        self._homogeneous = self._nonref_idx.size == 0
+        header = {
             "policy": self.policy.name, "slo": self.slo,
             "epoch_interval": self.epoch_interval,
             "servers": len(self.servers),
             "retry": dataclasses.asdict(self.retry),
-            "requests": len(records), "faults": len(self.faults)})
-        for i, r in enumerate(requests):
-            self._queue.push(Event(float(r.arrival_time), ARRIVAL, i))
+            "requests": st.n, "faults": len(self.faults)}
+        if self.journal_mode == "full":
+            self._journal = EventJournal(header=header)
+        elif self.journal_mode == "light":
+            self._journal = LightJournal(header=header)
+        else:
+            self._journal = None
         for f in self.faults.events:
-            self._queue.push(Event(float(f.time), FAULT, f))
-        while self._queue:
-            ev = self._queue.pop()
-            if ev.kind == ARRIVAL:
-                self._on_arrival(ev)
-            elif ev.kind == RETRY:
-                self._on_retry(ev)
-            elif ev.kind == FAULT:
-                self._on_fault(ev)
-            elif ev.kind == CACHE_INSTALL:
-                dev_id, key, token = ev.payload
+            self._queue.push(float(f.time), FAULT, f)
+        arrivals = ArrivalStream(st.arrival)
+        queue = self._queue
+        # sorted-merge dispatch: the arrival cursor races the heap on
+        # (time, kind) — no ARRIVAL is ever IN the heap, so strict
+        # lexicographic comparison reproduces the historical all-heap
+        # order exactly (FAULT=0 still preempts same-time arrivals)
+        while True:
+            if arrivals.pos < arrivals.n:
+                key = queue.peek_key()
+                if key is None or (arrivals.times[arrivals.pos], ARRIVAL) \
+                        < key:
+                    t, i = arrivals.pop()
+                    self._on_arrival(t, i)
+                    continue
+            elif not queue:
+                break
+            t, kind, payload = queue.pop()
+            if kind == COMPLETE:
+                self._on_complete(t, payload)
+            elif kind == EPOCH:
+                self._on_epoch(t)
+            elif kind == CACHE_INSTALL:
+                dev_id, key, token = payload
                 applied = token in self._live
                 if applied:
                     self.caches.setdefault(dev_id, set()).add(key)
-                self._journal.record(ev.time, CACHE_INSTALL, device=dev_id,
-                                     model=key[0], level=key[1], p=key[2],
-                                     applied=applied)
-            elif ev.kind == EPOCH:
-                self._on_epoch(ev.time)
-            elif ev.kind == COMPLETE:
-                self._on_complete(ev)
-            elif ev.kind == DECODE_STEP:
-                self._on_decode(ev)
+                if self._journal is not None:
+                    self._journal.record(t, CACHE_INSTALL, device=dev_id,
+                                         model=key[0], level=key[1],
+                                         p=key[2], applied=applied)
+            elif kind == DECODE_STEP:
+                self._on_decode(t, payload)
+            elif kind == RETRY:
+                self._on_retry(t, payload)
+            elif kind == FAULT:
+                self._on_fault(t, payload)
         # trace drained: whoever is still parked never saw a reconnect
         for dev in sorted(self._parked):
             for i in self._parked[dev]:
                 self._dead_letter(i, REASON_ABANDONED, self._horizon)
         self._parked = {}
-        return FleetMetrics(records=records,
+        samples = np.stack([self._s_t[:self._s_len],
+                            self._s_d[:self._s_len].astype(np.float64)],
+                           axis=1)
+        return FleetMetrics(records=LazyRecords(st),
                             server_busy=[s.busy for s in self.servers],
-                            queue_samples=self._samples,
+                            queue_samples=samples,
                             horizon=self._horizon,
                             dead_letters=list(self.dead_letters),
-                            journal=self._journal)
+                            journal=self._journal,
+                            store=st)
 
     # ------------------------------------------------------------------
+    def _sample(self, t: float) -> None:
+        i = self._s_len
+        if i == self._s_t.shape[0]:
+            self._s_t = np.concatenate([self._s_t, np.empty_like(self._s_t)])
+            self._s_d = np.concatenate([self._s_d, np.empty_like(self._s_d)])
+        self._s_t[i] = t
+        self._s_d[i] = self._in_flight
+        self._s_len = i + 1
+
     def _schedule_epoch(self, t: float) -> None:
         """Queue the decision epoch covering instant ``t``. Epoch
         bucketing is EXACT: the smallest k with k·interval >= t, decided
@@ -260,49 +368,53 @@ class FleetEngine:
             t = k * iv
         if t not in self._epochs:
             self._epochs.add(t)
-            self._queue.push(Event(t, EPOCH))
+            self._queue.push(t, EPOCH, None)
 
-    def _on_arrival(self, ev: Event) -> None:
-        i = ev.payload
-        req = self._records[i].request
+    def _on_arrival(self, t: float, i: int) -> None:
+        req = self._st.requests[i]
         parked = req.device_id is not None and req.device_id in self._down
         if parked:
             self._parked.setdefault(req.device_id, []).append(i)
-            self._records[i].parked += 1
+            self._st.parked[i] += 1
         else:
-            self._pending.append(_Pending(i, req, ev.time))
-            self._schedule_epoch(ev.time)
-        self._journal.record(ev.time, ARRIVAL, index=i, parked=parked)
+            self._pending.append(_Pending(i, req, t))
+            self._schedule_epoch(t)
+        if self._journal is not None:
+            self._journal.record(t, ARRIVAL, index=i, parked=parked)
 
-    def _on_retry(self, ev: Event) -> None:
-        i, attempt = ev.payload
-        req = self._records[i].request
+    def _on_retry(self, t: float, payload) -> None:
+        i, attempt = payload
+        req = self._st.requests[i]
         parked = req.device_id is not None and req.device_id in self._down
         if parked:
             self._parked.setdefault(req.device_id, []).append(i)
-            self._records[i].parked += 1
+            self._st.parked[i] += 1
         else:
             # deadline stays absolute: the pending entry keeps the
             # ORIGINAL arrival, so EDF/SLO see arrival + deadline
             self._pending.append(_Pending(i, req, req.arrival_time))
-            self._schedule_epoch(ev.time)
-        self._journal.record(ev.time, RETRY, index=i, attempt=attempt,
-                             parked=parked)
+            self._schedule_epoch(t)
+        if self._journal is not None:
+            self._journal.record(t, RETRY, index=i, attempt=attempt,
+                                 parked=parked)
 
-    def _on_complete(self, ev: Event) -> None:
-        i, token = ev.payload
+    def _on_complete(self, t: float, payload) -> None:
+        i, token = payload
         if token not in self._live:
             # a fault cancelled this attempt after its COMPLETE was
             # queued — a non-event, but journaled so replay sees it
-            self._journal.record(ev.time, COMPLETE, index=i, stale=True)
+            if self._journal is not None:
+                self._journal.record(t, COMPLETE, index=i, stale=True)
             return
         self._live.discard(token)
         fl = self._inflight.pop(i)
         self.servers[fl.server].reservations.pop(token, None)
         self._in_flight -= 1
-        self._samples.append((ev.time, self._in_flight))
-        self._horizon = max(self._horizon, ev.time)
-        self._journal.record(ev.time, COMPLETE, index=i, stale=False)
+        self._sample(t)
+        if t > self._horizon:
+            self._horizon = t
+        if self._journal is not None:
+            self._journal.record(t, COMPLETE, index=i, stale=False)
 
     # -- decode lane (DESIGN.md §11) -----------------------------------
     def _decode_rows(self, req: InferenceRequest, a_star: float):
@@ -324,7 +436,7 @@ class FleetEngine:
         no longer matches are detected as stale at fire time."""
         t_next = self._batchers[s].next_time()
         if t_next is not None:
-            self._queue.push(Event(t_next, DECODE_STEP, s))
+            self._queue.push(t_next, DECODE_STEP, s)
 
     def _start_stream(self, finish: float, i: int, req: InferenceRequest,
                       plan, a_star: float, s: int, token: tuple,
@@ -354,72 +466,76 @@ class FleetEngine:
             step_lag=step_lag))
         self._push_decode(s)
 
-    def _on_decode(self, ev: Event) -> None:
-        """One continuous-batching round at server ``ev.payload``: every
-        stream whose next input has arrived joins, the round is priced
-        once for the batch (MAC terms add, the tail weight-stream term
-        amortizes — ``server_seconds(Σ o2_tok, max srv_bytes_tok)``)."""
-        s = ev.payload
+    def _on_decode(self, t: float, s: int) -> None:
+        """One continuous-batching round at server ``s``: every stream
+        whose next input has arrived joins, the round is priced once for
+        the batch (MAC terms add, the tail weight-stream term amortizes
+        — ``server_seconds(Σ o2_tok, max srv_bytes_tok)``)."""
         batcher = self._batchers[s]
         t_next = batcher.next_time()
-        if t_next is None or ev.time < t_next:
+        if t_next is None or t < t_next:
             # the batcher mutated since this event was queued — a fresh
             # event exists at the re-derived time; this one is a no-op
-            self._journal.record(ev.time, DECODE_STEP, server=s, stale=True)
+            if self._journal is not None:
+                self._journal.record(t, DECODE_STEP, server=s, stale=True)
             return
-        t, srv = ev.time, self.servers[s]
+        st, srv = self._st, self.servers[s]
         due = batcher.due(t)
         dt = float(self.provider.server_seconds(
-            srv.profile, sum(st.o2_tok for st in due),
-            max(st.srv_bytes_tok for st in due)))
+            srv.profile, sum(stm.o2_tok for stm in due),
+            max(stm.srv_bytes_tok for stm in due)))
         t_end = t + dt
         srv.work_until = max(srv.work_until, t) + dt
         srv.busy += dt
+        self._order_cache = None
         batcher.busy_until = t_end
         active, finished = [], []
-        for st in due:
-            st.remaining -= 1
-            self._records[st.index].tokens_emitted += 1
-            if st.remaining <= 0:
-                batcher.remove(st.index)
-                self._records[st.index].decode_done = t_end
-                finished.append(st.index)
-                self._queue.push(Event(t_end, COMPLETE,
-                                       (st.index, st.token)))
+        for stm in due:
+            stm.remaining -= 1
+            st.tokens_emitted[stm.index] += 1
+            if stm.remaining <= 0:
+                batcher.remove(stm.index)
+                st.decode_done[stm.index] = t_end
+                finished.append(stm.index)
+                self._queue.push(t_end, COMPLETE, (stm.index, stm.token))
             else:
-                st.ready_at = t_end + st.step_lag
-                active.append(st.index)
-        self._journal.record(t, DECODE_STEP, server=s, stale=False,
-                             round_s=dt, batch=len(due), active=active,
-                             finished=finished)
+                stm.ready_at = t_end + stm.step_lag
+                active.append(stm.index)
+        if self._journal is not None:
+            self._journal.record(t, DECODE_STEP, server=s, stale=False,
+                                 round_s=dt, batch=len(due), active=active,
+                                 finished=finished)
         self._push_decode(s)
 
     # -- faults --------------------------------------------------------
-    def _on_fault(self, ev: Event) -> None:
-        f, t = ev.payload, ev.time
+    def _on_fault(self, t: float, f) -> None:
         if f.kind == DEGRADE:
             if f.factor == 1.0:
                 self._channel_factor.pop(f.device_id, None)
             else:
                 self._channel_factor[f.device_id] = f.factor
-            self._journal.record(t, FAULT, fault=DEGRADE,
-                                 device=f.device_id, factor=f.factor)
+            if self._journal is not None:
+                self._journal.record(t, FAULT, fault=DEGRADE,
+                                     device=f.device_id, factor=f.factor)
         elif f.kind == DISCONNECT:
             self._down.add(f.device_id)
             cancelled = self._cancel_device(f.device_id, t)
-            self._journal.record(t, FAULT, fault=DISCONNECT,
-                                 device=f.device_id, cancelled=cancelled)
+            if self._journal is not None:
+                self._journal.record(t, FAULT, fault=DISCONNECT,
+                                     device=f.device_id, cancelled=cancelled)
         elif f.kind == RECONNECT:
             self._down.discard(f.device_id)
             released = self._parked.pop(f.device_id, [])
             for i in released:
                 self._pending.append(
-                    _Pending(i, self._records[i].request,
-                             self._records[i].request.arrival_time))
+                    _Pending(i, self._st.requests[i],
+                             self._st.requests[i].arrival_time))
             if released:
                 self._schedule_epoch(t)
-            self._journal.record(t, FAULT, fault=RECONNECT,
-                                 device=f.device_id, released=list(released))
+            if self._journal is not None:
+                self._journal.record(t, FAULT, fault=RECONNECT,
+                                     device=f.device_id,
+                                     released=list(released))
 
     def _cancel_device(self, dev: str, t: float) -> list:
         """Cancel every in-flight attempt of ``dev`` still in its
@@ -436,6 +552,7 @@ class FleetEngine:
         retries from scratch. A stream that already emitted its last
         token (out of the batcher, COMPLETE queued) lands as committed."""
         cancelled = []
+        st = self._st
         for i in sorted(self._inflight):
             fl = self._inflight[i]
             if fl.device_id != dev:
@@ -456,21 +573,11 @@ class FleetEngine:
                 if srv.reservations.pop(fl.token, None) is not None:
                     srv.free = max(srv.reservations.values(), default=0.0)
             self._in_flight -= 1
-            self._samples.append((t, self._in_flight))
-            rec = self._records[i]
-            rec.faults += 1
+            self._sample(t)
             # the failed attempt's deployment is void — reset the
             # per-attempt fields; a successful retry repopulates them
-            rec.deployment = None
-            rec.timeline = None
-            rec.server = -1
-            rec.start_order = -1
-            rec.backlog_at_admission = 0.0
-            rec.queue_delay = 0.0
-            rec.degraded_to = None
-            rec.decode_tokens = 0
-            rec.tokens_emitted = 0
-            rec.decode_done = None
+            st.reset_attempt(i)
+            st.faults[i] += 1
             cancelled.append(i)
             self._retry_or_dead_letter(i, t)
         return cancelled
@@ -486,23 +593,23 @@ class FleetEngine:
             srv.free = max(srv.reservations.values(), default=0.0)
         srv.work_until -= fl.t_server
         srv.busy -= fl.t_server
+        self._order_cache = None
 
     def _retry_or_dead_letter(self, i: int, t: float) -> None:
-        rec = self._records[i]
-        used = self._attempts.get(i, 0)
-        if used >= self.retry.budget_for(rec.request):
+        used = int(self._st.attempts[i])
+        if used >= self.retry.budget_for(self._st.requests[i]):
             self._dead_letter(i, REASON_EXHAUSTED, t)
         else:
-            self._queue.push(Event(t + self.retry.backoff(used + 1),
-                                   RETRY, (i, used + 1)))
+            self._queue.push(t + self.retry.backoff(used + 1),
+                             RETRY, (i, used + 1))
 
     def _dead_letter(self, i: int, reason: str, t: float) -> None:
-        rec = self._records[i]
-        rec.rejected = True
-        rec.drop_reason = reason
-        rec.attempts = self._attempts.get(i, 0)
-        self.dead_letters.append(DeadLetter(i, reason, t, rec.attempts,
-                                            rec.request.device_id))
+        st = self._st
+        st.rejected[i] = True
+        st.drop_code[i] = DROP_CODES[reason]
+        self.dead_letters.append(DeadLetter(i, reason, t,
+                                            int(st.attempts[i]),
+                                            st.requests[i].device_id))
 
     # -- pricing views -------------------------------------------------
     def _effective_channel(self, req: InferenceRequest) -> Channel:
@@ -552,26 +659,28 @@ class FleetEngine:
                 dev = p.request.device_id
                 if dev is not None and dev in self._down:
                     self._parked.setdefault(dev, []).append(p.index)
-                    self._records[p.index].parked += 1
+                    self._st.parked[p.index] += 1
                     parked.append(p.index)
                 else:
                     keep.append(p)
             pending = keep
         if not pending:
-            if parked:
+            if parked and self._journal is not None:
                 self._journal.record(t, EPOCH, admitted=[], parked=parked)
             return
         pricing = [self._pricing_request(p.request) for p in pending]
         tab = price_window(self.qs.models, self.servers[0].profile, pricing,
-                           context=self.context, provider=self.provider)
+                           context=self.context, provider=self.provider,
+                           cache=self._price_cache)
         ref = self.servers[0].profile
-        t_server_rows = [self.provider.server_seconds(ref, rows.o2,
-                                                      rows.srv_bytes)
-                         for rows in tab.rows]
-        admitted = []
-        for j in self.policy.order(pending, tab, t_server_rows):
-            admitted.append(self._admit(t, pending[j], tab, j))
-        self._journal.record(t, EPOCH, admitted=admitted, parked=parked)
+        t_server_rows = [self._tsrv(rows, ref) for rows in tab.rows]
+        order = self.policy.order(pending, tab, t_server_rows)
+        if self._journal is not None:
+            admitted = [self._admit(t, pending[j], tab, j) for j in order]
+            self._journal.record(t, EPOCH, admitted=admitted, parked=parked)
+        else:
+            for j in order:
+                self._admit(t, pending[j], tab, j)
 
     # ------------------------------------------------------------------
     def _cached_candidates(self, req: InferenceRequest,
@@ -602,6 +711,56 @@ class FleetEngine:
             wire[cached] = px[cached]
         return row, wire
 
+    # -- per-run row-keyed caches (§12). Keys lean on the stable
+    # CandidateRows identities the shared price-window cache guarantees
+    # (the rows objects live in self._price_cache for the whole run, so
+    # id() cannot be recycled). ------------------------------------------
+    def _tsrv(self, rows, profile: ServerProfile) -> np.ndarray:
+        """server_seconds(profile, o2, srv_bytes) — cached per
+        (rows identity, profile)."""
+        key = (id(rows), profile)
+        vec = self._tsrv_cache.get(key)
+        if vec is None:
+            vec = self.provider.server_seconds(profile, rows.o2,
+                                               rows.srv_bytes)
+            self._tsrv_cache[key] = vec
+        return vec
+
+    def _tdev(self, rows, device) -> np.ndarray:
+        """device_seconds(device, o1, dev_bytes) — cached per
+        (rows identity, device)."""
+        key = (id(rows), device)
+        vec = self._tdev_cache.get(key)
+        if vec is None:
+            vec = self.provider.device_seconds(device, rows.o1,
+                                               rows.dev_bytes)
+            self._tdev_cache[key] = vec
+        return vec
+
+    def _correction(self, req: InferenceRequest, profile: ServerProfile,
+                    rows) -> np.ndarray:
+        """server_correction(weights, ref, profile, rows) — cached per
+        (rows identity, weights, profile); the reference profile is
+        fixed for the run."""
+        key = (id(rows), req.weights, profile)
+        vec = self._corr_cache.get(key)
+        if vec is None:
+            vec = self.provider.server_correction(
+                req.weights, self.servers[0].profile, profile, rows)
+            self._corr_cache[key] = vec
+        return vec
+
+    def _server_order(self) -> list:
+        """least_loaded's server ordering, hoisted: backlogs only change
+        at commit/release/decode-round, so the sort is computed once per
+        backlog change instead of once per pending request."""
+        order = self._order_cache
+        if order is None:
+            order = sorted(range(len(self.servers)),
+                           key=lambda s: (self.servers[s].work_until, s))
+            self._order_cache = order
+        return order
+
     def _finish_vec(self, req: InferenceRequest, t: float, rows, wire_vec,
                     px_row, srv: ServerState) -> np.ndarray:
         """Estimated wall-clock completion per candidate on ``srv`` under
@@ -619,11 +778,114 @@ class FleetEngine:
         return start + self.provider.server_seconds(srv.profile, o2,
                                                     rows.srv_bytes)
 
+    def _ready_vec(self, req: InferenceRequest, t: float, rows, wire_vec,
+                   px_row) -> np.ndarray:
+        """The server-independent prefix of ``_finish_vec`` (uplink +
+        device segment + cut-activation transfer), computed once per
+        admission instead of once per server — same accumulation order,
+        so the floats are identical."""
+        r_cap = req.channel.capacity()
+        ship = np.maximum(wire_vec - px_row, 0.0)
+        return (t + ship / r_cap
+                + self._tdev(rows, req.device)
+                + px_row / r_cap)
+
     # ------------------------------------------------------------------
-    def _choose(self, t: float, req: InferenceRequest, arrival: float,
-                tab, j: int, a_star: float, enforce_slo: bool):
-        """Best (server, candidate) under the policy's server rule; None
-        when ``enforce_slo`` and no pair meets the deadline."""
+    def _choose_vectorized(self, t: float, req: InferenceRequest,
+                           arrival: float, tab, j: int, a_star: float,
+                           enforce_slo: bool):
+        """Best (server, candidate) under the policy's server rule as ONE
+        masked (servers × candidates) argmin; None when ``enforce_slo``
+        and no pair meets the deadline. Decision-for-decision identical
+        to ``_choose_reference`` (locked in tests/test_fleet_scale.py):
+        row construction preserves the scalar path's float-association
+        order, and the flattened row-major argmin reproduces its
+        tie-break (first server, then first candidate, strict <)."""
+        row0, wire_vec = self._candidate_rows(req, tab, j, a_star)
+        rows = tab.rows[j]
+        uses_server = rows.o2 > 0
+        servers = self.servers
+        ref = servers[0].profile
+        omega = req.weights.omega
+        if self.policy.server_rule == "least_loaded":
+            # load order; under an SLO the later servers are the
+            # fallback, so a request is only rejected when EVERY
+            # (server, candidate) pair misses the deadline
+            order = self._server_order()
+            if not enforce_slo:
+                order = order[:1]
+            ready = self._ready_vec(req, t, rows, wire_vec, tab.px[j]) \
+                if enforce_slo else None
+            for s in order:
+                srv = servers[s]
+                row = row0 if srv.profile is ref \
+                    else row0 + self._correction(req, srv.profile, rows)
+                queue = max(0.0, srv.work_until - t)
+                row = row + omega * queue * uses_server
+                if enforce_slo:
+                    start = np.where(uses_server,
+                                     np.maximum(ready, srv.free), ready)
+                    finish = start + self._tsrv(rows, srv.profile)
+                    row = np.where(
+                        finish <= arrival + req.deadline + 1e-12,
+                        row, np.inf)
+                    if not np.isfinite(row).any():
+                        continue
+                c = int(np.argmin(row))
+                # first feasible server in load order wins outright
+                return (float(row[c]), s, c, queue, wire_vec)
+            return None
+        S, C = len(servers), len(row0)
+        queues = np.fromiter((srv.work_until for srv in servers),
+                             np.float64, S)
+        np.subtract(queues, t, out=queues)
+        np.maximum(queues, 0.0, out=queues)
+        qterm = (omega * queues)[:, None] * uses_server
+        if self._homogeneous:
+            # every row is the reference row: one broadcast add computes
+            # row0 + qterm[s] per element — bitwise what the scalar loop
+            # produced (it never added a correction either; row0 + 0.0
+            # would NOT be a no-op when row0 holds -0.0)
+            mat = row0[None, :] + qterm
+        else:
+            base = np.repeat(row0[None, :], S, axis=0)
+            ck = (id(rows), req.weights)
+            corr = self._corr_stacks.get(ck)
+            if corr is None:
+                corr = np.stack(
+                    [self._correction(req, servers[s].profile, rows)
+                     for s in self._nonref_idx])
+                self._corr_stacks[ck] = corr
+            # in-place add keeps the scalar association (row0 + corr)
+            # before the queue term lands
+            base[self._nonref_idx] += corr
+            mat = base + qterm
+        if enforce_slo:
+            ready = self._ready_vec(req, t, rows, wire_vec, tab.px[j])
+            free = np.fromiter((srv.free for srv in servers),
+                               np.float64, S)
+            start = np.where(uses_server[None, :],
+                             np.maximum(ready[None, :], free[:, None]),
+                             ready[None, :])
+            tsrv = self._tsrv_stacks.get(id(rows))
+            if tsrv is None:
+                tsrv = np.stack([self._tsrv(rows, srv.profile)
+                                 for srv in servers])
+                self._tsrv_stacks[id(rows)] = tsrv
+            finish = start + tsrv
+            mat = np.where(finish <= arrival + req.deadline + 1e-12,
+                           mat, np.inf)
+            if not np.isfinite(mat).any():
+                return None
+        k = int(np.argmin(mat))
+        s, c = divmod(k, C)
+        return (float(mat[s, c]), s, c, float(queues[s]), wire_vec)
+
+    def _choose_reference(self, t: float, req: InferenceRequest,
+                          arrival: float, tab, j: int, a_star: float,
+                          enforce_slo: bool):
+        """The historical per-server scalar loop — the equivalence
+        oracle ``admission="reference"`` selects; kept verbatim."""
         row0, wire_vec = self._candidate_rows(req, tab, j, a_star)
         rows = tab.rows[j]
         o2_vec = rows.o2
@@ -631,9 +893,6 @@ class FleetEngine:
         ref = self.servers[0].profile
         least_loaded = self.policy.server_rule == "least_loaded"
         if least_loaded:
-            # load order; under an SLO the later servers are the
-            # fallback, so a request is only rejected when EVERY
-            # (server, candidate) pair misses the deadline
             order = sorted(range(len(self.servers)),
                            key=lambda s: (self.servers[s].work_until, s))
             if not enforce_slo:
@@ -669,21 +928,48 @@ class FleetEngine:
         ladder's re-pricing step (SLO degrade and retry degrade share
         it). ``req`` must be the ORIGINAL request: ``_pricing_request``
         applies the degraded channel itself (applying it to an already
-        effective request would compound the factor)."""
+        effective request would compound the factor).
+
+        Tables are memoized per (model, level, batch, device, effective
+        channel, weights, effective cached flag) — everything the table
+        depends on — so ladders walk cached rows instead of calling
+        ``price_window`` once per rung per request. ``reprice_cache=
+        False`` disables the memo (the oracle the cache is locked
+        against in tests/test_fleet.py)."""
+        if self._reprice_enabled:
+            eff_cached = req.segment_cached if req.device_id is None \
+                else False
+            key = (req.model, level, req.batch, req.device,
+                   self._effective_channel(req), req.weights, eff_cached)
+            tab = self._reprice_tables.get(key)
+            if tab is None:
+                relaxed = dataclasses.replace(self._pricing_request(req),
+                                              accuracy_budget=level)
+                tab = price_window(self.qs.models, self.servers[0].profile,
+                                   [relaxed], context=self.context,
+                                   provider=self.provider,
+                                   cache=self._price_cache)
+                self._reprice_tables[key] = tab
+            return tab
         relaxed = dataclasses.replace(self._pricing_request(req),
                                       accuracy_budget=level)
         return price_window(self.qs.models, self.servers[0].profile,
                             [relaxed], context=self.context,
-                            provider=self.provider)
+                            provider=self.provider,
+                            cache=self._price_cache)
 
     # ------------------------------------------------------------------
     def _admit(self, t: float, pnd: _Pending, tab, j: int) -> list:
         """Admit (or drop) one pending request; returns the journal's
         ``[index, server]`` outcome pair (server -1 = dropped)."""
+        st = self._st
         req = self._effective_request(pnd.request)
-        store = self.qs.models[req.model].store(self.context)
+        store = self._stores.get(req.model)
+        if store is None:
+            store = self.qs.models[req.model].store(self.context)
+            self._stores[req.model] = store
         a_star = store.level_for(req.accuracy_budget)
-        attempt = self._attempts.get(pnd.index, 0) + 1
+        attempt = int(st.attempts[pnd.index]) + 1
         degraded = None
         if attempt > 1 and self.retry.degrade_on_retry:
             # retry-with-degraded-budget: coarsen one store level per
@@ -706,11 +992,10 @@ class FleetEngine:
                 if choice is not None:
                     degraded, tab, j, a_star = lv, tab_lv, 0, lv
                     break
-        rec = self._records[pnd.index]
         if choice is None:
-            rec.rejected = True
-            rec.drop_reason = REASON_SLO
-            rec.attempts = attempt - 1
+            st.rejected[pnd.index] = True
+            st.drop_code[pnd.index] = DROP_CODES[REASON_SLO]
+            # attempts stays attempt - 1: the reject consumed none
             return [pnd.index, -1]
         _, s, c, queue, wire_vec = choice
         self._commit(t, pnd, tab, j, s, c, queue, float(wire_vec[c]),
@@ -721,22 +1006,36 @@ class FleetEngine:
                 queue: float, wire: float, a_star: float,
                 degraded: Optional[float], attempt: int,
                 req: InferenceRequest) -> None:
+        st = self._st
         srv = self.servers[s]
         plan, o1, o2, _ = tab.select(j, c)
         dev_b, srv_b = tab.rows[j].bytes_at(c)
-        costs = self.provider.breakdown(o1, o2, wire, req.device,
-                                        srv.profile, req.channel,
-                                        dev_bytes=dev_b, srv_bytes=srv_b)
-        res = ServingResult(plan=plan, costs=costs,
-                            objective=costs.objective(req.weights)
-                            + req.weights.omega * (queue if o2 > 0 else 0.0),
-                            payload_bits=wire, attempt=attempt)
-        res.extra["queue_delay"] = queue if o2 > 0 else 0.0
-        res.extra["server"] = s
-        if degraded is not None:
-            res.extra["degraded_to"] = degraded
         backend = self.qs.models[req.model].backend
-        dep = Deployment(req.model, backend, req, plan, res)
+        if st.full:
+            costs = self.provider.breakdown(o1, o2, wire, req.device,
+                                            srv.profile, req.channel,
+                                            dev_bytes=dev_b, srv_bytes=srv_b)
+            res = ServingResult(plan=plan, costs=costs,
+                                objective=costs.objective(req.weights)
+                                + req.weights.omega
+                                * (queue if o2 > 0 else 0.0),
+                                payload_bits=wire, attempt=attempt)
+            res.extra["queue_delay"] = queue if o2 > 0 else 0.0
+            res.extra["server"] = s
+            if degraded is not None:
+                res.extra["degraded_to"] = degraded
+            st.deployments[pnd.index] = Deployment(req.model, backend, req,
+                                                   plan, res)
+            t_local, t_server = costs.t_local, costs.t_server
+        else:
+            # light records: no Deployment/ServingResult objects. The
+            # provider's stage clocks ARE breakdown's t_local/t_server
+            # (base breakdown delegates to them; AnalyticCost's is the
+            # same closed form) — locked in tests/test_fleet_scale.py
+            t_local = float(self.provider.device_seconds(req.device, o1,
+                                                         dev_b))
+            t_server = float(self.provider.server_seconds(srv.profile, o2,
+                                                          srv_b))
 
         # stage timeline (events.py): ship → device segment → transfer →
         # server segment, reserved FIFO on the chosen server
@@ -747,43 +1046,47 @@ class FleetEngine:
         # the executed device stage is the provider's t_local — identical
         # to o1·gamma/f under the analytic default, memory-/measurement-
         # aware under the roofline/calibrated providers
-        device_done = ship_done + costs.t_local
+        device_done = ship_done + t_local
         transfer_done = device_done + x_share / r_cap
         token = (pnd.index, attempt)
         if o2 > 0:
             server_start = max(srv.free, transfer_done)
-            finish = server_start + costs.t_server
+            finish = server_start + t_server
             srv.free = finish
             srv.reservations[token] = finish
         else:
             server_start = transfer_done
             finish = server_start
-        srv.work_until = max(srv.work_until, t) + costs.t_server
-        srv.busy += costs.t_server
+        srv.work_until = max(srv.work_until, t) + t_server
+        srv.busy += t_server
+        self._order_cache = None
         tl = StageTimeline(t, ship_done, device_done, transfer_done,
                            server_start, finish)
 
-        rec = self._records[pnd.index]
-        rec.deployment = dep
-        rec.timeline = tl
-        rec.server = s
-        rec.start_order = self._admit_rank
-        rec.backlog_at_admission = queue
-        rec.queue_delay = res.extra["queue_delay"]
-        rec.degraded_to = degraded
-        rec.attempts = attempt
+        i = pnd.index
+        st.tl[i, 0] = t
+        st.tl[i, 1] = ship_done
+        st.tl[i, 2] = device_done
+        st.tl[i, 3] = transfer_done
+        st.tl[i, 4] = server_start
+        st.tl[i, 5] = finish
+        st.server[i] = s
+        st.start_order[i] = self._admit_rank
+        st.backlog[i] = queue
+        st.queue_delay[i] = queue if o2 > 0 else 0.0
+        st.degraded_to[i] = np.nan if degraded is None else degraded
+        st.attempts[i] = attempt
+        st.payload_bits[i] = wire
         self._admit_rank += 1
-        self._attempts[pnd.index] = attempt
         self._live.add(token)
-        self._inflight[pnd.index] = _Flight(token, req.device_id, s,
-                                            costs.t_server, tl)
+        self._inflight[i] = _Flight(token, req.device_id, s, t_server, tl)
 
         if (req.device_id is not None and plan.p and ship > 0):
-            self._queue.push(Event(ship_done, CACHE_INSTALL,
-                                   (req.device_id,
-                                    (req.model, a_star, plan.p), token)))
+            self._queue.push(ship_done, CACHE_INSTALL,
+                             (req.device_id,
+                              (req.model, a_star, plan.p), token))
         self._in_flight += 1
-        self._samples.append((t, self._in_flight))
+        self._sample(t)
         # decode streams (DESIGN.md §11): the prefill's finish is token 1
         # (TTFT); the remaining tokens run through the server's
         # continuous-batching lane and COMPLETE moves to the last round
@@ -791,16 +1094,16 @@ class FleetEngine:
         if n_tok > 0:
             if not getattr(backend, "supports_decode", False):
                 raise ServingError(
-                    f"request {pnd.index} asks for {n_tok} decode tokens "
+                    f"request {i} asks for {n_tok} decode tokens "
                     f"but backend {type(backend).__name__!r} of model "
                     f"{req.model!r} has no autoregressive decode path")
-            rec.decode_tokens = n_tok
-            rec.tokens_emitted = 1
+            st.decode_tokens[i] = n_tok
+            st.tokens_emitted[i] = 1
         if n_tok > 1:
-            rec.decode_done = None
-            self._start_stream(finish, pnd.index, req, plan, a_star, s,
-                               token, n_tok)
+            st.decode_done[i] = np.nan
+            self._start_stream(finish, i, req, plan, a_star, s, token,
+                               n_tok)
         else:
             if n_tok == 1:
-                rec.decode_done = finish
-            self._queue.push(Event(finish, COMPLETE, (pnd.index, token)))
+                st.decode_done[i] = finish
+            self._queue.push(finish, COMPLETE, (i, token))

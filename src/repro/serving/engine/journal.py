@@ -19,6 +19,15 @@ engine is a deterministic DES, the journal is a total account of a run:
 The journal records event *processing*, not queue pushes: a cancelled
 attempt's COMPLETE still pops and is journaled as ``stale`` — replay
 must reproduce even the non-events.
+
+Journaling modes (``FleetEngine(journal=...)``, DESIGN.md §12): "full"
+is this class — one entry with outcome facts per processed event, the
+only mode ``replay``/``verify_replay`` work from. "light" is
+``LightJournal`` — a columnar (time, kind) tape with per-kind counts
+and none of the outcome kwargs, for cheap observability at scale.
+"off" journals nothing: the engine holds no journal object at all, so
+the per-event cost is one ``is not None`` test (a true no-op — locked
+by a hypothesis property that terminal records are unchanged).
 """
 from __future__ import annotations
 
@@ -26,8 +35,12 @@ import dataclasses
 import json
 from typing import List, Optional
 
+import numpy as np
+
 from repro.serving.engine.events import KIND_NAMES
 from repro.serving.engine.faults import FaultEvent, FaultInjector
+
+JOURNAL_MODES = ("full", "light", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -134,3 +147,45 @@ class EventJournal:
             jr.entries.append(JournalEntry(seq, time, kind,
                                            tuple(sorted(d.items()))))
         return jr
+
+
+class LightJournal:
+    """Columnar journal: the (time, kind) tape of every processed event
+    in two doubling NumPy buffers, outcome kwargs discarded at the call
+    site. Same event COUNT and ORDER as the full journal on the same
+    run (asserted in tests/test_fleet_scale.py), none of the per-entry
+    tuple/dict cost — the scale-sweep observability tier."""
+
+    def __init__(self, header: Optional[dict] = None, capacity: int = 1024):
+        self.header: dict = dict(header or {})
+        self._times = np.empty(max(int(capacity), 16), dtype=np.float64)
+        self._kinds = np.empty(self._times.shape[0], dtype=np.int8)
+        self._len = 0
+
+    def record(self, time: float, kind: int, **data) -> None:
+        i = self._len
+        if i == self._times.shape[0]:
+            self._times = np.concatenate(
+                [self._times, np.empty_like(self._times)])
+            self._kinds = np.concatenate(
+                [self._kinds, np.empty_like(self._kinds)])
+        self._times[i] = time
+        self._kinds[i] = kind
+        self._len = i + 1
+
+    def __len__(self) -> int:
+        return self._len
+
+    @property
+    def times(self) -> np.ndarray:
+        return self._times[:self._len]
+
+    @property
+    def kinds(self) -> np.ndarray:
+        return self._kinds[:self._len]
+
+    def counts(self) -> dict:
+        """Processed-event counts by kind name (only kinds that fired)."""
+        kinds, counts = np.unique(self.kinds, return_counts=True)
+        return {KIND_NAMES[int(k)]: int(c)
+                for k, c in zip(kinds, counts)}

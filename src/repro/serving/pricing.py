@@ -116,10 +116,21 @@ def decode_rows_for(backend, store, a_star: float, batch: int,
 def price_window(models, server: ServerProfile,
                  requests: Sequence[InferenceRequest],
                  context: Optional["ReferenceContext"] = None,
-                 provider: Optional[CostProvider] = None) -> WindowTable:
+                 provider: Optional[CostProvider] = None,
+                 cache: Optional[dict] = None) -> WindowTable:
     """``models``: name -> ModelState (raises ``UnknownModelError`` /
     ``NotCalibratedError`` through ``ModelState.store`` when a request
-    names an unregistered or un-calibrated model)."""
+    names an unregistered or un-calibrated model).
+
+    ``cache``: optional caller-owned dict persisting the per-(level,
+    batch, cached) row tuples and per-batch layer specs ACROSS calls —
+    the fleet engine prices thousands of epochs against the same stores,
+    and rebuilding identical ``CandidateRows`` per epoch dominates at
+    scale. The caller owns invalidation: drop the dict whenever the
+    models, stores, context or provider it was filled under change.
+    Rows coming out of a shared cache are the SAME objects every call
+    (stable identity), which downstream per-``id(rows)`` caches rely on.
+    """
     from repro.serving.errors import UnknownModelError
 
     provider = ANALYTIC if provider is None else provider
@@ -146,10 +157,14 @@ def price_window(models, server: ServerProfile,
         # rows cached per (accuracy level, batch, cached) — large windows
         # with few distinct budgets reuse one (terms, plans, payloads,
         # memory) tuple instead of rebuilding identical rows per request
-        rows_cache = {}
+        if cache is not None:
+            rows_cache = cache.setdefault((name, "rows"), {})
+            by_batch = cache.setdefault((name, "batch"), {})
+        else:
+            rows_cache = {}
+            by_batch = {}      # batch -> (specs, o1 row, ab_cum row)
         plans, mem_rows = [], []
         row_objs, pb_rows, px_rows = [], [], []
-        by_batch = {}          # batch -> (specs, o1 row, ab_cum row)
         for r in group:
             key = (store.level_for(r.accuracy_budget), r.batch,
                    bool(r.segment_cached))

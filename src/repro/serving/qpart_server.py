@@ -268,17 +268,21 @@ class QPARTServer:
     # ------------------------------------------------------------------
     def fleet(self, servers=None, policy="fcfs", slo: str = "observe",
               epoch_interval: float = 0.0,
-              provider: Optional[CostProvider] = None):
+              provider: Optional[CostProvider] = None, **engine_kwargs):
         """Event-driven fleet serving over this server's registered
         models (serving.engine): ``srv.fleet(servers=[...],
         policy="edf").run(requests)`` — continuous-time arrivals,
         multi-server queues, engine-managed device segment caches,
         deadline-aware admission. With the defaults (one server, plain
         requests) it degenerates to the one-shot ``serve_batch``/
-        ``WorkloadBalancer`` behavior."""
+        ``WorkloadBalancer`` behavior. Extra kwargs (``retry``,
+        ``faults``, and the §12 scale knobs ``journal``/``records``/
+        ``admission``/``reprice_cache``) pass through to
+        ``FleetEngine``."""
         from repro.serving.engine import FleetEngine
         return FleetEngine(self, servers=servers, policy=policy, slo=slo,
-                           epoch_interval=epoch_interval, provider=provider)
+                           epoch_interval=epoch_interval, provider=provider,
+                           **engine_kwargs)
 
     # ------------------------------------------------------------------
     # CostModel v2 measurement loop (DESIGN.md §9)

@@ -370,6 +370,65 @@ class TestTotalLatency:
 
 
 # ---------------------------------------------------------------------------
+class TestScaleKnobs:
+    """§12 satellites: the degrade-ladder re-price cache and the hoisted
+    least_loaded server ordering never change a decision."""
+
+    def _degrade_trace(self, srv, n=40):
+        # deadlines straddling the strict/coarse latency split: a chunk
+        # of the trace walks the degrade ladder through _reprice_single
+        strict = FleetEngine(srv).run(
+            [req(min(srv.levels), segment_cached=True)]).records[0]
+        coarse = FleetEngine(srv).run(
+            [req(max(srv.levels), segment_cached=True)]).records[0]
+        deadline = (coarse.latency + strict.latency) / 2
+        # cached requests price p > 0 candidates (payload shrinks with
+        # the budget) — the regime where relaxing the budget can rescue
+        # a deadline instead of just rejecting
+        return [req(min(srv.levels), segment_cached=True,
+                    deadline=deadline * (1 + 0.5 * (i % 3)),
+                    arrival_time=i * 0.0007) for i in range(n)]
+
+    def test_reprice_cache_matches_uncached(self):
+        srv = stub_server()
+        trace = self._degrade_trace(srv)
+        runs = {}
+        for cached in (True, False):
+            m = FleetEngine(srv, servers=[ServerProfile()] * 2,
+                            slo="degrade", epoch_interval=0.005,
+                            reprice_cache=cached).run(trace)
+            runs[cached] = m
+        a, b = runs[True], runs[False]
+        assert a.journal.diff(b.journal) is None
+        assert a.summary() == b.summary()
+        # some requests really degraded, so the ladder actually re-priced
+        assert a.summary()["degraded"] > 0
+        obj_on = np.array([r.deployment.objective for r in a.completed()])
+        obj_off = np.array([r.deployment.objective for r in b.completed()])
+        assert np.array_equal(obj_on, obj_off)
+
+    def test_least_loaded_hoisted_order_unchanged(self):
+        """The once-per-backlog-change server ordering (vectorized path)
+        admits exactly what the per-request re-sort (reference path)
+        admits, on a loaded heterogeneous fleet."""
+        srv = stub_server()
+        fleet = [ServerProfile(), ServerProfile(f_clock=4e9),
+                 ServerProfile()]
+        trace = [req(0.01 if i % 2 else 0.004, deadline=0.5,
+                     arrival_time=i * 0.0004, device_id=f"d{i % 5}")
+                 for i in range(60)]
+        runs = [FleetEngine(srv, servers=fleet, policy="least_loaded",
+                            slo="degrade", epoch_interval=0.003,
+                            admission=mode).run(trace)
+                for mode in ("vectorized", "reference")]
+        assert runs[0].journal.diff(runs[1].journal) is None
+        assert runs[0].summary() == runs[1].summary()
+        # the trace spread load: both servers of equal speed got work
+        servers_used = {r.server for r in runs[0].completed()}
+        assert len(servers_used) > 1
+
+
+# ---------------------------------------------------------------------------
 class TestPolicyOrdering:
     """Property-style ordering guarantees (hypothesis; deterministic
     shim skips when hypothesis is absent)."""

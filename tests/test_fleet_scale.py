@@ -1,0 +1,236 @@
+"""Scale-path equivalence suite (DESIGN.md §12): every scale knob of the
+fleet engine — vectorized admission, columnar records, light/off
+journaling, cached re-price ladders — is locked bit-for-bit against the
+full-fidelity path it replaces, on chaos traces (device churn + channel
+drift + retry) and autoregressive decode traces (continuous batching +
+mid-stream severance). The lock is the JOURNAL (every processed event
+with its outcome facts) plus the metrics SUMMARY, so a single drifting
+admission decision or stage boundary fails loudly."""
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.cost_model import (Channel, DeviceProfile, ObjectiveWeights,
+                                   ServerProfile)
+from repro.serving.engine import (DISCONNECT, RECONNECT, FaultEvent,
+                                  FleetEngine, FleetMetrics, RetryPolicy,
+                                  churn_trace, degrade_trace, materialize,
+                                  mmpp_arrivals)
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+from repro.serving.testing import (poisson_trace, stub_classifier_server,
+                                   stub_transformer_calibration)
+from repro.configs.classifier import MNIST_MLP
+
+from tests._hypothesis_shim import given, settings, st
+
+pytestmark = pytest.mark.smoke
+
+DEV = DeviceProfile()
+CH = Channel(capacity_bps=2e6)
+W = ObjectiveWeights()
+
+# offloading unattractive (slow fleet, fast channel): plans go
+# device-side, segments really ship, disconnects have a radio window
+SLOW = ServerProfile(f_clock=1e7)
+SRV = stub_classifier_server([("mnist", MNIST_MLP)], server=SLOW,
+                             device=DEV, channel=Channel(), weights=W)
+# heterogeneous fleet: the second profile prices through the delta
+# correction; the third is value-equal to the reference but a DIFFERENT
+# object, so it exercises the correction path too (identity, not value,
+# decides — the correction of an equal profile is exactly zero work)
+HETERO = [SLOW, ServerProfile(f_clock=4e7), ServerProfile(f_clock=1e7)]
+RETRY = RetryPolicy(max_attempts=3, base_backoff_s=0.01, max_backoff_s=0.1,
+                    degrade_on_retry=True)
+
+
+def _chaos(n=300, seed=0, device_pool=24):
+    arrivals = mmpp_arrivals(n, rates=(100.0, 900.0), mean_dwell=(0.3, 0.1),
+                             seed=seed)
+    trace = materialize("mnist", arrivals, [DEV], [Channel()], W,
+                        budgets=(0.004, 0.01, 0.02),
+                        deadlines=(0.05, 0.2), batches=(1,),
+                        device_pool=device_pool, seed=seed)
+    horizon = trace[-1].arrival_time + 0.5
+    devs = [f"dev-{i}" for i in range(device_pool)]
+    faults = (churn_trace(devs[::2], horizon, mean_uptime=0.2,
+                          mean_downtime=0.1, seed=seed)
+              + degrade_trace(devs[1::2], horizon, mean_interval=0.5,
+                              mean_duration=0.1, seed=seed + 1))
+    return trace, faults
+
+
+def _run(trace, faults=None, servers=HETERO, policy="fcfs", **kw):
+    kw.setdefault("slo", "degrade")
+    kw.setdefault("epoch_interval", 0.005)
+    eng = FleetEngine(SRV, servers=servers, policy=policy, retry=RETRY,
+                      faults=faults, **kw)
+    return eng.run(trace)
+
+
+def _assert_same_run(a, b):
+    """Two runs produced identical decisions: same journal (when both
+    full), same summary, same terminal columns."""
+    if a.journal is not None and b.journal is not None \
+            and hasattr(a.journal, "entries"):
+        delta = a.journal.diff(b.journal)
+        assert delta is None, delta
+    assert a.summary() == b.summary()
+
+
+class TestVectorizedAdmissionEquivalence:
+    """admission="vectorized" vs the historical scalar loop, decision
+    for decision, on the chaos trace — all four policies."""
+
+    @pytest.mark.parametrize("policy",
+                             ["fcfs", "balanced", "edf", "least_loaded"])
+    def test_chaos_trace(self, policy):
+        trace, faults = _chaos()
+        vec = _run(trace, faults, policy=policy, admission="vectorized")
+        ref = _run(trace, faults, policy=policy, admission="reference")
+        _assert_same_run(vec, ref)
+        vec.assert_terminal()
+
+    def test_homogeneous_fleet(self):
+        # the broadcast fast path (every profile IS the reference object)
+        trace, faults = _chaos(n=200, seed=3)
+        fleet = [SLOW] * 3
+        vec = _run(trace, faults, servers=fleet, admission="vectorized")
+        ref = _run(trace, faults, servers=fleet, admission="reference")
+        _assert_same_run(vec, ref)
+
+
+class TestDecodeEquivalence:
+    """Vectorized admission + columnar records on the decode lane:
+    continuous batching, mid-stream disconnect severance, retries."""
+
+    def _lm(self):
+        cfg = _f32(get_config("smollm-135m").reduced())
+        dev = DeviceProfile(memory_bytes=2e9)
+        ch = Channel(capacity_bps=2e6)
+        srv = QPARTServer()
+        stub_transformer_calibration(srv, "lm", cfg, dev, ch, W,
+                                     seq_len=16, decode_max_len=64)
+        return srv, dev, ch
+
+    def test_decode_trace(self):
+        srv, dev, ch = self._lm()
+        reqs = [InferenceRequest("lm", 0.05, dev, ch, W, arrival_time=0.0,
+                                 device_id=f"d{i}", max_new_tokens=30)
+                for i in range(4)]
+        reqs.append(InferenceRequest("lm", 0.05, dev, ch, W,
+                                     arrival_time=0.0, device_id="d0",
+                                     max_new_tokens=50))
+        horizon = FleetEngine(srv).run(reqs).horizon
+        faults = [FaultEvent(horizon / 2, DISCONNECT, "d0"),
+                  FaultEvent(horizon, RECONNECT, "d0")]
+        runs = [FleetEngine(srv, faults=faults, admission=mode).run(reqs)
+                for mode in ("vectorized", "reference")]
+        _assert_same_run(*runs)
+        runs[0].assert_terminal()
+        assert runs[0].summary()["tokens_per_s"] > 0
+        runs[0].journal.verify_replay(srv, reqs)
+
+
+class TestRecordAndJournalModes:
+    """records="light" and journal="light"/"off" change bookkeeping
+    cost, never a decision or a terminal fact."""
+
+    TERMINAL = ("server", "start_order", "backlog", "queue_delay",
+                "degraded_to", "rejected", "drop_code", "attempts",
+                "faults", "parked", "decode_tokens", "tokens_emitted",
+                "decode_done", "payload_bits", "tl")
+
+    @staticmethod
+    def _same_store(a: FleetMetrics, b: FleetMetrics):
+        for col in TestRecordAndJournalModes.TERMINAL:
+            va = getattr(a.store, col)
+            vb = getattr(b.store, col)
+            assert np.array_equal(va, vb, equal_nan=True), col
+
+    def test_light_records_identical(self):
+        trace, faults = _chaos(n=200, seed=1)
+        full = _run(trace, faults, records="full")
+        light = _run(trace, faults, records="light")
+        self._same_store(full, light)
+        assert full.summary() == light.summary()
+        # full keeps deployments for every committed attempt; light none
+        done = full.completed()
+        assert done and all(r.deployment is not None for r in done)
+        assert all(r.deployment is None for r in light.completed())
+
+    def test_journal_modes_identical(self):
+        trace, faults = _chaos(n=200, seed=2)
+        full = _run(trace, faults, journal="full")
+        light = _run(trace, faults, journal="light")
+        off = _run(trace, faults, journal="off")
+        self._same_store(full, light)
+        self._same_store(full, off)
+        assert full.summary() == light.summary() == off.summary()
+        # light journals the same events in the same order, columnar
+        assert len(light.journal) == len(full.journal)
+        assert np.array_equal(
+            light.journal.times,
+            np.array([e.time for e in full.journal.entries]))
+        assert sum(light.journal.counts().values()) == len(full.journal)
+        assert off.journal is None
+
+    def test_columnar_metrics_match_legacy_aggregation(self):
+        """Every FleetMetrics aggregate: columnar fast path == the
+        record-by-record legacy loop on materialized dataclasses."""
+        trace, faults = _chaos(n=250, seed=4)
+        m = _run(trace, faults)
+        legacy = FleetMetrics(
+            records=[m.records[i] for i in range(len(m.records))],
+            server_busy=m.server_busy,
+            queue_samples=[(float(t), int(d)) for t, d in m.queue_samples],
+            horizon=m.horizon, dead_letters=m.dead_letters,
+            journal=m.journal, store=None)
+        assert legacy.summary() == m.summary()
+        assert legacy.deadline_miss_rate() == m.deadline_miss_rate()
+        assert legacy.drop_reasons() == m.drop_reasons()
+        assert legacy.retry_rate() == m.retry_rate()
+        assert legacy.goodput_rps() == m.goodput_rps()
+        assert legacy.mean_stage_seconds() == m.mean_stage_seconds()
+        assert np.array_equal(legacy.latencies(), m.latencies())
+        assert np.array_equal(legacy.ttfts(), m.ttfts())
+        assert [r.index for r in legacy.completed()] \
+            == [r.index for r in m.completed()]
+        legacy.assert_terminal()
+        m.assert_terminal()
+
+    @settings(max_examples=8, deadline=None)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_journal_off_never_changes_terminal_records(self, seed):
+        trace = poisson_trace("mnist", 25, 400.0, [DEV], [Channel()], W,
+                              budgets=(0.004, 0.02), deadlines=(0.05, 0.2),
+                              device_pool=6, seed=seed)
+        full = _run(trace, None, journal="full")
+        off = _run(trace, None, journal="off")
+        self._same_store(full, off)
+        assert full.summary() == off.summary()
+
+
+class TestLazyRecords:
+    def test_sequence_facade(self):
+        trace, faults = _chaos(n=60, seed=6)
+        m = _run(trace, faults)
+        recs = m.records
+        assert len(recs) == 60
+        assert recs[0].index == 0 and recs[-1].index == 59
+        assert recs[5] is recs[5]            # memoized view
+        assert [r.index for r in recs[10:13]] == [10, 11, 12]
+        assert sum(1 for _ in recs) == 60
+        with pytest.raises(IndexError):
+            recs[60]
+
+    def test_invalid_modes_rejected(self):
+        for kw in ({"journal": "none"}, {"records": "columnar"},
+                   {"admission": "scalar"}):
+            with pytest.raises(ValueError):
+                FleetEngine(SRV, servers=[SLOW], **kw)
+
+
+def _f32(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, dtype="float32")
