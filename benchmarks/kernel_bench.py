@@ -11,9 +11,51 @@ import jax.numpy as jnp
 from benchmarks.common import timed
 from repro.core.quantizer import quantize
 from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
 
 
-def kernels():
+def _decode_attn_rows(smoke: bool) -> list:
+    """Scan-path softmax vs the flash decode kernel across context
+    lengths (PR 9). Off-TPU the kernel column is the interpret-mode
+    Pallas body — a correctness lane, so its wall time is reported but
+    the speed story is the TPU one; the allclose check against the scan
+    oracle runs either way."""
+    rows = []
+    b, kvp, gp, hd = 1, 4, 4, 64
+    bufs = (128, 512) if smoke else (128, 512, 2048)
+    on_tpu = jax.default_backend() == "tpu"
+    for buf in bufs:
+        kq, kk, kv = jax.random.split(jax.random.key(buf), 3)
+        q = jax.random.normal(kq, (b, kvp, gp, hd), jnp.float32)
+        ck = jax.random.normal(kk, (b, buf, kvp, hd), jnp.float32)
+        cv = jax.random.normal(kv, (b, buf, kvp, hd), jnp.float32)
+        pos = jnp.int32(buf - 1)                 # fully-written ring
+
+        scan = jax.jit(ref.decode_attention_ref)
+        o_scan, t_scan = timed(scan, q, ck, cv, pos)
+        if on_tpu:
+            kern = jax.jit(decode_attention_pallas)
+            o_kern, t_kern = timed(kern, q, ck, cv, pos)
+        else:
+            kern = jax.jit(
+                lambda *a: decode_attention_pallas(*a, interpret=True))
+            o_kern = kern(q, ck, cv, pos)
+            t_kern = None
+        assert jnp.allclose(o_kern, o_scan, atol=2e-6), \
+            f"decode kernel diverged from scan oracle at buf={buf}"
+        rows.append({
+            "bench": "kernel_decode_attn",
+            "shape": f"b{b}xkv{kvp}xg{gp}x{hd}",
+            "context": buf,
+            "us_scan": round(t_scan, 1),
+            "us_kernel": round(t_kern, 1) if t_kern is not None else None,
+            "kernel_lane": "tpu" if on_tpu else "interpret",
+            "kv_kib": round(2 * buf * kvp * hd * 4 / 1024, 1),
+        })
+    return rows
+
+
+def kernels(smoke: bool = False):
     rows = []
     for m, k, n in [(256, 1024, 1024), (512, 2048, 2048)]:
         x = jax.random.normal(jax.random.key(0), (m, k), jnp.float32)
@@ -42,4 +84,7 @@ def kernels():
              "variant": "w4", "us_per_call": round(t_q4, 1),
              "weight_bytes": k * n // 2, "hbm_saving_pct": 87.5},
         ]
-    return rows
+    rows += _decode_attn_rows(smoke)
+    # one key union across both row shapes for the harness CSV printer
+    keys = list(dict.fromkeys(k for r in rows for k in r))
+    return [{k: r.get(k) for k in keys} for r in rows]

@@ -66,6 +66,11 @@ def main(argv=None) -> int:
             cost_fidelity_bench.cost_fidelity, smoke=True)
         BENCHES["decode"] = functools.partial(decode_bench.decode,
                                               smoke=True)
+        # kernel microbench smoke point: the decode-attention scan-vs-
+        # kernel rows (interpret-lane correctness off TPU) ride CI
+        from benchmarks import kernel_bench
+        BENCHES["kernels"] = functools.partial(kernel_bench.kernels,
+                                               smoke=True)
         # the fleet benches are pricing-only and already CI-fast: --smoke
         # runs them at FULL size (>=1k requests, >=3 servers) so the
         # BENCH_serving.json fleet + fleet_chaos (MMPP arrivals, seeded
@@ -80,7 +85,7 @@ def main(argv=None) -> int:
         # engine's scale configuration with an asserted wall budget —
         # the §12 hot-path latency contract runs on every CI build
         names = ["serving", "fleet", "fleet_chaos", "fleet_scale",
-                 "decode", "cost_fidelity"]
+                 "decode", "kernels", "cost_fidelity"]
     else:
         names = args.only or list(BENCHES)
     all_rows = []

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: single-query (decode) flash attention over a
+cached K/V prefix.
+
+One autoregressive decode step attends ONE query token against the ring
+buffer holding every previous position — the dominant per-token memory
+term of the serving decode lane. The pure-JAX path
+(``kernels.ref.decode_attention_ref``, the math inlined in
+``models.attention.attention_decode`` until PR 9) materializes the full
+(B, KVp, Gp, buf) score row in f32 through HBM; this kernel streams the
+cache once, keeping the score tile, the online-softmax stats and the
+output accumulator in VMEM — per-step HBM traffic collapses to the K/V
+bytes themselves, which is exactly the ``kv_rw_bytes`` term the cost
+model charges (``cost_model.transformer_layer_specs(mode="decode")``).
+
+TPU mapping:
+  grid = (B * KVp, nk), sequential in the k-block dim so the VMEM
+  scratch (acc, m, l) persists across the cache blocks of one
+  (batch, kv-head) pair. GQA comes for free in the layout: the query
+  block of program h is that kv head's WHOLE query group (Gp, hd), so
+  the score tile is a (Gp, block_k) MXU dot and K/V are read once per
+  group — never re-materialized per query head.
+
+  The absolute position rides as a scalar-prefetch operand
+  (``pltpu.PrefetchScalarGridSpec``): the ring-validity mask
+  ``(pos + 1 >= buf) | (idx <= pos % buf)`` — identical to the
+  reference's — is computed in-kernel from SMEM, so one compiled
+  program serves every decode step of every stream.
+
+  The cache may arrive in any storage dtype (bf16, float8_e4m3fn for
+  quantized device segments): tiles are upcast to f32 on the VPU before
+  the dot, matching the reference's compute-in-query-dtype discipline
+  within accumulation tolerance.
+
+Validated in interpret mode against ``ref.decode_attention_ref`` over
+shape/dtype/GQA sweeps (incl. float8 caches) in
+tests/test_decode_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 256
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref,
+                   l_ref, *, scale: float, block_k: int, nk: int, buf: int):
+    j = pl.program_id(1)                    # cache block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]
+    slot = jax.lax.rem(pos, buf)
+    q = q_ref[0].astype(jnp.float32)        # (Gp, hd)
+    k = k_ref[0].astype(jnp.float32)        # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)
+    sc = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (Gp, BK)
+    # ring validity (the reference's mask): wrapped ring -> every slot
+    # live; otherwise only slots 0..pos%buf have been written
+    idx = j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (q.shape[0], block_k), 1)
+    valid = (pos + 1 >= buf) | (idx <= slot)
+    sc = jnp.where(valid, sc, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, sc.max(axis=-1))
+    p = jnp.exp(sc - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _flush():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, ck, cv, pos, *,
+                            block_k: int = DEFAULT_BLOCK_K,
+                            interpret: bool = False):
+    """Single-token decode attention against a ring-buffer cache.
+
+    q (B, KVp, Gp, hd) post-RoPE query; ck/cv (B, buf, KVp, hd) the
+    cache AFTER the step's K/V write (any storage dtype); pos scalar
+    int32 absolute position. -> (B, KVp, Gp, hd) in the query dtype.
+    """
+    b, kvp, gp, hd = q.shape
+    buf = ck.shape[1]
+    scale = hd ** -0.5
+    block_k = min(block_k, buf)
+    assert buf % block_k == 0, (buf, block_k)
+    nk = buf // block_k
+
+    qf = q.reshape(b * kvp, gp, hd)
+    kf = ck.transpose(0, 2, 1, 3).reshape(b * kvp, buf, hd)
+    vf = cv.transpose(0, 2, 1, 3).reshape(b * kvp, buf, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * kvp, nk),
+        in_specs=[
+            pl.BlockSpec((1, gp, hd), lambda h, j, pos_ref: (h, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, j, pos_ref: (h, j, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda h, j, pos_ref: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, gp, hd), lambda h, j, pos_ref: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((gp, hd), jnp.float32),
+            pltpu.VMEM((gp,), jnp.float32),
+            pltpu.VMEM((gp,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k,
+                          nk=nk, buf=buf),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * kvp, gp, hd), q.dtype),
+        interpret=interpret,
+    )(pos_arr, qf, kf, vf)
+    return out.reshape(b, kvp, gp, hd)

@@ -9,18 +9,132 @@ lowered HLO stays portable.
 from __future__ import annotations
 
 import functools
+import math
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.qmatmul import qmatmul4_pallas, qmatmul_pallas
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.qmatmul import BK, BM, BN, qmatmul4_pallas, qmatmul_pallas
 from repro.kernels.quantize import (dequantize_pallas, quantize_pack4_pallas,
                                     quantize_pallas)
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Execution-mode dispatch (PR 9). models/ call these entry points instead of
+# branching on the backend themselves; one env var picks the lane for the
+# whole decode path.
+
+KERNEL_MODES = ("auto", "kernel", "interpret", "reference")
+
+
+def kernel_mode() -> str:
+    """Resolve ``REPRO_KERNELS`` to the lane model code should execute.
+
+    ``auto`` (default) -> compiled Pallas on TPU, pure-jnp ``ref``/scan
+    path on CPU — the CPU default stays bit-for-bit the pre-kernel
+    behavior. ``kernel`` forces compiled Pallas, ``interpret`` runs the
+    kernel bodies in Python (the CI correctness lane), ``reference``
+    forces the jnp oracles everywhere.
+    """
+    mode = os.environ.get("REPRO_KERNELS", "").strip().lower() or "auto"
+    if mode not in KERNEL_MODES:
+        raise ValueError(
+            f"REPRO_KERNELS={mode!r}: expected one of {KERNEL_MODES}")
+    if mode == "auto":
+        return "kernel" if _on_tpu() else "reference"
+    return mode
+
+
+def decode_attention(q, ck, cv, pos):
+    """Single-token decode attention over a ring-buffer cache, dispatched
+    by :func:`kernel_mode`. q (B, KVp, Gp, hd); ck/cv (B, buf, KVp, hd)
+    post-write; pos scalar absolute position -> (B, KVp, Gp, hd)."""
+    mode = kernel_mode()
+    if mode == "reference":
+        return ref.decode_attention_ref(q, ck, cv, pos)
+    return decode_attention_pallas(q, ck, cv, pos,
+                                   interpret=mode == "interpret")
+
+
+def _tile(dim: int, pref: int) -> int:
+    """Largest block size <= pref that divides dim (model dims are not
+    always multiples of the MXU-optimal defaults — e.g. d_model 576)."""
+    if dim % pref == 0:
+        return pref
+    for t in range(min(pref, dim), 0, -1):
+        if dim % t == 0:
+            return t
+    return dim
+
+
+def is_wire_struct(w) -> bool:
+    """True for a quantized wire struct ({codes|codes_packed, scale, mu})."""
+    return isinstance(w, dict) and ("codes" in w or "codes_packed" in w)
+
+
+def qdense(x, w, n_contract: int = 1, out_dtype=None):
+    """Quantized dense contraction: trailing axes of ``x`` against the
+    ``n_contract`` leading axes of wire-struct ``w``, through the
+    dequantize-fused qmatmul/qmatmul4 kernels (by :func:`kernel_mode`).
+
+    ``w`` is {codes (K..., N...) uint8 | codes_packed (..., N/2), scale,
+    mu} with per-tensor (size-1) or per-output-column metadata. The
+    trailing axes of ``x`` whose product equals prod(K...) are the
+    contraction; output is x-batch-axes + (N...) in ``out_dtype``
+    (default ``x.dtype``).
+    """
+    out_dtype = out_dtype or x.dtype
+    packed = "codes_packed" in w
+    codes = w["codes_packed"] if packed else w["codes"]
+    k = math.prod(codes.shape[:n_contract])
+    out_tail = list(codes.shape[n_contract:])
+    if packed:
+        out_tail[-1] *= 2
+    # peel trailing x axes until they cover the contraction size
+    i, tail = x.ndim, 1
+    while tail < k:
+        i -= 1
+        tail *= x.shape[i]
+    assert tail == k, (x.shape, codes.shape, n_contract)
+    batch = x.shape[:i]
+    x2 = x.reshape(-1, k)
+    codes2 = codes.reshape(k, -1)
+    n = codes2.shape[1] * (2 if packed else 1)
+
+    def _meta2d(v):
+        """scale/mu -> the (1, 1) / (1, N) layout qmatmul expects. The
+        quantize_stacked metadata keeps size-1 contraction axes and
+        broadcasts over the flattened output columns (e.g. per-head-dim
+        scale for a (D, H, hd) weight)."""
+        if v.size == 1:
+            return v.reshape(1, 1)
+        v = v[(0,) * n_contract]               # drop contraction axes
+        return jnp.broadcast_to(v, tuple(out_tail)).reshape(1, n)
+
+    scale, mu = _meta2d(w["scale"]), _meta2d(w["mu"])
+
+    mode = kernel_mode()
+    if mode == "reference":
+        out = (ref.qmatmul4_ref(x2, codes2, scale, mu, out_dtype) if packed
+               else ref.qmatmul_ref(x2, codes2, scale, mu, out_dtype))
+    else:
+        m = x2.shape[0]
+        bm, bk = _tile(m, BM), _tile(k, BK)
+        bn = _tile(n, BN)
+        if packed and bn % 2:                  # packed tile is (bk, bn // 2)
+            bn = next((t for t in range(min(BN, n), 1, -1)
+                       if n % t == 0 and t % 2 == 0), n)
+        fn = qmatmul4_pallas if packed else qmatmul_pallas
+        out = fn(x2, codes2, scale, mu, out_dtype, bm=bm, bk=bk, bn=bn,
+                 interpret=mode == "interpret")
+    return out.reshape(batch + tuple(out_tail))
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "use_pallas"))

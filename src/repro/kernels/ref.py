@@ -1,6 +1,7 @@
 """Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -51,3 +52,37 @@ def qmatmul4_ref(x, packed, scale, mu, out_dtype=jnp.float32):
     w = codes.astype(jnp.float32) * scale + mu
     return jnp.dot(x.astype(jnp.float32), w,
                    preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, ck, cv, pos):
+    """Single-token decode attention over a ring-buffer KV cache — the
+    ``lax.scan``-path math of ``models.attention.attention_decode``,
+    extracted verbatim (the Pallas decode kernel's allclose target).
+
+    q (B, KVp, Gp, hd) the post-RoPE query of ONE token; ck/cv
+    (B, buf, KVp, hd) the cache AFTER the current token's K/V were
+    written at slot ``pos % buf`` (any storage dtype — bf16 / float8 for
+    quantized device segments); ``pos`` the scalar absolute position.
+    Returns (B, KVp, Gp, hd) in the query dtype.
+    """
+    hd = q.shape[-1]
+    buf = ck.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    slot = pos % buf
+    sc = jnp.einsum("bkgd,bskd->bkgs", q, ck.astype(q.dtype),
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    # validity: once the ring has wrapped (pos+1 >= buf) every slot is
+    # live; before that only slots 0..slot have been written.
+    idx = jnp.arange(buf)
+    valid = (pos + 1 >= buf) | (idx <= slot)
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    # PV in the QUERY dtype: the cache may hold low-precision storage
+    # dtypes that are fine as storage but catastrophic as accumulators
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype),
+                     cv.astype(q.dtype),
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

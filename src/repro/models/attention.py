@@ -70,14 +70,24 @@ def _head_mask(cfg, dtype):
     return mask
 
 
+def _qkv_proj(x, w):
+    """One QKV projection: dense einsum, or the dequantize-fused qmatmul
+    kernel when the weight arrives as a quantized wire struct (the
+    kernel-routed serving representation — repro/kernels/ops.qdense)."""
+    from repro.kernels import ops
+    if ops.is_wire_struct(w):
+        return ops.qdense(x, w)                    # (B,S,*w.shape[1:])
+    return jnp.einsum("bsd,d...->bs...", x, w.astype(x.dtype))
+
+
 def _project_qkv(params, cfg, x):
     """x (B,S,D) -> q (B,S,KVp,Gp,hd), k/v (B,S,KVp,hd)."""
     dt = x.dtype
     kvp, gp = cfg.padded_heads()
     b, s, _ = x.shape
-    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
-    k = jnp.einsum("bsd,dkh->bskh", x, params["wk"].astype(dt))
-    v = jnp.einsum("bsd,dkh->bskh", x, params["wv"].astype(dt))
+    q = _qkv_proj(x, params["wq"])
+    k = _qkv_proj(x, params["wk"])
+    v = _qkv_proj(x, params["wv"])
     if cfg.qkv_bias:
         q = q + params["bq"].astype(dt)
         k = k + params["bk"].astype(dt)
@@ -98,6 +108,9 @@ def _out_proj(params, cfg, out, dtype):
         out = out * mask
     b, s, kvp, gp, hd = out.shape
     out = out.reshape(b, s, kvp * gp, hd)
+    from repro.kernels import ops
+    if ops.is_wire_struct(params["wo"]):
+        return ops.qdense(out, params["wo"], n_contract=2, out_dtype=dtype)
     return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
 
 
@@ -274,22 +287,12 @@ def attention_decode(params, cfg, x, cache, pos):
     ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
     cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
 
-    hd = cfg.resolved_head_dim()
-    qh = q[:, 0]                                   # (B,KVp,Gp,hd)
-    sc = jnp.einsum("bkgd,bskd->bkgs", qh, ck.astype(q.dtype),
-                    preferred_element_type=jnp.float32) * hd ** -0.5
-    # validity: once the ring has wrapped (pos+1 >= buf) every slot is live;
-    # before that only slots 0..slot have been written. Holds for the
-    # non-windowed case too (buf == max_len, never wraps).
-    idx = jnp.arange(buf)
-    valid = (pos + 1 >= buf) | (idx <= slot)
-    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
-    p = jax.nn.softmax(sc, axis=-1)
-    # compute PV in the QUERY dtype: the cache may hold low-precision
-    # storage dtypes (bf16, float8 for quantized device segments) that
-    # are fine as storage but catastrophic as accumulators
-    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype),
-                     cv.astype(q.dtype),
-                     preferred_element_type=jnp.float32)
+    # single-query flash attention over the ring buffer, dispatched by
+    # REPRO_KERNELS (repro/kernels/ops): reference = the pure-jnp scan
+    # math (kernels.ref.decode_attention_ref — bit-for-bit the pre-PR-9
+    # inline path, the CPU default), kernel/interpret = the Pallas
+    # decode kernel (kernels/decode_attention.py)
+    from repro.kernels import ops
+    out = ops.decode_attention(q[:, 0], ck, cv, pos)
     out = out[:, None].astype(x.dtype)             # (B,1,KVp,Gp,hd)
     return _out_proj(params, cfg, out, x.dtype), {"k": ck, "v": cv}

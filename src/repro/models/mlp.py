@@ -22,9 +22,18 @@ def mlp_init(key, cfg, d_ff=None):
     }
 
 
+def _ff(x, w):
+    """x @ w: dense, or the dequantize-fused qmatmul kernel when the
+    weight arrives as a quantized wire struct (repro/kernels/ops)."""
+    from repro.kernels import ops
+    if ops.is_wire_struct(w):
+        return ops.qdense(x, w)
+    return x @ w.astype(x.dtype)
+
+
 def mlp_apply(params, cfg, x):
     if cfg.mlp == "swiglu":
-        h = silu(x @ params["w_gate"].astype(x.dtype)) * (x @ params["w_up"].astype(x.dtype))
+        h = silu(_ff(x, params["w_gate"])) * _ff(x, params["w_up"])
     else:
-        h = jax.nn.gelu(x @ params["w_up"].astype(x.dtype))
-    return h @ params["w_down"].astype(x.dtype)
+        h = jax.nn.gelu(_ff(x, params["w_up"]))
+    return _ff(h, params["w_down"])

@@ -102,27 +102,51 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
 # ---------------------------------------------------------------------------
 # Block application
 
+# matmul-weight keys with a dequantize-fused kernel route: wire structs
+# at these positions pass through _dequant_block intact and execute via
+# ops.qdense (Pallas qmatmul/qmatmul4) inside attention/mlp. Everything
+# else (MoE expert stacks, SSM mixers) still dequantizes at block entry.
+KERNEL_ROUTED = {"attn": ("wq", "wk", "wv", "wo"),
+                 "mlp": ("w_gate", "w_up", "w_down")}
+
+
 def _dequant_block(bp, cfg):
-    """Serving path: block weights may arrive as int8 wire structs
-    {codes, scale, mu} (core.quantizer.quantize_params_for_serving) — the
-    QPART quantization keeping weights compact in HBM. Dequantized here,
-    once per block application; on TPU the Pallas qmatmul kernels fuse
-    this dequant into the matmul tiles instead (repro/kernels)."""
-    def walk(node):
+    """Serving path: block weights may arrive as int8/int4 wire structs
+    {codes|codes_packed, scale, mu} (core.quantizer) — the QPART
+    quantization keeping weights compact in HBM. Structs under
+    ``KERNEL_ROUTED`` positions are left packed: the qmatmul kernels
+    dequantize per (block_k, block_n) tile inside the matmul
+    (kernels/qmatmul.py), so the full-precision weight never
+    materializes in HBM. Remaining structs dequantize here, once per
+    block application."""
+    def dequant(node):
+        if "codes" in node:
+            w = node["codes"].astype(jnp.float32) * node["scale"] \
+                + node["mu"]
+            return w.astype(getattr(jnp, cfg.dtype))
+        p = node["codes_packed"]              # int4: two codes per byte
+        lo = (p & 0xF).astype(jnp.float32)
+        hi = ((p >> 4) & 0xF).astype(jnp.float32)
+        w = jnp.stack([lo, hi], axis=-1).reshape(
+            p.shape[:-1] + (p.shape[-1] * 2,))
+        w = w * node["scale"] + node["mu"]
+        return w.astype(getattr(jnp, cfg.dtype))
+
+    def is_struct(node):
+        return isinstance(node, dict) and \
+            ("codes" in node or "codes_packed" in node) and "scale" in node
+
+    def walk(node, parent=None):
         if isinstance(node, dict):
-            if "codes" in node and "scale" in node:
-                w = node["codes"].astype(jnp.float32) * node["scale"] \
-                    + node["mu"]
-                return w.astype(getattr(jnp, cfg.dtype))
-            if "codes_packed" in node:        # int4: two codes per byte
-                p = node["codes_packed"]
-                lo = (p & 0xF).astype(jnp.float32)
-                hi = ((p >> 4) & 0xF).astype(jnp.float32)
-                w = jnp.stack([lo, hi], axis=-1).reshape(
-                    p.shape[:-1] + (p.shape[-1] * 2,))
-                w = w * node["scale"] + node["mu"]
-                return w.astype(getattr(jnp, cfg.dtype))
-            return {k: walk(v) for k, v in node.items()}
+            if is_struct(node):
+                return node if parent == "routed" else dequant(node)
+            out = {}
+            for k, v in node.items():
+                if parent in KERNEL_ROUTED and k in KERNEL_ROUTED[parent]:
+                    out[k] = walk(v, "routed")
+                else:
+                    out[k] = walk(v, k)
+            return out
         return node
 
     return walk(bp)

@@ -41,6 +41,7 @@ from repro.core.partition import DeviceSegment, split_blocks
 from repro.core.quantizer import fake_quant
 from repro.models import transformer as T
 from repro.serving.backends.base import ModelBackend
+from repro.serving.decode.cache import paged_kv_ctx
 
 PROBE_CHUNK = 4      # layers probed per lax.map step (memory/parallelism)
 _STACKED_CACHE_SLOTS = 4     # stacked quantized trees kept per backend
@@ -61,6 +62,12 @@ class TransformerBackend(ModelBackend):
     # decode and no cache-feasibility term is priced in — the prefill-
     # only pricing stays bit-identical.
     decode_max_len: Optional[int] = None
+    # KV page size in ring slots (serving.decode.cache). None = legacy
+    # worst-case reservation: every stream is priced at decode_max_len
+    # context. Set -> admission prices streams at their page-rounded
+    # ACTUAL context (prompt + max_new_tokens), admitting streams the
+    # worst-case bound wrongly rejects.
+    kv_page_tokens: Optional[int] = None
 
     supports_decode = True
 
@@ -85,13 +92,26 @@ class TransformerBackend(ModelBackend):
         return transformer_layer_specs(self.cfg, ctx, batch=batch,
                                        mode="decode")[1:]
 
-    def kv_bytes_row(self, batch: int = 1):
+    def kv_bytes_row(self, batch: int = 1, tokens: Optional[int] = None):
+        """Cumulative device-KV bytes by cut point for ONE decode stream.
+        Default: the dense worst case (``decode_max_len`` ring slots per
+        attention layer). With ``kv_page_tokens`` set and the stream's
+        actual ``tokens`` (prompt + new tokens) given, the stream is
+        priced at its page-rounded context instead — strictly <= the
+        worst case, so the admission mask can only widen."""
         if self.decode_max_len is None:
             return None
+        if tokens is None or self.kv_page_tokens is None:
+            ctx = self.decode_max_len
+        else:
+            ctx = paged_kv_ctx(int(tokens), self.kv_page_tokens,
+                               self.decode_max_len)
         cache = self.__dict__.setdefault("_kv_row_cache", {})
-        row = cache.get(batch)
+        key = (batch, ctx)
+        row = cache.get(key)
         if row is None:
-            row = cache[batch] = _kv_row(self.decode_layer_specs(batch))
+            row = cache[key] = _kv_row(
+                self.decode_layer_specs(batch, context_len=ctx))
         return row
 
     def input_elements(self) -> float:
@@ -298,3 +318,94 @@ class TransformerBackend(ModelBackend):
     def run_device_segment(self, seg: DeviceSegment, plan, x):
         h = self._cut()(self.stacked_for(seg, plan), x, plan.p)
         return fake_quant(h, int(seg.bits_x))
+
+    # -- quantized-kernel device segment (PR 9) --------------------------
+    def qstacked_for(self, seg: DeviceSegment, plan) -> dict:
+        """``stacked_for``'s kernel twin: the routed projection/MLP
+        weights (``transformer.KERNEL_ROUTED``) are carried as per-period
+        quantized WIRE STRUCTS ({codes, scale, mu}) that ``models/``
+        dispatch through the dequantize-fused qmatmul/qmatmul4 kernels,
+        instead of pre-dequantized dense tensors. dequant(codes)
+        reproduces ``split_blocks``' per-layer ``fake_quant`` exactly, so
+        the numerics match the dense path up to matmul accumulation
+        order. Struct trees key ONE extra jit program per decode entry
+        point, but the pytree structure is CUT-INDEPENDENT (codes shapes
+        depend only on the model and the packing layout), so the program
+        count stays constant across cuts. Plans deploying > 8 bits fall
+        back to ``stacked_for`` (the uint8 wire can't carry them)."""
+        bits_w = [int(b) for b in np.asarray(seg.bits_w)]
+        if any(b > 8 for b in bits_w):
+            return self.stacked_for(seg, plan)
+        key = (plan.p, tuple(bits_w), int(seg.bits_x))
+        cache = self.__dict__.setdefault("_qstacked_cache", {})
+        if key not in cache:
+            while len(cache) >= _STACKED_CACHE_SLOTS:
+                cache.pop(next(iter(cache)))
+            cache[key] = self._build_qstacked(int(plan.p), bits_w)
+        return cache[key]
+
+    def _build_qstacked(self, p: int, bits_w: list) -> dict:
+        """Build the struct tree: for each period position, routed leaves
+        become per-period-per-tensor quantized structs at the deployed
+        per-layer bit-widths (filler bits for periods beyond the cut —
+        masked out by the dynamic ``stop``, values never observed);
+        everything else (norms, biases, MoE expert stacks, SSM weights)
+        is fake-quantized densely on the ACTIVE periods, mirroring
+        ``_stack_segment`` + ``split_blocks`` leaf-for-leaf."""
+        plen, nper = T.period_len(self.cfg), T.num_periods(self.cfg)
+
+        def build_pos(pos: int):
+            active = np.array([per * plen + pos < p for per in range(nper)])
+            abits = [bits_w[per * plen + pos]
+                     for per in range(nper) if active[per]]
+            pack = bool(abits) and max(abits) <= 4
+            fill = 4 if pack else 8
+            bits = np.array([bits_w[per * plen + pos] if active[per]
+                             else fill for per in range(nper)], np.float64)
+            levels = jnp.asarray(2.0 ** bits - 1.0, jnp.float32)
+            amask = jnp.asarray(active)
+
+            def meta(leaf):
+                axes = tuple(range(1, leaf.ndim))
+                shape = (nper,) + (1,) * (leaf.ndim - 1)
+                mu = jnp.min(leaf, axis=axes, keepdims=True)
+                phi = jnp.max(leaf, axis=axes, keepdims=True)
+                lv = levels.reshape(shape)
+                scale = jnp.maximum((phi - mu) / lv, 1e-12)
+                codes = jnp.clip(jnp.round((leaf - mu) / scale), 0, lv)
+                return codes, scale, mu, lv
+
+            def struct(leaf):
+                codes, scale, mu, _ = meta(leaf)
+                out = {"scale": scale.astype(jnp.float32),
+                       "mu": mu.astype(jnp.float32)}
+                codes = codes.astype(jnp.uint8)
+                if pack and leaf.shape[-1] % 2 == 0:
+                    out["codes_packed"] = \
+                        codes[..., 0::2] | (codes[..., 1::2] << 4)
+                else:
+                    out["codes"] = codes
+                return out
+
+            def dense_fq(leaf):
+                codes, scale, mu, _ = meta(leaf)
+                fq = (codes.astype(jnp.float32) * scale
+                      + mu).astype(leaf.dtype)
+                mask = amask.reshape((nper,) + (1,) * (leaf.ndim - 1))
+                return jnp.where(mask, fq, leaf)
+
+            routed = T.KERNEL_ROUTED
+
+            def walk(node, parent=None):
+                if isinstance(node, dict):
+                    return {k: (struct(v)
+                                if parent in routed and k in routed[parent]
+                                and not isinstance(v, dict)
+                                else walk(v, k))
+                            for k, v in node.items()}
+                return dense_fq(node)
+
+            return walk(self.params["blocks"][pos])
+
+        return {**self.params,
+                "blocks": [build_pos(pos) for pos in range(plen)]}

@@ -15,11 +15,21 @@ share it (the continuous-batching amortization that makes the decode
 lane scale). Streams that finish a round re-arm at ``round_end +
 step_lag`` (their device-segment + wire round trip); new streams join
 whenever their prefill pipeline delivers the first decode input.
+
+``due``/``next_time`` are heap-backed (PR 9): entries are keyed on
+``ready_at`` with lazy invalidation (a per-stream version stamp — a
+re-arm or removal strands the old entry, skipped when it surfaces), so
+both are O(log n) amortized instead of the linear scans that dominated
+at 10^5-stream fleets. The OBSERVABLE semantics are locked by
+``tests/test_decode.py``: ``due`` returns joiners in ADMISSION order
+(what dict insertion order used to provide) and ``next_time`` is
+``max(busy_until, min ready_at)`` over live streams.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import heapq
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -40,24 +50,75 @@ class DecodeBatcher:
     """Per-server continuous-batching state (engine-owned)."""
     streams: Dict[int, DecodeStream] = dataclasses.field(default_factory=dict)
     busy_until: float = 0.0          # current round's end time
+    # heap of (ready_at, admission_seq, index, version); an entry is live
+    # iff its index is registered AND its version matches the stream's
+    # current stamp — re-arms/removals bump the stamp, stranding old
+    # entries for lazy removal when they reach the top.
+    _heap: List[Tuple[float, int, int, int]] = \
+        dataclasses.field(default_factory=list)
+    _seq: Dict[int, int] = dataclasses.field(default_factory=dict)
+    _version: Dict[int, int] = dataclasses.field(default_factory=dict)
+    _next_seq: int = 0
+
+    def _push(self, index: int) -> None:
+        heapq.heappush(self._heap, (self.streams[index].ready_at,
+                                    self._seq[index], index,
+                                    self._version[index]))
+
+    def _live_entry(self, entry) -> bool:
+        _, seq, index, version = entry
+        return (index in self.streams and self._seq.get(index) == seq
+                and self._version.get(index) == version)
 
     def add(self, stream: DecodeStream) -> None:
+        if stream.index not in self._seq:
+            # admission order survives re-arms; a removed-then-readmitted
+            # stream re-enters at the back (dict-insertion semantics)
+            self._seq[stream.index] = self._next_seq
+            self._next_seq += 1
         self.streams[stream.index] = stream
+        self._version[stream.index] = self._version.get(stream.index, 0) + 1
+        self._push(stream.index)
 
     def remove(self, index: int) -> Optional[DecodeStream]:
-        return self.streams.pop(index, None)
+        stream = self.streams.pop(index, None)
+        if stream is not None:
+            self._version[index] += 1         # strand heap entries
+            self._seq.pop(index, None)
+        return stream
+
+    def rearm(self, index: int, ready_at: float) -> None:
+        """Move stream ``index``'s next-step time (round finished: its
+        device/wire round trip lands at ``ready_at``). O(log n)."""
+        stream = self.streams.get(index)
+        if stream is None:
+            return
+        stream.ready_at = float(ready_at)
+        self._version[index] += 1
+        self._push(index)
 
     def due(self, t: float) -> List[DecodeStream]:
-        """Streams joining a round started at ``t``, in admission
-        order (dict order = insertion order — deterministic)."""
-        return [st for st in self.streams.values() if st.ready_at <= t]
+        """Streams joining a round started at ``t``, in admission order
+        (deterministic). Non-destructive: joiners stay armed until the
+        engine re-arms or removes them."""
+        popped = []
+        while self._heap and self._heap[0][0] <= t:
+            entry = heapq.heappop(self._heap)
+            if self._live_entry(entry):
+                popped.append(entry)
+        for entry in popped:                  # still armed at ready_at
+            heapq.heappush(self._heap, entry)
+        return [self.streams[e[2]] for e in sorted(popped,
+                                                   key=lambda e: e[1])]
 
     def next_time(self) -> Optional[float]:
         """Earliest time the next round can start: every state change
-        (stream added/removed, round finished) re-derives this and the
-        engine queues a DECODE_STEP there; stale queued events are
-        detected by re-deriving at fire time."""
-        if not self.streams:
-            return None
-        return max(self.busy_until,
-                   min(st.ready_at for st in self.streams.values()))
+        (stream added/removed/re-armed, round finished) re-derives this
+        and the engine queues a DECODE_STEP there; stale queued events
+        are detected by re-deriving at fire time."""
+        while self._heap:
+            if not self._live_entry(self._heap[0]):
+                heapq.heappop(self._heap)     # permanent lazy cleanup
+                continue
+            return max(self.busy_until, self._heap[0][0])
+        return None

@@ -32,7 +32,11 @@ import numpy as np
 
 from repro.core.quantizer import fake_quant
 from repro.models import transformer as T
-from repro.serving.decode.cache import (kv_cache_dtype, segment_cache_bytes)
+from repro.serving.decode.cache import (DEFAULT_PAGE_TOKENS, KVPagePool,
+                                        PagedKVCache, kv_cache_dtype,
+                                        segment_cache_bytes,
+                                        segment_nonattn_cache_bytes,
+                                        segment_page_pool)
 from repro.serving.errors import ServingError
 
 
@@ -69,7 +73,10 @@ class DecodeSession:
     routed through sessions."""
 
     def __init__(self, backend, plan, *, max_len: int,
-                 segment=None):
+                 segment=None, qkernels: Optional[bool] = None,
+                 paged: bool = False,
+                 page_tokens: int = DEFAULT_PAGE_TOKENS,
+                 page_pool: Optional[KVPagePool] = None):
         if not getattr(backend, "supports_decode", False):
             raise ServingError(
                 f"{type(backend).__name__} has no autoregressive decode "
@@ -82,9 +89,19 @@ class DecodeSession:
         self.L = backend.num_layers
         self.p = int(plan.p)
         self.model_dtype = getattr(jnp, cfg.dtype)
+        if qkernels is None:
+            # default: quantized-kernel device weights only where the
+            # compiled kernels actually run (TPU); the CPU default stays
+            # the pre-kernel dense fake-quant path bit-for-bit.
+            from repro.kernels import ops
+            qkernels = ops.kernel_mode() == "kernel" and \
+                hasattr(backend, "qstacked_for")
+        self.qkernels = bool(qkernels)
         if self.p > 0:
             seg = segment if segment is not None else backend.split(plan)
-            self.dev_params = backend.stacked_for(seg, plan)
+            self.dev_params = (backend.qstacked_for(seg, plan)
+                               if self.qkernels
+                               else backend.stacked_for(seg, plan))
             self.bits_x = int(seg.bits_x)
             self.dev_dtype = kv_cache_dtype(self.bits_x, self.model_dtype)
         else:
@@ -93,6 +110,14 @@ class DecodeSession:
             self.dev_dtype = self.model_dtype
         self.dev_caches = None
         self.srv_caches = None
+        # block-granular device-KV accounting (cache.PagedKVCache): the
+        # jitted programs keep their dense cache operands; the paged
+        # structure tracks the page-granular RESIDENT footprint and is
+        # validated bit-for-bit against the dense ring.
+        self.paged = bool(paged) and self.p > 0
+        self.page_tokens = int(page_tokens)
+        self.page_pool = page_pool
+        self.paged_kv: Optional[PagedKVCache] = None
         self.pos = 0
         self.t_device_s = 0.0
         self.t_server_s = 0.0
@@ -109,7 +134,19 @@ class DecodeSession:
     def device_cache_bytes(self) -> int:
         if self.dev_caches is None or self.p == 0:
             return 0
+        if self.paged_kv is not None:
+            # pages actually held + the dense non-attention remainder
+            return self.paged_kv.resident_bytes + \
+                segment_nonattn_cache_bytes(self.cfg, self.dev_caches, 0,
+                                            self.p)
         return segment_cache_bytes(self.cfg, self.dev_caches, 0, self.p)
+
+    def sever(self) -> int:
+        """End the stream: return every held KV page to the pool (no-op
+        for dense sessions). Returns the page count released."""
+        if self.paged_kv is None:
+            return 0
+        return self.paged_kv.free_all()
 
     def server_cache_bytes(self) -> int:
         if self.srv_caches is None:
@@ -135,6 +172,14 @@ class DecodeSession:
                 h0, cache0, 0, self.p, params=self.dev_params)
             h_in = fake_quant(h_dev, self.bits_x)
             jax.block_until_ready(h_in)
+            if self.paged:
+                if self.page_pool is None:
+                    self.page_pool = segment_page_pool(
+                        self.cfg, 0, self.p, b, self.max_len,
+                        self.dev_dtype, page_tokens=self.page_tokens)
+                self.paged_kv = PagedKVCache(self.page_pool, self.cfg, 0,
+                                             self.p, b, self.max_len)
+                self.paged_kv.ingest_prefill(self.dev_caches, s)
         t1 = time.perf_counter()
         if self.p == 0:
             h_in = self.backend.embed(prompt)
@@ -165,6 +210,8 @@ class DecodeSession:
                 params=self.dev_params)
             x_in = fake_quant(x_dev, self.bits_x)
             jax.block_until_ready(x_in)
+            if self.paged_kv is not None:
+                self.paged_kv.append_step(self.dev_caches, self.pos)
         t1 = time.perf_counter()
         if self.p == 0:
             x_in = self.backend.embed(tok)

@@ -77,6 +77,7 @@ import numpy as np
 
 from repro.core.cost_model import Channel, CostProvider, ServerProfile
 from repro.serving.decode.batching import DecodeBatcher, DecodeStream
+from repro.serving.decode.cache import PageLedger, paged_kv_ctx
 from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.engine.events import (ARRIVAL, CACHE_INSTALL, COMPLETE,
                                          DECODE_STEP, EPOCH, FAULT, RETRY,
@@ -218,6 +219,8 @@ class FleetEngine:
         # device_id -> set of (model, accuracy level, p) the device holds
         self.caches: dict = {}
         self.dead_letters: List[DeadLetter] = []
+        self.kv_ledger = PageLedger()
+        self._kv_streams: dict = {}
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[InferenceRequest],
@@ -254,6 +257,12 @@ class FleetEngine:
         # per-(model, level, batch) per-token term rows
         self._batchers = [DecodeBatcher() for _ in self.servers]
         self._decode_rows_cache: dict = {}
+        # block-granular device-KV residency (PR 9): streams of a backend
+        # with ``kv_page_tokens`` set are tracked at page granularity —
+        # open at prefill, grown as the ring fills, closed on finish or
+        # severance. Empty (zero-overhead) for legacy dense backends.
+        self.kv_ledger = PageLedger()
+        self._kv_streams: dict = {}          # index -> (backend, batch, cut)
         self.dead_letters = []
         # per-run pricing caches (§12). All keyed through the shared
         # ``_price_cache``'s stable CandidateRows identities — dropping
@@ -464,7 +473,41 @@ class FleetEngine:
             remaining=n_tok - 1, ready_at=finish + step_lag,
             o2_tok=float(rows.o2[c]), srv_bytes_tok=srv_b,
             step_lag=step_lag))
+        backend = self.qs.models[req.model].backend
+        if plan.p and getattr(backend, "kv_page_tokens", None) is not None \
+                and backend.decode_max_len is not None:
+            self._kv_open(i, backend, req.batch, c)
         self._push_decode(s)
+
+    # -- page-granular KV residency (PR 9) ------------------------------
+    def _kv_resident(self, backend, batch: int, cut: int, tokens: int):
+        """(bytes, context pages) a ``tokens``-token stream holds at cut
+        ``cut`` under paged allocation — ``kv_bytes_row`` at the
+        page-rounded context (cached per (batch, ctx) on the backend, so
+        per-round lookups are dict hits)."""
+        row = backend.kv_bytes_row(batch, tokens=tokens)
+        ctx = paged_kv_ctx(tokens, backend.kv_page_tokens,
+                           backend.decode_max_len)
+        return float(row[cut]), ctx // backend.kv_page_tokens
+
+    def _kv_open(self, i: int, backend, batch: int, cut: int) -> None:
+        tokens = int(backend.seq_len) + 1
+        nbytes, pages = self._kv_resident(backend, batch, cut, tokens)
+        self.kv_ledger.open(i, nbytes, pages)
+        self._kv_streams[i] = (backend, batch, cut)
+
+    def _kv_grow(self, i: int) -> None:
+        info = self._kv_streams.get(i)
+        if info is None:
+            return
+        backend, batch, cut = info
+        tokens = int(backend.seq_len) + int(self._st.tokens_emitted[i]) + 1
+        self.kv_ledger.grow(i, *self._kv_resident(backend, batch, cut,
+                                                  tokens))
+
+    def _kv_close(self, i: int) -> None:
+        if self._kv_streams.pop(i, None) is not None:
+            self.kv_ledger.close(i)
 
     def _on_decode(self, t: float, s: int) -> None:
         """One continuous-batching round at server ``s``: every stream
@@ -495,11 +538,13 @@ class FleetEngine:
             st.tokens_emitted[stm.index] += 1
             if stm.remaining <= 0:
                 batcher.remove(stm.index)
+                self._kv_close(stm.index)
                 st.decode_done[stm.index] = t_end
                 finished.append(stm.index)
                 self._queue.push(t_end, COMPLETE, (stm.index, stm.token))
             else:
-                stm.ready_at = t_end + stm.step_lag
+                batcher.rearm(stm.index, t_end + stm.step_lag)
+                self._kv_grow(stm.index)
                 active.append(stm.index)
         if self._journal is not None:
             self._journal.record(t, DECODE_STEP, server=s, stale=False,
@@ -561,6 +606,7 @@ class FleetEngine:
             if t >= fl.timeline.transfer_done and stream is None:
                 continue
             if stream is not None:
+                self._kv_close(i)
                 self._push_decode(fl.server)
             del self._inflight[i]
             self._live.discard(fl.token)

@@ -202,12 +202,24 @@ def price_window(models, server: ServerProfile,
         # column always remains.
         mem = np.stack(mem_rows)
         # decode-planned backends (decode_max_len set) additionally hold
-        # the device segment's KV cache at max_len for the stream's
-        # lifetime — candidate c's resident footprint is weights + cache
-        # (None for classifiers / prefill-only backends: mask unchanged;
-        # getattr tolerates spec-only backend stubs in tests)
+        # the device segment's KV cache for the stream's lifetime —
+        # candidate c's resident footprint is weights + cache (None for
+        # classifiers / prefill-only backends: mask unchanged; getattr
+        # tolerates spec-only backend stubs in tests). With
+        # ``kv_page_tokens`` set the stream is priced at its
+        # page-rounded ACTUAL context (prompt + its own new tokens)
+        # instead of the max_len worst case — strictly <= the dense
+        # reservation, so the mask only ever widens.
         kv_fn = getattr(m.backend, "kv_bytes_row", None)
-        kv_rows = [kv_fn(r.batch) if kv_fn else None for r in group]
+        paged = kv_fn is not None and \
+            getattr(m.backend, "kv_page_tokens", None) is not None
+        if paged:
+            seq = int(m.backend.seq_len)
+            kv_rows = [kv_fn(r.batch,
+                             tokens=seq + max(int(r.max_new_tokens), 1))
+                       for r in group]
+        else:
+            kv_rows = [kv_fn(r.batch) if kv_fn else None for r in group]
         if any(k is not None for k in kv_rows):
             zero = np.zeros_like(mem[0])
             mem = mem + np.stack([zero if k is None else k

@@ -195,9 +195,16 @@ class QPARTServer:
             return obj
 
         # decode-planned backends additionally hold the device segment's
-        # KV cache at max_len for the stream's lifetime (None otherwise:
-        # the prefill-only feasibility mask is unchanged)
-        kv_row = m.backend.kv_bytes_row(req.batch)
+        # KV cache for the stream's lifetime (None otherwise: the
+        # prefill-only feasibility mask is unchanged). ``kv_page_tokens``
+        # set -> priced at the stream's page-rounded actual context
+        # instead of the max_len worst case (serving.decode.cache)
+        if getattr(m.backend, "kv_page_tokens", None) is not None:
+            kv_row = m.backend.kv_bytes_row(
+                req.batch, tokens=int(m.backend.seq_len)
+                + max(int(req.max_new_tokens), 1))
+        else:
+            kv_row = m.backend.kv_bytes_row(req.batch)
 
         def feasible(pl):
             kv = float(kv_row[pl.p]) if kv_row is not None else 0.0

@@ -46,15 +46,19 @@ def stub_transformer_calibration(srv: QPARTServer, name: str, cfg,
                                  weights: ObjectiveWeights,
                                  seq_len: int = 32,
                                  decode_max_len: Optional[int] = None,
+                                 kv_page_tokens: Optional[int] = None,
                                  ) -> None:
     """Register transformer ``cfg`` under ``name`` with synthetic
     calibration constants (params may stay ``None`` — pricing never
     touches them) and build its offline store. A non-None
     ``decode_max_len`` marks the backend decode-planned: KV-cache
-    feasibility and the fleet decode lane activate."""
+    feasibility and the fleet decode lane activate; ``kv_page_tokens``
+    additionally switches KV admission/residency to block-granular
+    (page-rounded actual context instead of the max_len worst case)."""
     from repro.serving.backends import TransformerBackend
     srv.register(name, TransformerBackend(cfg, None, seq_len,
-                                          decode_max_len=decode_max_len),
+                                          decode_max_len=decode_max_len,
+                                          kv_page_tokens=kv_page_tokens),
                  np.zeros((4, seq_len), np.int32), np.zeros(4, np.int32))
     m = srv.models[name]
     L = cfg.num_layers

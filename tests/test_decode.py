@@ -377,3 +377,73 @@ class TestFleetDecode:
         s = metrics.summary()
         assert s["tokens_per_s"] == 0.0
         assert all(r.decode_tokens == 0 for r in metrics.records)
+
+
+class TestDecodeBatcher:
+    """Observable semantics of the heap-backed continuous-batching state
+    (PR 9) — locked against the pre-heap linear-scan implementation:
+    ``due`` yields joiners in ADMISSION order, ``next_time`` is
+    ``max(busy_until, min live ready_at)``, re-arms never reorder."""
+
+    @staticmethod
+    def _stream(index, ready_at):
+        from repro.serving.decode.batching import DecodeStream
+        return DecodeStream(index=index, token=(index, 1), device_id=None,
+                            remaining=4, ready_at=ready_at, o2_tok=1.0,
+                            srv_bytes_tok=1.0, step_lag=0.1)
+
+    def _batcher(self):
+        from repro.serving.decode.batching import DecodeBatcher
+        return DecodeBatcher()
+
+    def test_due_admission_order(self):
+        b = self._batcher()
+        for i, r in [(9, 0.5), (1, 0.2), (5, 0.9)]:
+            b.add(self._stream(i, r))
+        assert [s.index for s in b.due(1.0)] == [9, 1, 5]
+        assert [s.index for s in b.due(0.3)] == [1]
+        assert [s.index for s in b.due(0.6)] == [9, 1]
+
+    def test_rearm_keeps_admission_order(self):
+        b = self._batcher()
+        b.add(self._stream(1, 0.0))
+        b.add(self._stream(2, 0.0))
+        b.rearm(1, 5.0)                      # later ready, same seat
+        assert [s.index for s in b.due(10.0)] == [1, 2]
+        assert b.streams[1].ready_at == 5.0
+        assert [s.index for s in b.due(1.0)] == [2]
+
+    def test_next_time_max_of_busy_and_min_ready(self):
+        b = self._batcher()
+        assert b.next_time() is None
+        b.add(self._stream(1, 3.0))
+        b.add(self._stream(2, 7.0))
+        assert b.next_time() == 3.0
+        b.busy_until = 4.5
+        assert b.next_time() == 4.5
+        b.rearm(1, 9.0)                      # stale heap top is skipped
+        assert b.next_time() == 7.0
+
+    def test_remove_then_readmit_enters_at_back(self):
+        b = self._batcher()
+        for i in (1, 2, 3):
+            b.add(self._stream(i, 0.0))
+        b.remove(1)
+        assert [s.index for s in b.due(1.0)] == [2, 3]
+        b.add(self._stream(1, 0.0))          # fresh admission → back
+        assert [s.index for s in b.due(1.0)] == [2, 3, 1]
+
+    def test_overwrite_add_keeps_seat(self):
+        b = self._batcher()
+        b.add(self._stream(1, 0.0))
+        b.add(self._stream(2, 0.0))
+        b.add(self._stream(1, 0.4))          # retry overwrite, same seat
+        assert [s.index for s in b.due(1.0)] == [1, 2]
+        assert b.streams[1].ready_at == 0.4
+
+    def test_remove_clears_next_time(self):
+        b = self._batcher()
+        b.add(self._stream(1, 2.0))
+        b.remove(1)
+        assert b.next_time() is None
+        assert b.due(10.0) == []

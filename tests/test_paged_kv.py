@@ -1,0 +1,334 @@
+"""Block-granular KV allocation (PR 9, DESIGN.md §13): the paged cache
+round-trips the dense ring bit-for-bit at every cut, the resident
+footprint is page-monotone and strictly under the worst-case
+reservation, severed streams leak nothing (live sessions AND a seeded
+fleet trace with mid-stream disconnects), and page-rounded admission
+admits stream configs the ``decode_max_len`` worst-case mask rejects."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.cost_model import Channel, DeviceProfile, ObjectiveWeights
+from repro.core.solver import PartitionPlan
+from repro.models import transformer as T
+from repro.serving.backends import TransformerBackend
+from repro.serving.decode import DecodeSession
+from repro.serving.decode.cache import (DEFAULT_PAGE_TOKENS, KVPagePool,
+                                        PagedKVCache, PageLedger,
+                                        paged_kv_ctx, segment_page_pool)
+from repro.serving.engine import FleetEngine
+from repro.serving.engine.faults import DISCONNECT, RECONNECT, FaultEvent
+from repro.serving.errors import ServingError
+from repro.serving.pricing import price_window
+from repro.serving.qpart_server import QPARTServer
+from repro.serving.simulator import InferenceRequest
+from repro.serving.testing import stub_transformer_calibration
+
+pytestmark = pytest.mark.smoke
+
+KEY = jax.random.key(0)
+SEQ = 16
+MAX_LEN = 48
+PAGE = 8
+
+
+def _manual_plan(p: int, bits: float = 16.0) -> PartitionPlan:
+    return PartitionPlan(p=p, bits_w=np.full(p, float(bits)),
+                         bits_x=float(bits), objective=0.0, psi_total=0.0,
+                         payload_bits=0.0, breakdown={})
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = dataclasses.replace(
+        get_config("smollm-135m").reduced(), name="smollm-paged",
+        d_model=64, num_heads=2, num_kv_heads=1, head_dim=32, d_ff=128,
+        vocab_size=32, tp_pad=1, dtype="float32")
+    return cfg, T.init_params(KEY, cfg)
+
+
+class TestPagedKVCtx:
+    def test_rounds_up_to_page_and_caps_at_max(self):
+        assert paged_kv_ctx(1, 16, 64) == 16
+        assert paged_kv_ctx(16, 16, 64) == 16
+        assert paged_kv_ctx(17, 16, 64) == 32
+        assert paged_kv_ctx(1000, 16, 64) == 64
+
+    def test_never_exceeds_dense_worst_case(self):
+        for tokens in range(1, 200, 7):
+            assert paged_kv_ctx(tokens, 16, 64) <= 64
+
+    def test_monotone_in_tokens(self):
+        ctxs = [paged_kv_ctx(t, 16, 64) for t in range(1, 128)]
+        assert all(a <= b for a, b in zip(ctxs, ctxs[1:]))
+
+
+class TestPagePool:
+    def test_alloc_release_and_exhaustion(self):
+        pool = KVPagePool(2, 4, kvp=1, hd=8, dtype=jnp.float32)
+        a, b = pool.alloc(), pool.alloc()
+        assert pool.used_pages == 2
+        assert pool.used_bytes == 2 * pool.page_bytes
+        with pytest.raises(ServingError, match="exhausted"):
+            pool.alloc()
+        pool.release(a)
+        assert pool.used_pages == 1
+        c = pool.alloc()                 # recycled
+        assert c == a
+        pool.release(b)
+        pool.release(c)
+        assert pool.used_pages == 0
+
+    def test_alloc_zeroes_recycled_pages(self):
+        pool = KVPagePool(1, 4, kvp=1, hd=8, dtype=jnp.float32)
+        p = pool.alloc()
+        pool.data[p] = 7.0
+        pool.release(p)
+        assert np.all(pool.data[pool.alloc()] == 0.0)
+
+
+class TestPagedSessionRoundTrip:
+    def _session(self, lm, p, paged, n=8):
+        cfg, params = lm
+        backend = TransformerBackend(cfg, params, seq_len=SEQ)
+        prompt = jax.random.randint(KEY, (2, SEQ), 0, cfg.vocab_size)
+        s = DecodeSession(backend, _manual_plan(p, bits=8.0),
+                          max_len=MAX_LEN, qkernels=False, paged=paged,
+                          page_tokens=PAGE)
+        return s, s.generate(prompt, n), prompt
+
+    @pytest.mark.parametrize("p", [1, 2])
+    def test_round_trip_bit_for_bit_every_cut(self, lm, p):
+        """``to_dense`` on the live paged structure reproduces the jit
+        operand cache exactly on every owned attention slice, and the
+        stream's tokens are unchanged by the paging."""
+        cfg, params = lm
+        s, r, prompt = self._session(lm, p, paged=True)
+        s_dense, r_dense, _ = self._session(lm, p, paged=False)
+        np.testing.assert_array_equal(r.tokens, r_dense.tokens)
+        rebuilt = s.paged_kv.to_dense(
+            T.init_cache(cfg, 2, MAX_LEN, s.dev_dtype))
+        for layer, (pos, per) in s.paged_kv.attn_layers.items():
+            for k in ("k", "v"):
+                np.testing.assert_array_equal(
+                    np.asarray(rebuilt[pos][k][per]),
+                    np.asarray(s.dev_caches[pos][k][per]))
+
+    def test_footprint_monotone_and_under_reservation(self, lm):
+        cfg, params = lm
+        backend = TransformerBackend(cfg, params, seq_len=SEQ)
+        prompt = jax.random.randint(KEY, (1, SEQ), 0, cfg.vocab_size)
+        p = cfg.num_layers
+        dense = DecodeSession(backend, _manual_plan(p, bits=8.0),
+                              max_len=MAX_LEN, paged=False)
+        paged = DecodeSession(backend, _manual_plan(p, bits=8.0),
+                              max_len=MAX_LEN, paged=True, page_tokens=PAGE)
+        tok_d = dense.prefill(prompt)
+        tok_p = paged.prefill(prompt)
+        sizes = [paged.device_cache_bytes()]
+        for _ in range(12):
+            tok_d = dense.step(tok_d)
+            tok_p = paged.step(tok_p)
+            sizes.append(paged.device_cache_bytes())
+        assert sizes == sorted(sizes), "resident bytes must be monotone"
+        # SEQ=16 + 13 tokens < MAX_LEN=48: strictly under the reservation
+        assert sizes[-1] < dense.device_cache_bytes()
+        # and exactly the held pages (+ zero dense non-attn remainder
+        # for a pure-attention stack)
+        assert sizes[-1] == paged.paged_kv.resident_bytes
+        held = paged.paged_kv.held_pages
+        assert held == paged.page_pool.used_pages
+
+    def test_sever_returns_all_pages(self, lm):
+        s, _, _ = self._session(lm, 2, paged=True)
+        assert s.page_pool.used_pages > 0
+        freed = s.sever()
+        assert freed > 0
+        assert s.page_pool.used_pages == 0
+        assert s.paged_kv.resident_bytes == 0
+
+    def test_shared_pool_two_streams_no_leak(self, lm):
+        """Two sessions over ONE pool: pages interleave, both sever
+        clean — the fleet-level allocation story at tensor granularity."""
+        cfg, params = lm
+        backend = TransformerBackend(cfg, params, seq_len=SEQ)
+        prompt = jax.random.randint(KEY, (1, SEQ), 0, cfg.vocab_size)
+        p = cfg.num_layers
+        pool = segment_page_pool(cfg, 0, p, 1, MAX_LEN, jnp.float8_e4m3fn,
+                                 page_tokens=PAGE, streams=2)
+        ses = [DecodeSession(backend, _manual_plan(p, bits=8.0),
+                             max_len=MAX_LEN, paged=True, page_tokens=PAGE,
+                             page_pool=pool) for _ in range(2)]
+        for s in ses:
+            s.generate(prompt, 6)
+        assert pool.used_pages == sum(s.paged_kv.held_pages for s in ses)
+        for s in ses:
+            s.sever()
+        assert pool.used_pages == 0
+
+
+class TestPagedAdmission:
+    """kv_bytes_row(tokens=...) + the pricing/serve masks: page-rounded
+    actual context admits what the worst-case bound rejects."""
+
+    def _server(self, kv_page_tokens, memory_bytes):
+        cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                                  dtype="float32")
+        dev = DeviceProfile(memory_bytes=memory_bytes)
+        ch = Channel(capacity_bps=2e6)
+        w = ObjectiveWeights()
+        srv = QPARTServer()
+        stub_transformer_calibration(srv, "lm", cfg, dev, ch, w,
+                                     seq_len=SEQ, decode_max_len=512,
+                                     kv_page_tokens=kv_page_tokens)
+        return srv, (dev, ch, w)
+
+    def test_row_paged_leq_dense_and_monotone(self):
+        srv, _ = self._server(16, 2e9)
+        be = srv.models["lm"].backend
+        dense = be.kv_bytes_row(1)
+        short = be.kv_bytes_row(1, tokens=SEQ + 4)
+        longer = be.kv_bytes_row(1, tokens=SEQ + 200)
+        assert np.all(short <= dense) and np.all(longer <= dense)
+        assert np.all(short <= longer)
+        assert short[-1] < dense[-1]     # short stream strictly cheaper
+        # page rounding: +1 token inside the same page is free
+        same = be.kv_bytes_row(1, tokens=SEQ + 5)
+        np.testing.assert_array_equal(short, same)
+
+    def _device_memory_between(self):
+        """A budget that fits weights + paged KV of a short stream but
+        NOT weights + the 512-token worst case, for some cut."""
+        srv, _ = self._server(16, 2e9)
+        m = srv.models["lm"]
+        store = m.store(None)
+        lvl = store.level_for(0.05)
+        mem = store.level_memory_rows(lvl)
+        dense = m.backend.kv_bytes_row(1)
+        paged = m.backend.kv_bytes_row(1, tokens=SEQ + 4)
+        need_dense = np.asarray(mem) + np.asarray(dense)
+        need_paged = np.asarray(mem) + np.asarray(paged)
+        # pick a budget between the two for the LAST cut
+        c = len(dense) - 1
+        assert need_paged[c] < need_dense[c]
+        return float((need_paged[c] + need_dense[c]) / 2)
+
+    def test_mask_admits_config_dense_rejects(self):
+        """The acceptance criterion: at a device-memory budget BETWEEN
+        the paged and worst-case requirements, the ``price_window``
+        admission mask rejects the deep cut under dense reservation and
+        admits it under page-rounded pricing."""
+        budget = self._device_memory_between()
+        srv_d, (dev, ch, w) = self._server(None, budget)
+        srv_p, _ = self._server(16, budget)
+        dev = dataclasses.replace(dev, memory_bytes=budget)
+        req = InferenceRequest("lm", 0.05, dev, ch, w, max_new_tokens=4)
+        tab_d = price_window(srv_d.models, srv_d.server, [req])
+        tab_p = price_window(srv_p.models, srv_p.server, [req])
+        c = len(tab_d.obj[0]) - 1                    # the deepest cut
+        assert np.isinf(tab_d.obj[0][c]), \
+            "worst-case mask should reject the deep cut"
+        assert np.isfinite(tab_p.obj[0][c]), \
+            "page-rounded mask should admit it"
+        # the paged mask only ever widens the feasible set
+        feas_d = np.isfinite(tab_d.obj[0])
+        feas_p = np.isfinite(tab_p.obj[0])
+        assert np.all(feas_p | ~feas_d), "paged must not reject what " \
+            "dense admits"
+
+    def test_serve_feasibility_uses_paged_row(self):
+        """``QPARTServer.serve`` plans through the same widened mask —
+        at the in-between budget the paged server can deploy the deep
+        cut, the dense server cannot (its feasible_fn rejects it)."""
+        budget = self._device_memory_between()
+        srv_d, (dev, ch, w) = self._server(None, budget)
+        srv_p, _ = self._server(16, budget)
+        dev = dataclasses.replace(dev, memory_bytes=budget)
+        req = InferenceRequest("lm", 0.05, dev, ch, w, max_new_tokens=4)
+        # both serve successfully (p=0 is always feasible) ...
+        p_dense = srv_d.serve(req).plan.p
+        p_paged = srv_p.serve(req).plan.p
+        L = srv_d.models["lm"].backend.num_layers
+        assert p_dense < L
+        # ... and the paged feasible set strictly contains the dense one
+        kv_d = srv_d.models["lm"].backend.kv_bytes_row(req.batch)
+        kv_p = srv_p.models["lm"].backend.kv_bytes_row(
+            req.batch, tokens=SEQ + req.max_new_tokens)
+        store = srv_d.models["lm"].store(None)
+        mem = np.asarray(store.level_memory_rows(store.level_for(0.05)))
+        assert mem[L] + kv_d[L] > budget >= mem[L] + kv_p[L]
+        assert p_paged >= p_dense
+
+
+class TestFleetLedger:
+    def _stub(self, kv_page_tokens=16):
+        cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                                  dtype="float32")
+        # fast channel + expensive server compute: the objective argmin
+        # lands on a device cut p > 0, so streams actually hold device KV
+        dev = DeviceProfile(memory_bytes=2e9)
+        ch = Channel(capacity_bps=2e10)
+        w = ObjectiveWeights(eta=1e5)
+        srv = QPARTServer()
+        stub_transformer_calibration(srv, "lm", cfg, dev, ch, w,
+                                     seq_len=SEQ, decode_max_len=64,
+                                     kv_page_tokens=kv_page_tokens)
+        return srv, (dev, ch, w)
+
+    def test_no_leak_over_seeded_trace(self):
+        srv, (dev, ch, w) = self._stub()
+        reqs = [InferenceRequest("lm", 0.05, dev, ch, w, arrival_time=0.0,
+                                 device_id=f"d{i}", max_new_tokens=20)
+                for i in range(5)]
+        eng = FleetEngine(srv)
+        metrics = eng.run(reqs)
+        metrics.assert_terminal()
+        led = eng.kv_ledger
+        assert led.open_streams == 0
+        assert led.resident_bytes == 0
+        assert led.total_page_allocs == led.total_page_frees > 0
+        assert led.peak_bytes > 0
+
+    def test_no_leak_through_midstream_severance(self):
+        srv, (dev, ch, w) = self._stub()
+        reqs = [InferenceRequest("lm", 0.05, dev, ch, w, arrival_time=0.0,
+                                 device_id="d0", max_new_tokens=40),
+                InferenceRequest("lm", 0.05, dev, ch, w, arrival_time=0.0,
+                                 device_id="d1", max_new_tokens=40)]
+        horizon = FleetEngine(srv).run(reqs).horizon
+        faults = [FaultEvent(horizon / 2, DISCONNECT, "d0"),
+                  FaultEvent(horizon, RECONNECT, "d0")]
+        eng = FleetEngine(srv, faults=faults)
+        metrics = eng.run(reqs)
+        metrics.assert_terminal()
+        assert metrics.records[0].faults == 1       # really severed
+        led = eng.kv_ledger
+        assert led.open_streams == 0
+        assert led.resident_bytes == 0
+        assert led.total_page_allocs == led.total_page_frees > 0
+
+    def test_residency_grows_with_stream(self):
+        led = PageLedger()
+        led.open(0, 100.0, 2)
+        led.grow(0, 150.0, 3)
+        assert led.resident_bytes == 150.0 and led.resident_pages == 3
+        led.grow(0, 140.0, 3)                        # never shrinks
+        assert led.resident_bytes == 150.0
+        assert led.peak_bytes == 150.0
+        assert led.close(0) == 3
+        assert led.open_streams == 0 and led.resident_bytes == 0
+
+    def test_legacy_dense_backend_untouched(self):
+        """Without kv_page_tokens the ledger stays empty — zero decode-
+        lane overhead and bit-identical legacy behavior."""
+        srv, (dev, ch, w) = self._stub(kv_page_tokens=None)
+        reqs = [InferenceRequest("lm", 0.05, dev, ch, w, arrival_time=0.0,
+                                 device_id="d0", max_new_tokens=10)]
+        eng = FleetEngine(srv)
+        eng.run(reqs).assert_terminal()
+        assert eng.kv_ledger.total_page_allocs == 0
+        assert eng.kv_ledger.peak_bytes == 0
