@@ -1,6 +1,7 @@
-"""Decode serving benchmark (the BENCH_serving.json "decode" section).
+"""Decode serving benchmark (the BENCH_serving.json "decode" section,
+plus the PR 10 "decode_chunked" / "decode_speculative" sections).
 
-Two parts, one section:
+Four parts:
 
 ``decode_session`` rows — REAL streamed generation through the
 partitioned prefill→decode pipeline (``DecodeSession``) on reduced
@@ -17,6 +18,16 @@ lane (pricing-only, stub-calibrated): a trace of concurrent decode
 streams plus one-shot traffic, reporting tokens/s, TTFT percentiles and
 the realized mean round batch, with terminal accounting asserted and
 the journal replayed as a determinism check.
+
+``decode_chunked`` rows — TTFT vs prompt length, chunked-vs-monolithic
+prefill, with the compile decoupling asserted: the monolithic lane
+re-traces at every fresh prompt length while the chunked lane serves
+every length from one chunk-shaped program, so chunked TTFT growth is
+strictly sublinear relative to monolithic (DESIGN.md §14).
+
+``decode_speculative`` rows — tokens/s vs draft length k at >= 2 cut
+points with the measured acceptance rate; every speculative stream is
+asserted bitwise identical to plain greedy at the same cut.
 
   PYTHONPATH=src python -m benchmarks.run --only decode
 """
@@ -229,9 +240,154 @@ def _paged_rows(smoke: bool) -> list:
     }]
 
 
+def _chunked_rows(smoke: bool) -> list:
+    """TTFT vs prompt length, chunked vs monolithic prefill (PR 10).
+
+    The decoupling claim is about COMPILATION, not FLOPs: monolithic
+    prefill admits the whole prompt as one cache extension whose jitted
+    program is shape-keyed on the prompt length, so every fresh length
+    pays an XLA retrace inside TTFT.  Chunked prefill walks the prompt
+    in fixed-size chunks — one chunk-shaped program serves every prompt
+    length.  Asserted, not just reported: (a) after one warm chunked
+    pass at the SHORTEST length, longer prompts add zero traces while
+    the monolithic lane re-traces at every new length, (b) chunked TTFT
+    beats monolithic TTFT at every unseen length and its end-to-end TTFT
+    growth across the sweep is strictly below the monolithic growth
+    (sublinear relative to monolithic), (c) the emitted tokens are
+    bitwise identical — chunked admission is the same computation."""
+    chunk = 8
+    lens = (8, 16, 24) if smoke else (8, 16, 24, 32, 40)
+    gen = 4
+    cfg = dataclasses.replace(get_config("smollm-135m").reduced(),
+                              dtype="float32")
+    params = T.init_params(jax.random.key(0), cfg)
+    L = cfg.num_layers
+    p = max(1, L // 2)
+    seq, max_len = max(lens), max(lens) + 16
+    b_mono = TransformerBackend(cfg, params, seq_len=seq,
+                                decode_max_len=max_len)
+    b_chnk = TransformerBackend(cfg, params, seq_len=seq,
+                                decode_max_len=max_len)
+    prompts = {s: np.asarray(jax.random.randint(
+        jax.random.key(2), (1, s), 0, cfg.vocab_size)) for s in lens}
+    # warm BOTH lanes at the shortest prompt so the sweep isolates the
+    # per-length cost: the chunked lane's one chunk-shaped program now
+    # serves every length, while the monolithic lane still owes a fresh
+    # prompt-length-shaped trace at each longer prompt
+    DecodeSession(b_chnk, _plan(p), max_len=max_len,
+                  prefill_chunk_tokens=chunk).generate(prompts[lens[0]], gen)
+    DecodeSession(b_mono, _plan(p), max_len=max_len).generate(
+        prompts[lens[0]], gen)
+    warm_traces = b_chnk.trace_count
+    rows = []
+    for i, s in enumerate(lens):
+        tm0 = b_mono.trace_count
+        out_m = DecodeSession(b_mono, _plan(p), max_len=max_len).generate(
+            prompts[s], gen)
+        mono_traced = b_mono.trace_count - tm0
+        sess_c = DecodeSession(b_chnk, _plan(p), max_len=max_len,
+                               prefill_chunk_tokens=chunk)
+        out_c = sess_c.generate(prompts[s], gen)
+        assert b_chnk.trace_count == warm_traces, \
+            f"chunked prefill re-traced at prompt length {s}"
+        np.testing.assert_array_equal(out_c.tokens, out_m.tokens)
+        if i > 0:
+            assert mono_traced > 0, \
+                f"monolithic prefill unexpectedly cached length {s}"
+            assert out_c.ttft_s < out_m.ttft_s, \
+                f"chunked TTFT should beat a fresh monolithic trace at {s}"
+        rows.append({
+            "bench": "decode_chunked",
+            "model": "smollm-135m",
+            "p": p,
+            "prompt_len": s,
+            "chunks": out_c.prefill_chunks,
+            "ttft_mono_ms": round(out_m.ttft_s * 1e3, 3),
+            "ttft_chunked_ms": round(out_c.ttft_s * 1e3, 3),
+            "mono_traces_added": mono_traced,
+            "chunked_traces_added": 0,
+        })
+    growth_c = rows[-1]["ttft_chunked_ms"] - rows[0]["ttft_chunked_ms"]
+    growth_m = rows[-1]["ttft_mono_ms"] - rows[0]["ttft_mono_ms"]
+    assert growth_c < growth_m, \
+        f"chunked TTFT growth {growth_c}ms not sublinear vs " \
+        f"monolithic {growth_m}ms"
+    return rows
+
+
+def _spec_rows(smoke: bool) -> list:
+    """Tokens/s vs draft length k at >= 2 cut points, with the measured
+    draft acceptance rate (PR 10).  Every k is verified bit-identical to
+    the k=0 greedy stream at the same cut — speculation changes the
+    round structure (rounds < new_tokens - 1), never the tokens — and
+    the measured pass may not grow ``trace_count`` past the warm pass."""
+    gen = 10 if smoke else 20
+    ks = (0, 1, 2, 3)
+    names = MODELS[:1] if smoke else MODELS
+    rows = []
+    for name in names:
+        cfg = dataclasses.replace(get_config(name).reduced(),
+                                  dtype="float32")
+        params = T.init_params(jax.random.key(0), cfg)
+        backend = TransformerBackend(cfg, params, seq_len=SEQ,
+                                     decode_max_len=MAX_LEN)
+        L = cfg.num_layers
+        cuts = sorted({max(1, L // 2), L})
+        prompt = np.asarray(jax.random.randint(
+            jax.random.key(1), (1, SEQ), 0, cfg.vocab_size))
+        for p in cuts:                               # warm pass: compile
+            for k in ks:
+                DecodeSession(backend, _plan(p), max_len=MAX_LEN,
+                              draft_tokens=k).generate(prompt, gen)
+        n_traces = backend.trace_count
+        for p in cuts:                               # measured pass
+            base = None
+            for k in ks:
+                sess = DecodeSession(backend, _plan(p), max_len=MAX_LEN,
+                                     draft_tokens=k)
+                t0 = time.perf_counter()
+                out = sess.generate(prompt, gen)
+                wall = time.perf_counter() - t0
+                if k == 0:
+                    base = out.tokens
+                else:
+                    np.testing.assert_array_equal(out.tokens, base)
+                rate = out.accept_rate
+                rows.append({
+                    "bench": "decode_speculative",
+                    "model": name,
+                    "p": p,
+                    "k": k,
+                    "rounds": out.rounds,
+                    "accept_rate": round(rate, 3)
+                    if rate is not None else None,
+                    "tokens_per_s": round(gen / wall, 1) if wall > 0
+                    else None,
+                })
+        assert backend.trace_count == n_traces, \
+            f"{name}: speculative programs re-traced in the measured pass"
+    return rows
+
+
 def decode(smoke: bool = False):
     rows = _session_rows(smoke) + _fleet_rows(smoke) + _paged_rows(smoke)
-    # one key union across both row shapes (the harness CSV-prints each
+    chunked = _chunked_rows(smoke)
+    spec = _spec_rows(smoke)
+    update_bench_json(OUT_PATH, "decode_chunked", {
+        "smoke": smoke,
+        "model": "smollm-135m",
+        "chunk_tokens": 8,
+        "rows": chunked,
+    })
+    update_bench_json(OUT_PATH, "decode_speculative", {
+        "smoke": smoke,
+        "models": list(MODELS[:1] if smoke else MODELS),
+        "seq_len": SEQ,
+        "device_bits": DEVICE_BITS,
+        "rows": spec,
+    })
+    rows = rows + chunked + spec
+    # one key union across the row shapes (the harness CSV-prints each
     # benchmark with rows[0]'s fieldnames)
     keys = list(dict.fromkeys(k for r in rows for k in r))
     rows = [{k: r.get(k) for k in keys} for r in rows]

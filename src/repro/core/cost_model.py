@@ -558,11 +558,18 @@ class CalibratedCost(CostProvider):
     term_ids = (TERM_O1, TERM_O2, TERM_WIRE, TERM_DEV_BYTES, TERM_SRV_BYTES)
 
     def __init__(self, device_rates: dict, server_rates: dict,
-                 default_device: StageRates, default_server: StageRates):
+                 default_device: StageRates, default_server: StageRates,
+                 accept_rate: Optional[float] = None):
         self.device_rates = device_rates      # DeviceProfile -> StageRates
         self.server_rates = server_rates      # ServerProfile -> StageRates
         self.default_device = default_device
         self.default_server = default_server
+        # pooled measured draft-acceptance rate (DESIGN.md §14) — what
+        # the fleet engine's speculative lane resolves its default
+        # ``accept_rate`` from when pricing through a calibrated
+        # provider; None until a speculative generation was recorded
+        self.mean_accept_rate = None if accept_rate is None \
+            else float(accept_rate)
 
     def _dev(self, d: DeviceProfile) -> StageRates:
         return self.device_rates.get(d, self.default_device)
@@ -621,6 +628,9 @@ class CalibrationLedger:
     def __init__(self, min_samples: int = 3):
         self.samples: List[_LedgerSample] = []
         self.min_samples = min_samples
+        # (drafts proposed, drafts accepted) per speculative generation —
+        # pooled into ``mean_accept_rate`` (DESIGN.md §14)
+        self.accept_samples: List[tuple] = []
 
     def __len__(self) -> int:
         return len(self.samples)
@@ -665,6 +675,19 @@ class CalibrationLedger:
         self.add(deployment.request.device, server, o1 * n, o2 * n,
                  dev_b * n, srv_b * n,
                  float(meas["t_device_s"]), float(meas["t_server_s"]))
+        if meas.get("accept_rate") is not None:
+            self.accept_samples.append(
+                (float(meas.get("drafts_proposed", 0)),
+                 float(meas.get("drafts_accepted", 0))))
+
+    @property
+    def mean_accept_rate(self) -> Optional[float]:
+        """Pooled measured draft acceptance (accepted / proposed over
+        every recorded speculative generation); None until one lands."""
+        proposed = sum(p for p, _ in self.accept_samples)
+        if proposed <= 0:
+            return None
+        return sum(a for _, a in self.accept_samples) / proposed
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -712,7 +735,25 @@ class CalibrationLedger:
                 r = stage(group, "o2", "srv_bytes", "t_server")
                 if r is not None:
                     srv_rates[sv] = r
-        return CalibratedCost(dev_rates, srv_rates, glob_dev, glob_srv)
+        return CalibratedCost(dev_rates, srv_rates, glob_dev, glob_srv,
+                              accept_rate=self.mean_accept_rate)
+
+
+def expected_tokens_per_round(draft_k: int, accept_rate: float) -> float:
+    """Expected tokens one speculative decode round emits (DESIGN.md
+    §14): the verified-prefix emission is 1 (the server's own sample) +
+    the accepted drafts, so under a per-draft acceptance rate ``α`` the
+    expectation is ``1 + α·k`` — the factor the per-round pricing terms
+    divide by to get effective per-token cost, and the mean the fleet
+    engine's deterministic fractional accumulator reproduces exactly
+    over any window of rounds."""
+    k = int(draft_k)
+    if k < 0:
+        raise ValueError("draft_k must be >= 0")
+    a = float(accept_rate)
+    if not 0.0 <= a <= 1.0:
+        raise ValueError("accept_rate must be within [0, 1]")
+    return 1.0 + a * k
 
 
 ANALYTIC = AnalyticCost()       # the module-wide default provider

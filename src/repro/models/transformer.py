@@ -484,6 +484,164 @@ def segment_decode_step(params, cfg: ModelConfig, x, caches, pos, start,
     return x, list(caches)
 
 
+def _attn_extend_with_cache(ap, cfg, h, positions, cache):
+    """Multi-token attention against a PARTIALLY POPULATED ring cache:
+    project/RoPE the ``s`` incoming rows at absolute ``positions``, write
+    their K/V into the cache, then attend every row against the full
+    ring under a per-row validity mask (ring index <= row position).
+    Masked lanes contribute EXACT zeros (``exp(NEG_INF - m) == 0.0`` and
+    ``0.0 * v == 0.0``), so the reduction over the padded ring is
+    bitwise the reduction over just the valid prefix — the body below is
+    the single-block ``_blocked_causal_attention`` accumulator math with
+    its initial carries written out (m0 = NEG_INF, l0 = 0, acc0 = 0:
+    ``corr`` underflows to exact 0.0, so l = p.sum and acc = pv).
+
+    Chunked prefill is therefore bitwise the monolithic
+    ``segment_prefill`` for lossless cache storage and chunks of >= 2
+    rows within one causal block (s <= DEFAULT_BLOCK_K): XLA lowers a
+    1-row chunk's dense contractions to matvecs whose reduction order
+    differs from the matmul the monolithic path ran, so chunk planners
+    must never emit a size-1 chunk (``DecodeSession`` folds a remainder
+    of 1 into the final chunk).
+
+    No-wraparound contract: callers guarantee ``positions < buf`` (the
+    decode sessions gate out sliding-window configs and bound positions
+    by ``max_len``), so slot == position and the write is one
+    ``dynamic_update_slice``.
+    """
+    from repro.models.attention import NEG_INF, _out_proj, _project_qkv
+    b, s, _ = h.shape
+    buf = cache["k"].shape[1]
+    q, k, v = _project_qkv(ap, cfg, h)
+    qr = rope_lib.apply_rope(cfg.rope, q, positions, cfg.rope_theta)
+    kr = rope_lib.apply_rope(cfg.rope, k, positions, cfg.rope_theta)
+    pos0 = positions[0, 0]
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], kr.astype(cache["k"].dtype), pos0, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)
+    hd = qr.shape[-1]
+    kb = ck.astype(qr.dtype)
+    vb = cv.astype(qr.dtype)
+    qp = positions[0]                        # (s,) absolute row positions
+    kp = jnp.arange(buf, dtype=positions.dtype)   # ring index == position
+    mask = qp[:, None] >= kp[None, :]        # (s, buf) causal validity
+    scale = hd ** -0.5
+    sc = jnp.einsum("bqkgd,bskd->bkgqs", qr, kb,
+                    preferred_element_type=jnp.float32) * scale
+    sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+    m0 = jnp.full((b, kb.shape[2], qr.shape[3], s), NEG_INF, jnp.float32)
+    m_new = jnp.maximum(m0, sc.max(axis=-1))
+    p = jnp.exp(sc - m_new[..., None])
+    corr = jnp.exp(m0 - m_new)
+    l = jnp.zeros_like(m0) * corr + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+                    preferred_element_type=jnp.float32)
+    acc = jnp.zeros_like(pv) * corr[..., None] + pv
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).astype(qr.dtype)
+    out = _out_proj(ap, cfg, out, h.dtype)
+    return out, {"k": ck, "v": cv}
+
+
+def segment_extend(params, cfg: ModelConfig, h, caches, pos0, start, stop):
+    """Apply blocks ``[start, stop)`` to ``s`` NEW rows ``h`` (B, S, D)
+    entering at absolute position ``pos0``, extending the per-block ring
+    caches in place of re-running the whole prefix. The masked-scan twin
+    of ``segment_prefill`` with a POSITION OFFSET: ``pos0``/``start``/
+    ``stop`` are dynamic operands, so the program is shape-keyed on the
+    CHUNK length, never the prompt length — every chunk of every prompt
+    reuses one compiled program per (batch, s) shape, and chunked
+    prefill rebuilds a bit-identical cache vs the monolithic
+    ``segment_prefill`` (see :func:`_attn_extend_with_cache` for the
+    exact conditions). Attention blocks only — SSM state is a running
+    reduction, not position-addressable, so a chunk cannot resume it
+    mid-stream."""
+    plen, nper = period_len(cfg), num_periods(cfg)
+    for pos in range(plen):
+        if cfg.block_kind(pos) != ATTN:
+            raise NotImplementedError(
+                "segment_extend supports attention blocks only: "
+                f"block kind at period position {pos} is not ATTN")
+    b, s, _ = h.shape
+    positions = rope_lib.text_positions(b, s) + jnp.asarray(pos0, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+
+    def scan_fn(x, inp):
+        per_idx, period_params, caches_in = inp
+        new_caches = []
+        for pos in range(plen):
+            layer = per_idx * plen + pos
+            bp = _dequant_block(period_params[pos], cfg)
+            hh = norm_apply(cfg.norm, bp["norm1"], x)
+            mixed, c = _attn_extend_with_cache(bp["attn"], cfg, hh,
+                                               positions, caches_in[pos])
+            x_new = x + mixed
+            if "moe" in bp:
+                h2 = norm_apply(cfg.norm, bp["norm2"], x_new)
+                out, _ = moe_apply(bp["moe"], cfg, h2)
+                x_new = x_new + out
+            elif "mlp" in bp:
+                h2 = norm_apply(cfg.norm, bp["norm2"], x_new)
+                x_new = x_new + mlp_apply(bp["mlp"], cfg, h2)
+            active = (layer >= start) & (layer < stop)
+            x = jnp.where(active, x_new, x)
+            new_caches.append(jax.tree.map(
+                lambda new, old: jnp.where(active, new, old),
+                c, caches_in[pos]))
+        return x, tuple(new_caches)
+
+    xs = (jnp.arange(nper), tuple(params["blocks"]), tuple(caches))
+    h, caches = jax.lax.scan(scan_fn, h, xs)
+    return h, list(caches)
+
+
+def segment_verify(params, cfg: ModelConfig, xs, caches, pos0, start, stop):
+    """Speculative-decode verification: run the ``s`` hidden rows ``xs``
+    (B, S, D) — the cut-point activations of a drafted token batch at
+    positions ``pos0 .. pos0 + s - 1`` — through blocks ``[start, stop)``
+    and unembed EVERY row. Returns ``(logits (B, S, V), caches)``.
+
+    The rows execute as a ``lax.scan`` of the EXACT
+    ``segment_decode_step`` + unembed per-token math, inside ONE jitted
+    program: bit-identical logits to ``s`` sequential decode steps BY
+    CONSTRUCTION (same ops, same shapes, same kernel routing — a
+    guarantee a batched multi-row forward cannot make, since XLA's
+    reduction order in the dense contractions differs between 1-row and
+    s-row operands). What the batching buys is the SERVING shape: one
+    device->server round trip verifies k drafts instead of k round
+    trips, which is the term that bounds tokens/s on a slow channel.
+
+    Attention blocks only: an SSM running state cannot be rolled back
+    to the acceptance point when a draft is rejected, while a ring
+    cache needs no rollback at all (every stale slot is re-written
+    before any later query can attend it)."""
+    plen = period_len(cfg)
+    for pos in range(plen):
+        if cfg.block_kind(pos) != ATTN:
+            raise NotImplementedError(
+                "segment_verify supports attention blocks only: "
+                f"block kind at period position {pos} is not ATTN")
+    b, s, _ = xs.shape
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    start = jnp.asarray(start, jnp.int32)
+    stop = jnp.asarray(stop, jnp.int32)
+
+    def row_step(carry, inp):
+        xj, off = inp                       # (B, D), scalar row offset
+        x_out, new_caches = segment_decode_step(
+            params, cfg, xj[:, None, :], list(carry), pos0 + off, start,
+            stop)
+        logits = _unembed(params, cfg, x_out)[:, -1, :]
+        return tuple(new_caches), logits
+
+    carry, logits = jax.lax.scan(
+        row_step, tuple(caches),
+        (xs.transpose(1, 0, 2), jnp.arange(s, dtype=jnp.int32)))
+    return logits.transpose(1, 0, 2), list(carry)
+
+
 # ---------------------------------------------------------------------------
 # Public single-block entry points (repro.serving.backends.transformer):
 # embed/unembed and one block application — the non-scan view of the same

@@ -179,6 +179,28 @@ class TransformerBackend(ModelBackend):
                                          start, stop)
         return self.jitted("decode_seg", lambda: f)
 
+    # -- chunked-prefill / speculative-verify programs (DESIGN.md §14) --
+    # Two more shape-keyed programs with a DYNAMIC position offset, so
+    # every chunk of every prompt — and every k-token verify batch —
+    # reuses one compilation per (batch, s) shape:
+    #   extend_seg  (params, h, caches, pos0, start, stop) -> (h, caches)
+    #       chunked prefill: monolithic-prefill formula over the ring
+    #   verify_seg  (params, h, caches, pos0, start, stop)
+    #                                               -> (logits, caches)
+    #       speculative verify: a lax.scan of the EXACT per-token decode
+    #       step + unembed — one round trip, bitwise s sequential steps
+    def _extend_seg(self):
+        def f(params, h, caches, pos0, start, stop):
+            return T.segment_extend(params, self.cfg, h, caches, pos0,
+                                    start, stop)
+        return self.jitted("extend_seg", lambda: f)
+
+    def _verify_seg(self):
+        def f(params, h, caches, pos0, start, stop):
+            return T.segment_verify(params, self.cfg, h, caches, pos0,
+                                    start, stop)
+        return self.jitted("verify_seg", lambda: f)
+
     def embed(self, tokens, params=None):
         return self._embed_prog()(
             self.params if params is None else params, tokens)
@@ -191,6 +213,23 @@ class TransformerBackend(ModelBackend):
     def decode_segment(self, x, caches, pos, start, stop, params=None):
         return self._decode_seg()(
             self.params if params is None else params, x, caches, pos,
+            start, stop)
+
+    def extend_segment(self, h, caches, pos0, start, stop, params=None):
+        """Chunked-prefill extend: blocks ``[start, stop)`` over the
+        ``h`` rows entering at position ``pos0``, bitwise the monolithic
+        ``segment_prefill`` formula (``T.segment_extend``)."""
+        return self._extend_seg()(
+            self.params if params is None else params, h, caches, pos0,
+            start, stop)
+
+    def verify_segment(self, h, caches, pos0, start, stop, params=None):
+        """Speculative verify: the ``s`` drafted rows of ``h`` through
+        blocks ``[start, stop)`` + per-row unembed in ONE program ->
+        ``(logits (B, S, V), caches)`` — bitwise ``s`` sequential
+        ``decode_segment`` + ``hidden_logits`` calls."""
+        return self._verify_seg()(
+            self.params if params is None else params, h, caches, pos0,
             start, stop)
 
     def hidden_logits(self, h, params=None):

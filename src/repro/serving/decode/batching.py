@@ -43,6 +43,12 @@ class DecodeStream:
     o2_tok: float             # server MACs per decode step
     srv_bytes_tok: float      # server tail bytes per decode step
     step_lag: float           # device step + wire seconds per round trip
+    # speculative decode (DESIGN.md §14) — defaults keep the plain
+    # one-token-per-round stream bit-for-bit
+    draft_k: int = 0          # drafts verified per round (0 = plain)
+    alpha: float = 0.0        # expected draft acceptance rate
+    rounds_done: int = 0      # rounds this stream completed (the
+                              # deterministic acceptance accumulator's j)
 
 
 @dataclasses.dataclass

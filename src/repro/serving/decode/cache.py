@@ -218,17 +218,26 @@ class PagedKVCache:
             self._write_slot(layer, slot, k, v)
         self.length = max(self.length, int(pos) + 1)
 
-    def ingest_prefill(self, caches, seq_len: int) -> None:
-        """Copy every live ring slot after a ``seq_len``-token prefill
-        (positions ``max(0, seq_len - buf) .. seq_len - 1``)."""
-        lo = max(0, int(seq_len) - self.buf)
+    def ingest_range(self, caches, lo: int, hi: int) -> None:
+        """Copy positions ``[lo, hi)`` of the dense ring into pages —
+        chunked prefill calls this once per admitted chunk, so the
+        paged footprint grows page-by-page as the prompt streams in
+        instead of materializing at the end of a monolithic prefill."""
+        lo, hi = int(lo), int(hi)
+        if hi <= lo:
+            return
         for layer, (p_pos, per) in self.attn_layers.items():
             k = np.asarray(caches[p_pos]["k"][per])     # (B, buf, kvp, hd)
             v = np.asarray(caches[p_pos]["v"][per])
-            for p in range(lo, int(seq_len)):
+            for p in range(lo, hi):
                 slot = p % self.buf
                 self._write_slot(layer, slot, k[:, slot], v[:, slot])
-        self.length = max(self.length, int(seq_len))
+        self.length = max(self.length, hi)
+
+    def ingest_prefill(self, caches, seq_len: int) -> None:
+        """Copy every live ring slot after a ``seq_len``-token prefill
+        (positions ``max(0, seq_len - buf) .. seq_len - 1``)."""
+        self.ingest_range(caches, max(0, int(seq_len) - self.buf), seq_len)
 
     # -- views -----------------------------------------------------------
     def to_dense(self, template_caches):

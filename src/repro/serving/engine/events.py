@@ -30,6 +30,15 @@ resolve deterministically:
                    the round is priced once for the whole batch. Stale
                    events (the batcher state changed since queueing) are
                    detected by re-deriving the round time at fire time.
+                   With speculation on, one round verifies k drafts and
+                   emits 1..k+1 tokens per stream (DESIGN.md §14).
+  PREFILL_CHUNK  — one page-aligned chunk of an admitted stream's prompt
+                   lands on the server's decode lane (DESIGN.md §14):
+                   the chunk's server work shares the batcher's
+                   ``busy_until`` timeline with decode rounds, so long
+                   prompts interleave with live streams instead of
+                   head-of-line-blocking them. The final chunk starts
+                   the stream (TTFT).
 
 Admission computes the whole per-request stage timeline analytically
 (``StageTimeline``): plan → uplink (model shipment) → device segment →
@@ -53,10 +62,12 @@ CACHE_INSTALL = 3
 EPOCH = 4
 COMPLETE = 5
 DECODE_STEP = 6
+PREFILL_CHUNK = 7
 
 KIND_NAMES = {FAULT: "fault", ARRIVAL: "arrival", RETRY: "retry",
               CACHE_INSTALL: "cache_install", EPOCH: "epoch",
-              COMPLETE: "complete", DECODE_STEP: "decode_step"}
+              COMPLETE: "complete", DECODE_STEP: "decode_step",
+              PREFILL_CHUNK: "prefill_chunk"}
 
 
 @dataclasses.dataclass(frozen=True)

@@ -78,9 +78,13 @@ import numpy as np
 from repro.core.cost_model import Channel, CostProvider, ServerProfile
 from repro.serving.decode.batching import DecodeBatcher, DecodeStream
 from repro.serving.decode.cache import PageLedger, paged_kv_ctx
+from repro.serving.decode.pipeline import DecodeSession
+
+_chunk_bounds = DecodeSession.chunk_bounds
 from repro.serving.deployment import Deployment, ReferenceContext
 from repro.serving.engine.events import (ARRIVAL, CACHE_INSTALL, COMPLETE,
-                                         DECODE_STEP, EPOCH, FAULT, RETRY,
+                                         DECODE_STEP, EPOCH, FAULT,
+                                         PREFILL_CHUNK, RETRY,
                                          ArrivalStream, EventQueue,
                                          StageTimeline)
 from repro.serving.engine.faults import (DEGRADE, DISCONNECT, RECONNECT,
@@ -171,7 +175,10 @@ class FleetEngine:
                  faults: Optional[FaultInjector] = None,
                  journal: str = "full", records: str = "full",
                  admission: str = "vectorized",
-                 reprice_cache: bool = True):
+                 reprice_cache: bool = True,
+                 draft_tokens: int = 0,
+                 accept_rate: Optional[float] = None,
+                 prefill_chunk_tokens: Optional[int] = None):
         if slo not in SLO_MODES:
             raise ValueError(f"slo must be one of {SLO_MODES}, got {slo!r}")
         if journal not in JOURNAL_MODES:
@@ -221,6 +228,34 @@ class FleetEngine:
         self.dead_letters: List[DeadLetter] = []
         self.kv_ledger = PageLedger()
         self._kv_streams: dict = {}
+        # serving-shape knobs (DESIGN.md §14), default-off: the zero-knob
+        # engine is bit-for-bit the PR 9 engine (journal header included —
+        # the keys below only exist when a knob is enabled)
+        self.draft_tokens = int(draft_tokens)
+        if self.draft_tokens < 0:
+            raise ValueError("draft_tokens must be >= 0")
+        if accept_rate is None and self.draft_tokens:
+            # measured rate from a calibrated provider's ledger when one
+            # exists (CalibratedCost.mean_accept_rate), else the neutral
+            # prior — resolved ONCE so the journal header pins the value
+            # replay reuses
+            measured = getattr(self.provider, "mean_accept_rate", None)
+            accept_rate = float(measured) if measured is not None else 0.5
+        self.accept_rate = None if accept_rate is None \
+            else float(accept_rate)
+        if self.accept_rate is not None \
+                and not 0.0 <= self.accept_rate <= 1.0:
+            raise ValueError("accept_rate must be within [0, 1]")
+        self.prefill_chunk_tokens = None if prefill_chunk_tokens is None \
+            else int(prefill_chunk_tokens)
+        if self.prefill_chunk_tokens is not None \
+                and self.prefill_chunk_tokens < 2:
+            raise ValueError("prefill_chunk_tokens must be >= 2")
+        self._chunk_state: dict = {}
+        # server -> {index: (requeue_time, chunk_s)} of deferred chunks:
+        # _push_decode holds the lane for the earliest one so saturated
+        # decode lanes (step_lag == 0) cannot starve a queued prompt
+        self._chunk_wait: dict = {}
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[InferenceRequest],
@@ -284,12 +319,21 @@ class FleetEngine:
             [s for s in range(len(self.servers))
              if self.servers[s].profile is not ref], dtype=np.intp)
         self._homogeneous = self._nonref_idx.size == 0
+        self._chunk_state = {}
+        self._chunk_wait = {}
         header = {
             "policy": self.policy.name, "slo": self.slo,
             "epoch_interval": self.epoch_interval,
             "servers": len(self.servers),
             "retry": dataclasses.asdict(self.retry),
             "requests": st.n, "faults": len(self.faults)}
+        # keys exist ONLY when a serving-shape knob is on, so a zero-knob
+        # run's header (and hence journal) is byte-identical to PR 9's
+        if self.draft_tokens:
+            header["draft_tokens"] = self.draft_tokens
+            header["accept_rate"] = self.accept_rate
+        if self.prefill_chunk_tokens is not None:
+            header["prefill_chunk_tokens"] = self.prefill_chunk_tokens
         if self.journal_mode == "full":
             self._journal = EventJournal(header=header)
         elif self.journal_mode == "light":
@@ -330,6 +374,8 @@ class FleetEngine:
                                          p=key[2], applied=applied)
             elif kind == DECODE_STEP:
                 self._on_decode(t, payload)
+            elif kind == PREFILL_CHUNK:
+                self._on_prefill_chunk(t, payload)
             elif kind == RETRY:
                 self._on_retry(t, payload)
             elif kind == FAULT:
@@ -442,9 +488,18 @@ class FleetEngine:
     def _push_decode(self, s: int) -> None:
         """Queue a DECODE_STEP at server ``s``'s next round time. Called
         after EVERY batcher mutation; previously queued events whose time
-        no longer matches are detected as stale at fire time."""
+        no longer matches are detected as stale at fire time. A waiting
+        prefill chunk HOLDS the lane (DESIGN.md §14): the next round is
+        pushed past that chunk's slot, so back-to-back rounds (step_lag
+        = 0 full-offload streams) cannot starve a queued prompt — the
+        two event kinds alternate fairly on the shared timeline."""
         t_next = self._batchers[s].next_time()
         if t_next is not None:
+            wait = self._chunk_wait.get(s)
+            if wait:
+                tc, dt_c = min(wait.values())
+                if tc <= t_next:
+                    t_next = max(t_next, tc + dt_c)
             self._queue.push(t_next, DECODE_STEP, s)
 
     def _start_stream(self, finish: float, i: int, req: InferenceRequest,
@@ -459,20 +514,39 @@ class FleetEngine:
         dev_b, srv_b = rows.bytes_at(c)
         dt_dev = self.provider.device_seconds(req.device, float(rows.o1[c]),
                                               dev_b)
+        # speculation needs a device segment to draft through AND a round
+        # trip to amortize — full offload (p == 0) streams plainly
+        draft_k = min(self.draft_tokens, n_tok - 2) if plan.p else 0
         if plan.p:
             backend = self.qs.models[req.model].backend
-            wire_tok = (plan.bits_x * backend.cfg.d_model * req.batch
-                        + 32.0 * req.batch)
-            step_lag = float(dt_dev + wire_tok / req.channel.capacity())
+            if draft_k > 0:
+                # one speculative round: k+1 device decode steps, then
+                # (k+1) quantized cut hiddens + k draft ids uplink and
+                # up to k+1 verified ids downlink — ONE channel latency
+                # amortized over E[1 + alpha*k] emitted tokens
+                hid = plan.bits_x * backend.cfg.d_model * req.batch
+                wire_rnd = ((draft_k + 1) * hid
+                            + 32.0 * draft_k * req.batch
+                            + 32.0 * (draft_k + 1) * req.batch)
+                step_lag = float((draft_k + 1) * dt_dev
+                                 + wire_rnd / req.channel.capacity())
+            else:
+                wire_tok = (plan.bits_x * backend.cfg.d_model * req.batch
+                            + 32.0 * req.batch)
+                step_lag = float(dt_dev + wire_tok / req.channel.capacity())
         else:
             # full offload: the server feeds its own sample back — no
             # device hop on the decode path
             step_lag = 0.0
-        self._batchers[s].add(DecodeStream(
+        stream = DecodeStream(
             index=i, token=token, device_id=req.device_id,
             remaining=n_tok - 1, ready_at=finish + step_lag,
             o2_tok=float(rows.o2[c]), srv_bytes_tok=srv_b,
-            step_lag=step_lag))
+            step_lag=step_lag)
+        if draft_k > 0:
+            stream.draft_k = draft_k
+            stream.alpha = self.accept_rate
+        self._batchers[s].add(stream)
         backend = self.qs.models[req.model].backend
         if plan.p and getattr(backend, "kv_page_tokens", None) is not None \
                 and backend.decode_max_len is not None:
@@ -524,18 +598,40 @@ class FleetEngine:
             return
         st, srv = self._st, self.servers[s]
         due = batcher.due(t)
-        dt = float(self.provider.server_seconds(
-            srv.profile, sum(stm.o2_tok for stm in due),
-            max(stm.srv_bytes_tok for stm in due)))
+        if self.draft_tokens:
+            # a speculative stream's round verifies k+1 rows in one tail
+            # forward — its MAC term scales; the weight-stream byte term
+            # is still read once for the whole round
+            dt = float(self.provider.server_seconds(
+                srv.profile,
+                sum(stm.o2_tok * (stm.draft_k + 1) for stm in due),
+                max(stm.srv_bytes_tok for stm in due)))
+        else:
+            dt = float(self.provider.server_seconds(
+                srv.profile, sum(stm.o2_tok for stm in due),
+                max(stm.srv_bytes_tok for stm in due)))
         t_end = t + dt
         srv.work_until = max(srv.work_until, t) + dt
         srv.busy += dt
         self._order_cache = None
         batcher.busy_until = t_end
-        active, finished = [], []
+        active, finished, emitted = [], [], []
         for stm in due:
-            stm.remaining -= 1
-            st.tokens_emitted[stm.index] += 1
+            if stm.draft_k > 0:
+                # deterministic stand-in for the measured acceptance: the
+                # fractional accumulator floor((j+1)·α·k) − floor(j·α·k)
+                # emits exactly E[1 + α·k] tokens per round on average
+                # with no RNG, so journals replay bit-for-bit
+                j = stm.rounds_done
+                ak = stm.alpha * stm.draft_k
+                acc = int(math.floor((j + 1) * ak) - math.floor(j * ak))
+                m = min(1 + acc, stm.remaining)
+                stm.rounds_done = j + 1
+            else:
+                m = 1
+            emitted.append(m)
+            stm.remaining -= m
+            st.tokens_emitted[stm.index] += m
             if stm.remaining <= 0:
                 batcher.remove(stm.index)
                 self._kv_close(stm.index)
@@ -547,9 +643,99 @@ class FleetEngine:
                 self._kv_grow(stm.index)
                 active.append(stm.index)
         if self._journal is not None:
-            self._journal.record(t, DECODE_STEP, server=s, stale=False,
-                                 round_s=dt, batch=len(due), active=active,
-                                 finished=finished)
+            if self.draft_tokens:
+                self._journal.record(t, DECODE_STEP, server=s, stale=False,
+                                     round_s=dt, batch=len(due),
+                                     active=active, finished=finished,
+                                     emitted=emitted)
+            else:
+                self._journal.record(t, DECODE_STEP, server=s, stale=False,
+                                     round_s=dt, batch=len(due),
+                                     active=active, finished=finished)
+        self._push_decode(s)
+
+    # -- chunked prefill lane (DESIGN.md §14) ---------------------------
+    def _on_prefill_chunk(self, t: float, payload) -> None:
+        """One prompt chunk lands on the server's decode lane: it runs
+        for ``t_server / n`` seconds on the batcher's shared
+        ``busy_until`` timeline (decode rounds in progress defer it;
+        it defers decode rounds symmetrically), and the LAST chunk ends
+        the prefill — TTFT, stream start, COMPLETE scheduling."""
+        i, token, j = payload
+        cs = self._chunk_state.get(i)
+        if token not in self._live or cs is None or cs["token"] != token:
+            # a fault cancelled this attempt; chunk events of the dead
+            # attempt are journaled non-events, like stale COMPLETEs
+            if self._journal is not None:
+                self._journal.record(t, PREFILL_CHUNK, index=i, chunk=j,
+                                     stale=True)
+            return
+        s = cs["s"]
+        batcher = self._batchers[s]
+        if t < batcher.busy_until:
+            # a decode round holds the lane — re-queue at its end (the
+            # round that extended busy_until fired after this chunk was
+            # queued, the same lazy-staleness dance DECODE_STEP does)
+            self._queue.push(batcher.busy_until, PREFILL_CHUNK, payload)
+            self._chunk_wait.setdefault(s, {})[i] = (batcher.busy_until,
+                                                     cs["dt_c"])
+            if self._journal is not None:
+                self._journal.record(t, PREFILL_CHUNK, index=i, chunk=j,
+                                     deferred=True)
+            return
+        srv = self.servers[s]
+        self._chunk_wait.get(s, {}).pop(i, None)
+        dt_c = cs["dt_c"]
+        t_end = t + dt_c
+        srv.work_until = max(srv.work_until, t) + dt_c
+        srv.busy += dt_c
+        self._order_cache = None
+        batcher.busy_until = t_end
+        if cs["started"] is None:
+            cs["started"] = t
+        last = j == cs["n"] - 1
+        if self._journal is not None:
+            self._journal.record(t, PREFILL_CHUNK, index=i, chunk=j,
+                                 stale=False, chunk_s=dt_c, last=last)
+        if not last:
+            self._queue.push(max(cs["arrivals"][j + 1], t_end),
+                             PREFILL_CHUNK, (i, token, j + 1))
+            self._push_decode(s)
+            return
+        # final chunk — the prefill is done; the executed lane times
+        # replace the provisional timeline committed at admission
+        del self._chunk_state[i]
+        st = self._st
+        st.tl[i, 4] = cs["started"]
+        st.tl[i, 5] = t_end
+        fl = self._inflight.get(i)
+        if fl is not None:
+            fl.timeline.server_start = cs["started"]
+            fl.timeline.finish = t_end
+        n_tok = cs["n_tok"]
+        req = cs["req"]
+        if n_tok > 1 and req.device_id is not None \
+                and req.device_id in self._down:
+            # the device died while its chunks were already at the
+            # server: the prefill completes as committed work, but the
+            # decode stream can never be fed — sever exactly like
+            # _cancel_device's mid-stream branch and retry
+            self._live.discard(token)
+            del self._inflight[i]
+            self._in_flight -= 1
+            self._sample(t_end)
+            st.reset_attempt(i)
+            st.faults[i] += 1
+            self._retry_or_dead_letter(i, t_end)
+            self._push_decode(s)
+            return
+        if n_tok > 1:
+            self._start_stream(t_end, i, req, cs["plan"], cs["a_star"],
+                               s, token, n_tok)
+        else:
+            if n_tok == 1:
+                st.decode_done[i] = t_end
+            self._queue.push(t_end, COMPLETE, (i, token))
         self._push_decode(s)
 
     # -- faults --------------------------------------------------------
@@ -610,6 +796,9 @@ class FleetEngine:
                 self._push_decode(fl.server)
             del self._inflight[i]
             self._live.discard(fl.token)
+            cs = self._chunk_state.pop(i, None)  # queued chunks go stale
+            if cs is not None:
+                self._chunk_wait.get(cs["s"], {}).pop(i, None)
             if t < fl.timeline.transfer_done:
                 self._release(fl)
             else:
@@ -1095,7 +1284,23 @@ class FleetEngine:
         device_done = ship_done + t_local
         transfer_done = device_done + x_share / r_cap
         token = (pnd.index, attempt)
-        if o2 > 0:
+        # chunked prefill (DESIGN.md §14): the server prefill lands as
+        # n PREFILL_CHUNK rounds on the decode lane's busy timeline
+        # instead of one monolithic reservation, so live decode rounds
+        # and later admissions interleave between chunks
+        n_chunks = 0
+        if self.prefill_chunk_tokens is not None and o2 > 0 \
+                and t_server > 0.0:
+            seq = int(getattr(backend, "seq_len", 0) or 0)
+            if seq > self.prefill_chunk_tokens:
+                n_chunks = len(_chunk_bounds(seq,
+                                             self.prefill_chunk_tokens))
+        if n_chunks >= 2:
+            # provisional timeline — the last chunk overwrites
+            # server_start/finish with the executed lane times
+            server_start = transfer_done
+            finish = transfer_done + t_server
+        elif o2 > 0:
             server_start = max(srv.free, transfer_done)
             finish = server_start + t_server
             srv.free = finish
@@ -1103,9 +1308,12 @@ class FleetEngine:
         else:
             server_start = transfer_done
             finish = server_start
-        srv.work_until = max(srv.work_until, t) + t_server
-        srv.busy += t_server
-        self._order_cache = None
+        if n_chunks >= 2:
+            pass      # chunk rounds accrue work_until/busy as they fire
+        else:
+            srv.work_until = max(srv.work_until, t) + t_server
+            srv.busy += t_server
+            self._order_cache = None
         tl = StageTimeline(t, ship_done, device_done, transfer_done,
                            server_start, finish)
 
@@ -1125,7 +1333,10 @@ class FleetEngine:
         st.payload_bits[i] = wire
         self._admit_rank += 1
         self._live.add(token)
-        self._inflight[i] = _Flight(token, req.device_id, s, t_server, tl)
+        # a chunked flight's server work accrues chunk by chunk at fire
+        # time, so severance has nothing to refund (t_server = 0)
+        self._inflight[i] = _Flight(token, req.device_id, s,
+                                    0.0 if n_chunks >= 2 else t_server, tl)
 
         if (req.device_id is not None and plan.p and ship > 0):
             self._queue.push(ship_done, CACHE_INSTALL,
@@ -1145,7 +1356,24 @@ class FleetEngine:
                     f"{req.model!r} has no autoregressive decode path")
             st.decode_tokens[i] = n_tok
             st.tokens_emitted[i] = 1
-        if n_tok > 1:
+        if n_chunks >= 2:
+            # stream start / COMPLETE move to the LAST chunk's end — the
+            # device computes + uplinks chunks back-to-back, so chunk j
+            # can land no earlier than its share of the device+transfer
+            # pipeline (the last arrival IS the analytic transfer_done)
+            if n_tok > 1:
+                st.decode_done[i] = np.nan
+            per = (t_local + x_share / r_cap) / n_chunks
+            self._chunk_state[i] = {
+                "token": token, "req": req, "plan": plan,
+                "a_star": a_star, "s": s, "n_tok": n_tok,
+                "n": n_chunks, "dt_c": t_server / n_chunks,
+                "arrivals": [ship_done + (j + 1) * per
+                             for j in range(n_chunks)],
+                "started": None}
+            self._queue.push(self._chunk_state[i]["arrivals"][0],
+                             PREFILL_CHUNK, (i, token, 0))
+        elif n_tok > 1:
             st.decode_done[i] = np.nan
             self._start_stream(finish, i, req, plan, a_star, s, token,
                                n_tok)

@@ -117,7 +117,14 @@ class EventJournal:
                           epoch_interval=h.get("epoch_interval", 0.0),
                           provider=provider,
                           retry=retry,
-                          faults=FaultInjector(self.fault_trace()))
+                          faults=FaultInjector(self.fault_trace()),
+                          # serving-shape knobs (DESIGN.md §14): absent
+                          # from zero-knob headers, so their defaults —
+                          # and the header the replayed engine builds —
+                          # stay bit-identical to PR 9's
+                          draft_tokens=h.get("draft_tokens", 0),
+                          accept_rate=h.get("accept_rate"),
+                          prefill_chunk_tokens=h.get("prefill_chunk_tokens"))
         return eng.run(requests)
 
     def verify_replay(self, qs, requests, servers=None, provider=None):

@@ -113,6 +113,30 @@ def decode_rows_for(backend, store, a_star: float, batch: int,
                           ab_cum)
 
 
+def prefill_chunk_rows_for(backend, store, a_star: float, batch: int,
+                           chunk_tokens: int,
+                           need_bytes: bool) -> CandidateRows:
+    """Per-CHUNK candidate term vectors of a chunked prefill (DESIGN.md
+    §14): the same assembly as ``candidate_rows_for`` but over layer
+    specs at the CHUNK length, so ``o1``/``o2`` are MACs per admitted
+    chunk — what one PREFILL_CHUNK round of the fleet's decode lane
+    costs. A prompt of n chunks prices as n of these rows instead of
+    one monolithic prompt-length row; the dense terms agree exactly
+    (linear in sequence length) while the attention term is chunk-local
+    — a lower bound that misses cross-chunk attention, which is why the
+    fleet's chunk lane splits the calibrated monolithic ``t_server``
+    evenly across chunks (sums exactly) and uses these rows only for
+    relative per-cut comparisons. ``wire`` stays the shipment row, as
+    in ``decode_rows_for``."""
+    if int(chunk_tokens) < 2:
+        raise ValueError("chunk_tokens must be >= 2 (pipeline contract)")
+    specs = backend.layer_specs(batch=batch, seq_len=int(chunk_tokens))
+    o1 = np.concatenate([[0.0], np.cumsum([sp.o for sp in specs])])
+    ab_cum = act_bytes_row(specs) if need_bytes else None
+    return _assemble_rows(specs, store, a_star, False, need_bytes, o1,
+                          ab_cum)
+
+
 def price_window(models, server: ServerProfile,
                  requests: Sequence[InferenceRequest],
                  context: Optional["ReferenceContext"] = None,
